@@ -1,0 +1,3 @@
+"""repro: distributed DES framework (Dobre/Cristea/Legrand 2011) + multi-pod
+JAX training/serving stack. See DESIGN.md for the map."""
+__version__ = "0.1.0"

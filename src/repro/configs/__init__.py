@@ -1,0 +1,1 @@
+"""Architecture configs + shapes (--arch/--shape registry)."""

@@ -1,0 +1,21 @@
+"""repro.core — the paper's distributed discrete-event simulation framework.
+
+Public surface:
+  ScenarioBuilder / World / ScenarioSpec   — model construction (components, C5)
+  Engine / EngineState                      — conservative-window engine (C1, C2)
+  scheduler                                 — monitoring-driven placement (C3)
+  oracle                                    — sequential reference DES
+"""
+from repro.core import events, monitoring, network, scheduler, sync
+from repro.core.components import (LPK_FARM, LPK_GEN, LPK_NET, LPK_STORAGE,
+                                   ScenarioBuilder, ScenarioSpec, World,
+                                   WorldOwnership, sync_world)
+from repro.core.engine import AXIS, Engine, EngineState, lexsort_time_seq
+from repro.core.oracle import merged_engine_trace, run_sequential
+
+__all__ = [
+    "AXIS", "Engine", "EngineState", "LPK_FARM", "LPK_GEN", "LPK_NET",
+    "LPK_STORAGE", "ScenarioBuilder", "ScenarioSpec", "World", "WorldOwnership",
+    "events", "lexsort_time_seq", "merged_engine_trace", "monitoring", "network",
+    "oracle", "run_sequential", "scheduler", "sync", "sync_world",
+]

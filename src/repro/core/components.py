@@ -1,0 +1,356 @@
+"""Simulation components (paper §4.2) as replicated, vectorized state tables.
+
+The paper models Grid systems from basic components — CPU units, network links,
+database servers + mass-storage centers, regional centers — implemented as Java
+objects whose state is replicated across agents through JavaSpaces (C4). Here every
+component class is a structure-of-arrays table inside ``World``; replication is
+literal (every agent holds the full table) and synchronization is owner-wins /
+commutative-delta all-reduce at conservative-window boundaries (see ``sync_world``).
+
+Logical processes (C1) own component rows: ``lp_res`` maps an LP to its resource row
+(farm / network region / storage / generator). The paper's five LP lifecycle states
+(§4.3: created, ready, running, waiting, finished) are kept as a data column — under
+SPMD they are window-granular annotations, not thread states (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+
+# LP kinds.
+LPK_IDLE = 0      # placeholder / finished LP slot
+LPK_FARM = 1      # compute farm: CPU units + job queue
+LPK_NET = 2       # network region: links + flows (interrupt-based traffic model)
+LPK_STORAGE = 3   # database server (disk) + mass storage (tape)
+LPK_GEN = 4       # activity generator ("production / analysis" job sources)
+
+# LP lifecycle states (paper §4.3).
+LPS_CREATED = 0
+LPS_READY = 1
+LPS_RUNNING = 2
+LPS_WAITING = 3
+LPS_FINISHED = 4
+
+MAXHOP = 3  # max links on a flow route
+
+
+class World(NamedTuple):
+    """All mutable simulation state. Replicated on every agent; synced per window."""
+
+    # --- logical processes (C1) ---
+    lp_kind: jax.Array    # i32 (NLP,)
+    lp_agent: jax.Array   # i32 (NLP,)  placement map — the scheduler (C3) rewrites it
+    lp_res: jax.Array     # i32 (NLP,)  resource row owned by this LP
+    lp_state: jax.Array   # i32 (NLP,)  lifecycle state
+    lp_lvt: jax.Array     # i32 (NLP,)  per-LP local virtual time
+    lp_ctx: jax.Array     # i32 (NLP,)  simulation context (C6)
+
+    # --- compute farms (CPU units + FIFO job queue) ---
+    cpu_power: jax.Array  # f32 (NFARM, MAXCPU)  ops/tick; 0 => slot absent
+    cpu_busy: jax.Array   # i32 (NFARM, MAXCPU)  1 while a job runs
+    cpu_mem: jax.Array    # f32 (NFARM, MAXCPU)  memory used by the running job
+    jobq: jax.Array       # f32 (NFARM, QCAP, 6) queued [work, mem, nlp, nkind, size, _]
+    jobq_n: jax.Array     # i32 (NFARM,) queue occupancy
+
+    # --- network regions (interrupt-based traffic model, C5) ---
+    link_bw: jax.Array    # f32 (NNET, MAXLINK)  MB/tick; 0 => absent
+    link_lat: jax.Array   # i32 (NNET, MAXLINK)  ticks
+    flow_active: jax.Array  # bool (NNET, MAXFLOW)
+    flow_rem: jax.Array     # f32 (NNET, MAXFLOW)  MB remaining
+    flow_rate: jax.Array    # f32 (NNET, MAXFLOW)  MB/tick (current fair share)
+    flow_tlast: jax.Array   # i32 (NNET, MAXFLOW)  last progress timestamp
+    flow_links: jax.Array   # i32 (NNET, MAXFLOW, MAXHOP)  route; -1 pads
+    flow_notify: jax.Array  # f32 (NNET, MAXFLOW, 6) [nlp, nkind, work, size, n2lp, n2kind]
+    net_gen: jax.Array      # i32 (NNET,) interrupt generation counter
+
+    # --- storage (db server disk + mass-storage tape) ---
+    sto_cap: jax.Array    # f32 (NSTO, 2)  [disk, tape] capacity MB
+    sto_used: jax.Array   # f32 (NSTO, 2)  [disk, tape] used MB
+    sto_rate: jax.Array   # f32 (NSTO,)    tape migration MB/tick
+    sto_flag: jax.Array   # i32 (NSTO,)    1 while a disk->tape migration is scheduled
+
+    # --- activity generators ---
+    gen_interval: jax.Array  # i32 (NGEN,) ticks between emissions
+    gen_left: jax.Array      # i32 (NGEN,) remaining emissions
+    gen_target: jax.Array    # i32 (NGEN,) destination LP for generated events
+    gen_kind: jax.Array      # i32 (NGEN,) kind of generated event
+    gen_payload: jax.Array   # f32 (NGEN, ev.PAYLOAD) template payload
+
+    @property
+    def n_lp(self) -> int:
+        return self.lp_kind.shape[-1]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """Static (trace-time constant) facts about a built scenario."""
+
+    n_agents: int
+    n_ctx: int
+    lookahead: int          # ticks; min event-generation delay (conservative window)
+    t_end: int              # ticks; horizon after which the run stops
+    pool_cap: int           # per-agent event-pool capacity
+    emit_cap: int           # per-window emit-buffer capacity
+    route_cap: int          # per-(src,dst)-agent routing-buffer capacity
+    n_lp: int
+    work_per_mb: float = 1.0  # CPU ops per transferred MB (job sizing)
+
+
+def _owner_mask_rows(res_lp: jax.Array, lp_agent: jax.Array, me) -> jax.Array:
+    """(N,) bool: rows whose owning LP is placed on this agent."""
+    return lp_agent[res_lp] == me
+
+
+class WorldOwnership(NamedTuple):
+    """res -> LP inverse maps, built once per scenario (static shapes)."""
+
+    farm_lp: jax.Array  # i32 (NFARM,)
+    net_lp: jax.Array   # i32 (NNET,)
+    sto_lp: jax.Array   # i32 (NSTO,)
+    gen_lp: jax.Array   # i32 (NGEN,)
+
+
+def sync_world(world: World, own: WorldOwnership, axis: str | None) -> World:
+    """Owner-wins replication sync (C4: the JavaSpaces adaptation).
+
+    Every row of every component table has exactly one owning agent (the agent of the
+    LP that owns the resource). After a conservative window, only the owner holds the
+    fresh row; an all-reduce of ``where(mine, row, 0)`` rebuilds the full table on all
+    agents. Exact: one nonzero contribution + zeros per row. When ``axis`` is None the
+    engine is single-agent and sync is the identity.
+    """
+    if axis is None:
+        return world
+    me = jax.lax.axis_index(axis)
+    lp_mine = world.lp_agent == me
+    farm_mine = _owner_mask_rows(own.farm_lp, world.lp_agent, me)
+    net_mine = _owner_mask_rows(own.net_lp, world.lp_agent, me)
+    sto_mine = _owner_mask_rows(own.sto_lp, world.lp_agent, me)
+    gen_mine = _owner_mask_rows(own.gen_lp, world.lp_agent, me)
+
+    def owner_wins(x, mask):
+        m = mask.reshape(mask.shape + (1,) * (x.ndim - 1))
+        if x.dtype == jnp.bool_:
+            y = jax.lax.psum(jnp.where(m, x.astype(jnp.int32), 0), axis)
+            return y > 0
+        return jax.lax.psum(jnp.where(m, x, jnp.zeros((), x.dtype)), axis)
+
+    return World(
+        lp_kind=world.lp_kind,          # immutable after build
+        lp_agent=world.lp_agent,        # rewritten only by the scheduler (replicated input)
+        lp_res=world.lp_res,            # immutable after build
+        lp_state=owner_wins(world.lp_state, lp_mine),
+        lp_lvt=owner_wins(world.lp_lvt, lp_mine),
+        lp_ctx=world.lp_ctx,            # immutable after build
+        cpu_power=world.cpu_power,      # immutable after build
+        cpu_busy=owner_wins(world.cpu_busy, farm_mine),
+        cpu_mem=owner_wins(world.cpu_mem, farm_mine),
+        jobq=owner_wins(world.jobq, farm_mine),
+        jobq_n=owner_wins(world.jobq_n, farm_mine),
+        sto_flag=owner_wins(world.sto_flag, sto_mine),
+        link_bw=world.link_bw,          # immutable after build
+        link_lat=world.link_lat,        # immutable after build
+        flow_active=owner_wins(world.flow_active, net_mine),
+        flow_rem=owner_wins(world.flow_rem, net_mine),
+        flow_rate=owner_wins(world.flow_rate, net_mine),
+        flow_tlast=owner_wins(world.flow_tlast, net_mine),
+        flow_links=owner_wins(world.flow_links + 1, net_mine) - 1,  # -1 pad survives
+        flow_notify=owner_wins(world.flow_notify, net_mine),
+        net_gen=owner_wins(world.net_gen, net_mine),
+        sto_cap=world.sto_cap,          # immutable after build
+        sto_used=owner_wins(world.sto_used, sto_mine),
+        sto_rate=world.sto_rate,        # immutable after build
+        gen_interval=world.gen_interval,
+        gen_left=owner_wins(world.gen_left, gen_mine),
+        gen_target=world.gen_target,
+        gen_kind=world.gen_kind,
+        gen_payload=world.gen_payload,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Scenario builder (host-side; produces a World + initial events + spec)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ScenarioBuilder:
+    """Imperative builder mirroring the paper's "regional center" modeling style.
+
+    Regional centers (fig 1) are groupings of a farm + storage + a link to the WAN;
+    the builder exposes them as convenience wrappers over the basic components.
+    """
+
+    max_cpu: int = 16
+    queue_cap: int = 32
+    max_link: int = 8
+    max_flow: int = 64
+
+    def __post_init__(self):
+        self._lps: list[dict] = []       # kind, res, ctx
+        self._farms: list[dict] = []
+        self._nets: list[dict] = []
+        self._stos: list[dict] = []
+        self._gens: list[dict] = []
+        self._events: list[dict] = []
+        self._seq = 0
+
+    # --- basic components -------------------------------------------------
+    def _new_lp(self, kind: int, res: int, ctx: int) -> int:
+        self._lps.append(dict(kind=kind, res=res, ctx=ctx))
+        return len(self._lps) - 1
+
+    def add_farm(self, cpu_powers, ctx: int = 0) -> int:
+        assert len(cpu_powers) <= self.max_cpu
+        self._farms.append(dict(powers=list(cpu_powers)))
+        return self._new_lp(LPK_FARM, len(self._farms) - 1, ctx)
+
+    def add_net_region(self, link_bws, link_lats, ctx: int = 0) -> int:
+        assert len(link_bws) <= self.max_link
+        self._nets.append(dict(bws=list(link_bws), lats=list(link_lats)))
+        return self._new_lp(LPK_NET, len(self._nets) - 1, ctx)
+
+    def add_storage(self, disk_cap: float, tape_cap: float, tape_rate: float,
+                    ctx: int = 0) -> int:
+        self._stos.append(dict(disk=disk_cap, tape=tape_cap, rate=tape_rate))
+        return self._new_lp(LPK_STORAGE, len(self._stos) - 1, ctx)
+
+    def add_generator(self, target_lp: int, kind: int, payload, interval: int,
+                      count: int, start: int = 0, ctx: int = 0) -> int:
+        self._gens.append(dict(target=target_lp, kind=kind, payload=list(payload),
+                               interval=interval, count=count))
+        lp = self._new_lp(LPK_GEN, len(self._gens) - 1, ctx)
+        self.add_event(time=start, kind=ev.K_GEN_TICK, src=lp, dst=lp, ctx=ctx)
+        return lp
+
+    def add_event(self, *, time: int, kind: int, src: int, dst: int, payload=(),
+                  ctx: int = 0):
+        self._events.append(dict(time=time, seq=self._seq, kind=kind, src=src,
+                                 dst=dst, payload=payload, ctx=ctx))
+        self._seq += 1
+
+    # --- regional-center convenience (fig 1) -------------------------------
+    def add_regional_center(self, n_cpu: int, cpu_power: float, disk: float,
+                            tape: float, tape_rate: float, ctx: int = 0):
+        farm = self.add_farm([cpu_power] * n_cpu, ctx=ctx)
+        sto = self.add_storage(disk, tape, tape_rate, ctx=ctx)
+        return dict(farm=farm, storage=sto)
+
+    # --- build -------------------------------------------------------------
+    def build(self, *, n_agents: int = 1, n_ctx: int = 1, lookahead: int,
+              t_end: int, pool_cap: int = 1024, emit_cap: int | None = None,
+              route_cap: int | None = None, placement=None,
+              work_per_mb: float = 1.0):
+        nlp = max(len(self._lps), 1)
+        nfarm = max(len(self._farms), 1)
+        nnet = max(len(self._nets), 1)
+        nsto = max(len(self._stos), 1)
+        ngen = max(len(self._gens), 1)
+
+        def arr(shape, dtype, fill=0):
+            return jnp.full(shape, fill, dtype)
+
+        lp_kind = jnp.asarray([l["kind"] for l in self._lps] or [0], jnp.int32)
+        lp_res = jnp.asarray([l["res"] for l in self._lps] or [0], jnp.int32)
+        lp_ctx = jnp.asarray([l["ctx"] for l in self._lps] or [0], jnp.int32)
+        if placement is None:
+            lp_agent = jnp.arange(nlp, dtype=jnp.int32) % n_agents
+        else:
+            lp_agent = jnp.asarray(placement, jnp.int32)
+
+        cpu_power = arr((nfarm, self.max_cpu), jnp.float32)
+        for i, f in enumerate(self._farms):
+            cpu_power = cpu_power.at[i, : len(f["powers"])].set(
+                jnp.asarray(f["powers"], jnp.float32))
+
+        link_bw = arr((nnet, self.max_link), jnp.float32)
+        link_lat = arr((nnet, self.max_link), jnp.int32)
+        for i, nre in enumerate(self._nets):
+            link_bw = link_bw.at[i, : len(nre["bws"])].set(
+                jnp.asarray(nre["bws"], jnp.float32))
+            link_lat = link_lat.at[i, : len(nre["lats"])].set(
+                jnp.asarray(nre["lats"], jnp.int32))
+
+        sto_cap = arr((nsto, 2), jnp.float32)
+        sto_rate = arr((nsto,), jnp.float32)
+        for i, s in enumerate(self._stos):
+            sto_cap = sto_cap.at[i].set(jnp.asarray([s["disk"], s["tape"]], jnp.float32))
+            sto_rate = sto_rate.at[i].set(s["rate"])
+
+        gen_interval = arr((ngen,), jnp.int32, 1)
+        gen_left = arr((ngen,), jnp.int32)
+        gen_target = arr((ngen,), jnp.int32)
+        gen_kind = arr((ngen,), jnp.int32)
+        gen_payload = arr((ngen, ev.PAYLOAD), jnp.float32)
+        for i, g in enumerate(self._gens):
+            gen_interval = gen_interval.at[i].set(g["interval"])
+            gen_left = gen_left.at[i].set(g["count"])
+            gen_target = gen_target.at[i].set(g["target"])
+            gen_kind = gen_kind.at[i].set(g["kind"])
+            pl = jnp.asarray(g["payload"], jnp.float32)
+            gen_payload = gen_payload.at[i, : pl.shape[0]].set(pl)
+
+        world = World(
+            lp_kind=lp_kind,
+            lp_agent=lp_agent,
+            lp_res=lp_res,
+            lp_state=jnp.full((nlp,), LPS_READY, jnp.int32),
+            lp_lvt=jnp.zeros((nlp,), jnp.int32),
+            lp_ctx=lp_ctx,
+            cpu_power=cpu_power,
+            cpu_busy=arr((nfarm, self.max_cpu), jnp.int32),
+            cpu_mem=arr((nfarm, self.max_cpu), jnp.float32),
+            jobq=arr((nfarm, self.queue_cap, 6), jnp.float32),
+            jobq_n=arr((nfarm,), jnp.int32),
+            link_bw=link_bw,
+            link_lat=link_lat,
+            flow_active=jnp.zeros((nnet, self.max_flow), bool),
+            flow_rem=arr((nnet, self.max_flow), jnp.float32),
+            flow_rate=arr((nnet, self.max_flow), jnp.float32),
+            flow_tlast=arr((nnet, self.max_flow), jnp.int32),
+            flow_links=arr((nnet, self.max_flow, MAXHOP), jnp.int32, -1),
+            flow_notify=arr((nnet, self.max_flow, 6), jnp.float32),
+            net_gen=arr((nnet,), jnp.int32),
+            sto_cap=sto_cap,
+            sto_used=arr((nsto, 2), jnp.float32),
+            sto_rate=sto_rate,
+            sto_flag=arr((nsto,), jnp.int32),
+            gen_interval=gen_interval,
+            gen_left=gen_left,
+            gen_target=gen_target,
+            gen_kind=gen_kind,
+            gen_payload=gen_payload,
+        )
+
+        def inverse_map(kind, n):
+            out = [0] * n
+            for lp, l in enumerate(self._lps):
+                if l["kind"] == kind:
+                    out[l["res"]] = lp
+            return jnp.asarray(out, jnp.int32)
+
+        own = WorldOwnership(
+            farm_lp=inverse_map(LPK_FARM, nfarm),
+            net_lp=inverse_map(LPK_NET, nnet),
+            sto_lp=inverse_map(LPK_STORAGE, nsto),
+            gen_lp=inverse_map(LPK_GEN, ngen),
+        )
+
+        spec = ScenarioSpec(
+            n_agents=n_agents,
+            n_ctx=n_ctx,
+            lookahead=lookahead,
+            t_end=t_end,
+            pool_cap=pool_cap,
+            emit_cap=emit_cap or pool_cap,
+            route_cap=route_cap or max(pool_cap // max(n_agents, 1), 16),
+            n_lp=nlp,
+            work_per_mb=work_per_mb,
+        )
+        init_events = ev.batch_from_rows(self._events)
+        return world, own, init_events, spec

@@ -1,0 +1,329 @@
+"""The simulation engine (paper fig 4): conservative-window superstep + run loop.
+
+Per window (one "simulation step" in the paper's event-scheduler terms):
+
+  1. GVT: per-context local min pending timestamp -> collective min (sync.py, C2).
+  2. Safe mask: events strictly below the per-context horizon may execute.
+  3. Order: stable (time, seq) sort — on TPU the ``event_select`` Pallas kernel, on
+     CPU the XLA lexsort reference (both produce identical permutations).
+  4. Execute: sequential fold (lax.scan) over sorted slots; each safe event is
+     dispatched through the handler table (handlers.py); emitted events accumulate
+     in a fixed emit buffer; per-LP LVT/lifecycle columns update.
+  5. Route: emits are bucketed by destination agent (``lp_agent``) and exchanged with
+     one ``all_to_all`` (the Jini remote-event adaptation); overflow is counted.
+  6. Insert: received events enter pool free slots.
+  7. Sync world: owner-wins all-reduce of replicated component state (C4).
+
+The same per-agent program runs under ``jax.vmap(axis_name='agents')`` (LocalComm:
+tests, benchmarks, single host) and under ``shard_map`` over a device mesh
+(CollectiveComm: production) — collectives are axis-name-polymorphic, so the two
+drivers are semantically identical by construction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import events as ev
+from repro.core import monitoring as mon
+from repro.core import sync
+from repro.core.components import ScenarioSpec, World, WorldOwnership, sync_world
+from repro.core.handlers import Ev, apply_handler, make_handlers
+
+AXIS = "agents"
+
+
+def lexsort_time_seq(time_key: jax.Array, seq: jax.Array) -> jax.Array:
+    """Stable (time, seq) sort permutation — the XLA reference for event_select."""
+    perm = jnp.argsort(seq, stable=True)
+    perm2 = jnp.argsort(time_key[perm], stable=True)
+    return perm[perm2]
+
+
+class EngineState(NamedTuple):
+    world: World
+    pool: ev.EventPool
+    counters: jax.Array   # i32 (N_COUNTERS,)
+    t_now: jax.Array      # i32 scalar — agent LVT (== last horizon)
+    done: jax.Array       # bool scalar (globally uniform)
+    windows: jax.Array    # i32 scalar
+    trace: jax.Array      # i32 (trace_cap, 4): processed (time, seq, kind, dst)
+    trace_n: jax.Array    # i32 scalar
+
+
+class Engine:
+    """Binds a built scenario to the superstep program."""
+
+    def __init__(self, world: World, own: WorldOwnership,
+                 init_events: ev.EventBatch, spec: ScenarioSpec,
+                 trace_cap: int = 0,
+                 sort_fn: Callable[[jax.Array, jax.Array], jax.Array] | None = None):
+        self.world = world
+        self.own = own
+        self.init_events = init_events
+        self.spec = spec
+        self.trace_cap = trace_cap
+        self.sort_fn = sort_fn or lexsort_time_seq
+        self.table = make_handlers(spec.lookahead, spec.work_per_mb)
+
+    # ------------------------------------------------------------------ init
+    def init_state(self) -> EngineState:
+        """Stacked (A, ...) initial state; initial events homed to owner agents."""
+        A = self.spec.n_agents
+        cap = self.spec.pool_cap
+        pools = []
+        lp_agent = self.world.lp_agent
+        for a in range(A):
+            mine = self.init_events.valid & (lp_agent[self.init_events.dst] == a)
+            batch = self.init_events._replace(valid=mine)
+            pool, dropped = ev.insert(ev.empty_pool(cap), batch)
+            pools.append(pool)
+        pool = jax.tree.map(lambda *xs: jnp.stack(xs), *pools)
+        rep = lambda x: jnp.broadcast_to(x, (A,) + x.shape)
+        world = jax.tree.map(rep, self.world)
+        tc = max(self.trace_cap, 1)
+        return EngineState(
+            world=world,
+            pool=pool,
+            counters=jnp.zeros((A, mon.N_COUNTERS), jnp.int32),
+            t_now=jnp.zeros((A,), jnp.int32),
+            done=jnp.zeros((A,), bool),
+            windows=jnp.zeros((A,), jnp.int32),
+            trace=jnp.zeros((A, tc, 4), jnp.int32),
+            trace_n=jnp.zeros((A,), jnp.int32),
+        )
+
+    # ------------------------------------------------------------- superstep
+    def _superstep(self, st: EngineState, axis: str | None) -> EngineState:
+        spec = self.spec
+        world, pool, counters = st.world, st.pool, st.counters
+
+        # 1-2. GVT + safe mask (C2)
+        lmin = sync.local_min_per_ctx(pool, spec.n_ctx)
+        gvt = sync.global_min(lmin, axis)
+        horizon = sync.horizons(gvt, spec.lookahead, spec.t_end)
+        done = sync.all_done(gvt, spec.t_end)
+        safe = sync.safe_mask(pool, horizon)
+
+        # 3. order (time, seq); unsafe slots sort to the back
+        time_key = jnp.where(safe, pool.time, ev.T_INF)
+        order = self.sort_fn(time_key, pool.seq)
+
+        # 4. execute the window: sequential fold over sorted slots
+        ecap = spec.emit_cap
+        emit0 = ev.empty_batch(ecap)
+        trace0, trace_n0 = st.trace, st.trace_n
+
+        def body(carry, idx):
+            world, counters, emits, emit_n, trace, trace_n = carry
+            e = Ev(time=pool.time[idx], seq=pool.seq[idx], kind=pool.kind[idx],
+                   src=pool.src[idx], dst=pool.dst[idx], ctx=pool.ctx[idx],
+                   payload=pool.payload[idx])
+            is_safe = safe[idx]
+
+            def run(w, c):
+                w2, c2, out = apply_handler(self.table, w, c, e)
+                w2 = w2._replace(
+                    lp_lvt=w2.lp_lvt.at[e.dst].max(e.time),
+                    lp_state=w2.lp_state.at[e.dst].set(2),  # RUNNING
+                )
+                return w2, c2, out
+
+            def skip(w, c):
+                return w, c, ev.empty_batch(ev.MAX_EMIT)
+
+            world, counters, out = jax.lax.cond(is_safe, run, skip, world, counters)
+
+            # append emits to the window emit buffer (overflow counted)
+            val = out.valid
+            offs = jnp.cumsum(val.astype(jnp.int32)) - 1
+            pos = emit_n + offs
+            ok = val & (pos < ecap)
+            widx = jnp.where(ok, pos, ecap)  # ecap == OOB -> dropped
+            emits = ev.EventBatch(
+                time=emits.time.at[widx].set(out.time, mode="drop"),
+                seq=emits.seq.at[widx].set(out.seq, mode="drop"),
+                kind=emits.kind.at[widx].set(out.kind, mode="drop"),
+                src=emits.src.at[widx].set(out.src, mode="drop"),
+                dst=emits.dst.at[widx].set(out.dst, mode="drop"),
+                ctx=emits.ctx.at[widx].set(out.ctx, mode="drop"),
+                payload=emits.payload.at[widx].set(out.payload, mode="drop"),
+                valid=emits.valid.at[widx].set(ok, mode="drop"),
+            )
+            emit_n = emit_n + jnp.sum(val.astype(jnp.int32))
+            counters = mon.bump(counters, mon.C_DROP_POOL,
+                                jnp.sum((val & ~ok).astype(jnp.int32)))
+
+            # trace (fixed cap; for oracle-equivalence tests)
+            tcap = trace.shape[0]
+            trow = jnp.stack([e.time, e.seq, e.kind, e.dst])
+            tidx = jnp.where(is_safe & (trace_n < tcap), trace_n, tcap)
+            trace = trace.at[tidx].set(trow, mode="drop")
+            trace_n = trace_n + jnp.where(is_safe, 1, 0)
+            return (world, counters, emits, emit_n, trace, trace_n), None
+
+        carry0 = (world, counters, emit0, jnp.int32(0), trace0, trace_n0)
+        (world, counters, emits, _, trace, trace_n), _ = jax.lax.scan(
+            body, carry0, order)
+
+        n_processed = jnp.sum(safe.astype(jnp.int32))
+        counters = mon.bump(counters, mon.C_EVENTS, n_processed)
+        counters = mon.bump(counters, mon.C_WINDOWS, 1)
+        pool = ev.pop_mask(pool, safe)
+
+        # processed LPs drop back to WAITING at window end (thread states -> data)
+        world = world._replace(
+            lp_state=jnp.where(world.lp_state == 2, 3, world.lp_state))
+
+        # 5-6. route + insert
+        pool, counters = self._route_and_insert(world, pool, counters, emits, axis)
+
+        # 7. replicated-state sync (C4)
+        world = sync_world(world, self.own, axis)
+
+        return EngineState(world=world, pool=pool, counters=counters,
+                           t_now=jnp.max(horizon), done=done,
+                           windows=st.windows + 1, trace=trace, trace_n=trace_n)
+
+    # ---------------------------------------------------------------- routing
+    def _route_and_insert(self, world: World, pool: ev.EventPool, counters,
+                          emits: ev.EventBatch, axis: str | None):
+        spec = self.spec
+        A = spec.n_agents
+        if axis is None or A == 1:
+            pool, dropped = ev.insert(pool, emits)
+            counters = mon.bump(counters, mon.C_DROP_POOL, dropped)
+            counters = mon.bump(counters, mon.C_LP_LOCAL,
+                                jnp.sum(emits.valid.astype(jnp.int32)))
+            return pool, counters
+
+        me = jax.lax.axis_index(axis)
+        rcap = spec.route_cap
+        dst_agent = jnp.where(emits.valid, world.lp_agent[emits.dst], A)
+
+        # stable bucket ranks: sort by agent, rank within group
+        sperm = jnp.argsort(dst_agent, stable=True)
+        skey = dst_agent[sperm]
+        group_start = jnp.searchsorted(skey, skey, side="left")
+        rank_sorted = jnp.arange(skey.shape[0], dtype=jnp.int32) - group_start
+        rank = jnp.zeros_like(rank_sorted).at[sperm].set(rank_sorted)
+
+        ok = emits.valid & (rank < rcap)
+        counters = mon.bump(counters, mon.C_DROP_ROUTE,
+                            jnp.sum((emits.valid & ~ok).astype(jnp.int32)))
+        counters = mon.bump(
+            counters, mon.C_MSGS_REMOTE,
+            jnp.sum((ok & (dst_agent != me)).astype(jnp.int32)))
+        counters = mon.bump(
+            counters, mon.C_LP_LOCAL,
+            jnp.sum((ok & (dst_agent == me)).astype(jnp.int32)))
+
+        flat = jnp.where(ok, dst_agent * rcap + rank, A * rcap)  # OOB -> drop
+
+        def scatter(col, fill):
+            buf = jnp.full((A * rcap,) + col.shape[1:], fill, col.dtype)
+            return buf.at[flat].set(col, mode="drop").reshape(
+                (A, rcap) + col.shape[1:])
+
+        b_time = scatter(emits.time, ev.T_INF)
+        b_seq = scatter(emits.seq, 0)
+        b_kind = scatter(emits.kind, 0)
+        b_src = scatter(emits.src, 0)
+        b_dst = scatter(emits.dst, 0)
+        b_ctx = scatter(emits.ctx, 0)
+        b_payload = scatter(emits.payload, 0.0)
+        b_valid = scatter(emits.valid, False)
+
+        a2a = functools.partial(jax.lax.all_to_all, axis_name=axis,
+                                split_axis=0, concat_axis=0)
+        rx = ev.EventBatch(
+            time=a2a(b_time).reshape(A * rcap),
+            seq=a2a(b_seq).reshape(A * rcap),
+            kind=a2a(b_kind).reshape(A * rcap),
+            src=a2a(b_src).reshape(A * rcap),
+            dst=a2a(b_dst).reshape(A * rcap),
+            ctx=a2a(b_ctx).reshape(A * rcap),
+            payload=a2a(b_payload).reshape(A * rcap, ev.PAYLOAD),
+            valid=a2a(b_valid).reshape(A * rcap),
+        )
+        pool, dropped = ev.insert(pool, rx)
+        counters = mon.bump(counters, mon.C_DROP_POOL, dropped)
+        return pool, counters
+
+    # ------------------------------------------------------------------- run
+    def _run_fn(self, axis: str | None, max_windows: int):
+        def cond(st: EngineState):
+            return (~st.done) & (st.windows < max_windows)
+
+        def body(st: EngineState):
+            return self._superstep(st, axis)
+
+        def run(st: EngineState):
+            return jax.lax.while_loop(cond, body, st)
+
+        return run
+
+    def run_local(self, max_windows: int = 10_000, jit: bool = True) -> EngineState:
+        """Single-device multi-agent execution (vmap over the agents axis)."""
+        st = self.init_state()
+        fn = jax.vmap(self._run_fn(AXIS if self.spec.n_agents > 1 else None,
+                                   max_windows), axis_name=AXIS)
+        if jit:
+            fn = jax.jit(fn)
+        return fn(st)
+
+    def run_distributed(self, mesh: Mesh, max_windows: int = 10_000) -> EngineState:
+        """shard_map execution: one simulation agent per device along 'agents'."""
+        st = self.init_state()
+        per_agent = self._run_fn(AXIS, max_windows)
+
+        def shard_fn(s: EngineState):
+            # shard_map passes block-shaped (1, ...) operands; squeeze the axis.
+            s1 = jax.tree.map(lambda x: x[0], s)
+            out = per_agent(s1)
+            return jax.tree.map(lambda x: x[None], out)
+
+        fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=P(AXIS),
+                           out_specs=P(AXIS), check_vma=False)
+        return jax.jit(fn)(st)
+
+    # -------------------------------------------------------------- migration
+    def _apply_placement(self, st: EngineState, new_lp_agent: jax.Array,
+                         axis: str | None) -> EngineState:
+        """Move LPs to a new placement (paper §4.1 dynamic decomposition).
+
+        Component state is replicated (C4), so migration only (1) rewrites
+        ``lp_agent`` and (2) re-homes pending events whose destination LP moved —
+        one extra all_to_all, reusing the routing path.
+        """
+        world = st.world._replace(lp_agent=new_lp_agent)
+        pool, counters = st.pool, st.counters
+        if axis is None or self.spec.n_agents == 1:
+            return st._replace(world=world)
+        me = jax.lax.axis_index(axis)
+        moving = pool.valid & (world.lp_agent[pool.dst] != me)
+        emits = ev.EventBatch(time=pool.time, seq=pool.seq, kind=pool.kind,
+                              src=pool.src, dst=pool.dst, ctx=pool.ctx,
+                              payload=pool.payload, valid=moving)
+        pool = ev.pop_mask(pool, moving)
+        pool, counters = self._route_and_insert(world, pool, counters, emits, axis)
+        return st._replace(world=world, pool=pool, counters=counters)
+
+    def apply_placement_local(self, st: EngineState,
+                              new_lp_agent: jax.Array) -> EngineState:
+        """vmap driver for migration (new_lp_agent is fleet-global, (NLP,))."""
+        axis = AXIS if self.spec.n_agents > 1 else None
+        fn = jax.vmap(lambda s: self._apply_placement(
+            s, new_lp_agent, axis), axis_name=AXIS)
+        return jax.jit(fn)(st)
+
+    def step_local(self, st: EngineState) -> EngineState:
+        """One conservative window (vmap driver) — used by tests and benchmarks."""
+        fn = jax.vmap(
+            lambda s: self._superstep(s, AXIS if self.spec.n_agents > 1 else None),
+            axis_name=AXIS)
+        return jax.jit(fn)(st)

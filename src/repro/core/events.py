@@ -1,0 +1,193 @@
+"""Event pool: structure-of-arrays encoding of the paper's simulation events.
+
+The paper (§4.3): "A simulation event is always created by a logical process and is
+destined to the same or other logical process. A simulation event includes information
+regarding the identifiers of the source logical process and of the destination logical
+process."  We add a ``ctx`` column for simulation contexts (§4.3 / fig 9) and a
+functional ``seq`` tie-break id so the vectorized engine and the sequential oracle
+produce byte-identical execution orders.
+
+Timestamps are integer ticks (int32, 1 tick == 1 simulated microsecond by convention):
+exact causality comparisons, exact test oracles, TPU-friendly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Sentinel timestamp for empty slots: larger than any reachable simulation time.
+T_INF = jnp.int32(2**31 - 1)
+
+# Payload width: enough scalars for the richest handler (flow start: size, route...).
+PAYLOAD = 8
+
+# Max events a single handler invocation may emit (paper: a job may spawn a new LP
+# *and* schedule follow-up events; 4 covers every component model in this repo).
+MAX_EMIT = 4
+
+# Event kinds (handler dispatch table indices — must match engine.HANDLERS order).
+K_NOOP = 0
+K_FLOW_START = 1
+K_FLOW_END = 2
+K_JOB_SUBMIT = 3
+K_JOB_END = 4
+K_DATA_WRITE = 5
+K_MIGRATE = 6
+K_GEN_TICK = 7
+N_KINDS = 8
+
+SEQ_MASK = 2**31 - 1
+
+
+def child_seq(parent_seq, slot):
+    """Functional tie-break id: identical in the JAX engine and the Python oracle.
+
+    int32 multiply wraps two's-complement; masking the sign bit yields the same
+    non-negative residue wherever this runs (engine scan or oracle handler call).
+    """
+    parent_seq = jnp.asarray(parent_seq, jnp.int32)
+    return (parent_seq * MAX_EMIT + jnp.int32(slot + 1)) & jnp.int32(SEQ_MASK)
+
+
+class EventPool(NamedTuple):
+    """Per-agent pending-event store (capacity fixed at construction).
+
+    Fields are parallel arrays of shape (cap,) (payload: (cap, PAYLOAD)). ``valid``
+    marks live slots; dead slots carry time == T_INF so min-reductions are mask-free.
+    """
+
+    time: jax.Array     # i32 (cap,)  timestamp in ticks; T_INF when slot free
+    seq: jax.Array      # i32 (cap,)  deterministic tie-break id
+    kind: jax.Array     # i32 (cap,)
+    src: jax.Array      # i32 (cap,)  source LP (global id)
+    dst: jax.Array      # i32 (cap,)  destination LP (global id)
+    ctx: jax.Array      # i32 (cap,)  simulation context (run) id
+    payload: jax.Array  # f32 (cap, PAYLOAD)
+    valid: jax.Array    # bool (cap,)
+
+    @property
+    def cap(self) -> int:
+        return self.time.shape[-1]
+
+
+def empty_pool(cap: int) -> EventPool:
+    return EventPool(
+        time=jnp.full((cap,), T_INF, jnp.int32),
+        seq=jnp.zeros((cap,), jnp.int32),
+        kind=jnp.zeros((cap,), jnp.int32),
+        src=jnp.zeros((cap,), jnp.int32),
+        dst=jnp.zeros((cap,), jnp.int32),
+        ctx=jnp.zeros((cap,), jnp.int32),
+        payload=jnp.zeros((cap, PAYLOAD), jnp.float32),
+        valid=jnp.zeros((cap,), bool),
+    )
+
+
+class EventBatch(NamedTuple):
+    """A dense batch of candidate events (same fields as the pool, plus a mask)."""
+
+    time: jax.Array
+    seq: jax.Array
+    kind: jax.Array
+    src: jax.Array
+    dst: jax.Array
+    ctx: jax.Array
+    payload: jax.Array
+    valid: jax.Array
+
+    @property
+    def size(self) -> int:
+        return self.time.shape[-1]
+
+
+def empty_batch(n: int) -> EventBatch:
+    p = empty_pool(n)
+    return EventBatch(*p)
+
+
+def batch_from_rows(rows) -> EventBatch:
+    """Stack a Python list of event dicts into an EventBatch (host-side helper)."""
+    n = len(rows)
+    b = empty_batch(max(n, 1))
+    if n == 0:
+        return b
+    def col(name, dtype):
+        return jnp.asarray([r[name] for r in rows], dtype)
+    payload = jnp.zeros((n, PAYLOAD), jnp.float32)
+    for i, r in enumerate(rows):
+        pl = jnp.asarray(r.get("payload", ()), jnp.float32)
+        payload = payload.at[i, : pl.shape[0]].set(pl)
+    return EventBatch(
+        time=col("time", jnp.int32),
+        seq=col("seq", jnp.int32),
+        kind=col("kind", jnp.int32),
+        src=col("src", jnp.int32),
+        dst=col("dst", jnp.int32),
+        ctx=jnp.asarray([r.get("ctx", 0) for r in rows], jnp.int32),
+        payload=payload,
+        valid=jnp.ones((n,), bool),
+    )
+
+
+def insert(pool: EventPool, batch: EventBatch):
+    """Insert ``batch`` (masked rows skipped) into free slots of ``pool``.
+
+    Returns (pool', n_dropped). Free slots are assigned in ascending slot order to
+    keep the layout deterministic. Overflowing events are *counted*, never silently
+    lost (the monitoring counters surface them — paper §4.1's "load of the agents").
+    """
+    cap = pool.cap
+    free = ~pool.valid
+    free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1          # rank among free slots
+    n_free = jnp.sum(free.astype(jnp.int32))
+
+    want = batch.valid
+    want_rank = jnp.cumsum(want.astype(jnp.int32)) - 1          # rank among inserts
+    n_want = jnp.sum(want.astype(jnp.int32))
+    fits = want & (want_rank < n_free)
+    n_drop = n_want - jnp.sum(fits.astype(jnp.int32))
+
+    # slot index for insert-rank r == index of r-th free slot. Build mapping
+    # rank -> slot via scatter: slots[free_rank[i]] = i for free i.
+    rank_to_slot = jnp.zeros((cap,), jnp.int32).at[
+        jnp.where(free, free_rank, cap - 1)
+    ].set(jnp.where(free, jnp.arange(cap, dtype=jnp.int32), 0), mode="drop")
+    # destination slot for each batch row (garbage for non-fitting rows, masked out).
+    dst_slot = rank_to_slot[jnp.clip(want_rank, 0, cap - 1)]
+    idx = jnp.where(fits, dst_slot, cap)                        # cap == out of bounds -> drop
+
+    pool = EventPool(
+        time=pool.time.at[idx].set(batch.time, mode="drop"),
+        seq=pool.seq.at[idx].set(batch.seq, mode="drop"),
+        kind=pool.kind.at[idx].set(batch.kind, mode="drop"),
+        src=pool.src.at[idx].set(batch.src, mode="drop"),
+        dst=pool.dst.at[idx].set(batch.dst, mode="drop"),
+        ctx=pool.ctx.at[idx].set(batch.ctx, mode="drop"),
+        payload=pool.payload.at[idx].set(batch.payload, mode="drop"),
+        valid=pool.valid.at[idx].set(True, mode="drop"),
+    )
+    return pool, n_drop
+
+
+def pop_mask(pool: EventPool, mask: jax.Array) -> EventPool:
+    """Invalidate ``mask``-ed slots (processed events leave the pool)."""
+    gone = pool.valid & mask
+    return pool._replace(
+        time=jnp.where(gone, T_INF, pool.time),
+        valid=pool.valid & ~mask,
+    )
+
+
+def min_pending_time(pool: EventPool) -> jax.Array:
+    """Local minimum pending timestamp (T_INF when the pool is empty)."""
+    return jnp.min(pool.time)  # dead slots carry T_INF already
+
+
+def min_pending_time_per_ctx(pool: EventPool, n_ctx: int) -> jax.Array:
+    """(n_ctx,) minimum pending timestamp per simulation context."""
+    t = jnp.where(pool.valid, pool.time, T_INF)
+    seg = jnp.where(pool.valid, pool.ctx, 0)
+    init = jnp.full((n_ctx,), T_INF, jnp.int32)
+    return init.at[seg].min(t, mode="drop")

@@ -1,0 +1,346 @@
+"""Event handlers: the behavior of each simulation component (paper §4.2).
+
+``make_handlers(lookahead, work_per_mb)`` builds the ``lax.switch`` dispatch table.
+Every handler is a pure function ``(world, counters, event) -> (world, counters,
+EventBatch[MAX_EMIT])`` operating on scalar event fields and component tables.
+
+Lookahead contract (the conservative-sync invariant, see DESIGN.md §5): every emitted
+event carries a delay of at least ``lookahead`` ticks. Handlers therefore clamp all
+delays with ``_delay``. The sequential oracle implements byte-identical semantics, so
+trace equality is exact.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core import monitoring as mon
+from repro.core import network as net
+from repro.core.components import MAXHOP, World
+
+
+class Ev(NamedTuple):
+    """Scalar view of one event."""
+
+    time: jax.Array
+    seq: jax.Array
+    kind: jax.Array
+    src: jax.Array
+    dst: jax.Array
+    ctx: jax.Array
+    payload: jax.Array  # (PAYLOAD,)
+
+
+def _no_emits() -> ev.EventBatch:
+    return ev.empty_batch(ev.MAX_EMIT)
+
+
+def _set_emit(batch: ev.EventBatch, slot: int, *, valid, time, kind, src, dst, ctx,
+              payload, parent_seq) -> ev.EventBatch:
+    """Write one emit slot. seq is the functional child id (oracle-identical)."""
+    return ev.EventBatch(
+        time=batch.time.at[slot].set(jnp.asarray(time, jnp.int32)),
+        seq=batch.seq.at[slot].set(ev.child_seq(parent_seq, slot)),
+        kind=batch.kind.at[slot].set(jnp.asarray(kind, jnp.int32)),
+        src=batch.src.at[slot].set(jnp.asarray(src, jnp.int32)),
+        dst=batch.dst.at[slot].set(jnp.asarray(dst, jnp.int32)),
+        ctx=batch.ctx.at[slot].set(jnp.asarray(ctx, jnp.int32)),
+        payload=batch.payload.at[slot].set(payload),
+        valid=batch.valid.at[slot].set(valid),
+    )
+
+
+def _pad_payload(vals) -> jax.Array:
+    out = jnp.zeros((ev.PAYLOAD,), jnp.float32)
+    for i, v in enumerate(vals):
+        out = out.at[i].set(jnp.asarray(v, jnp.float32))
+    return out
+
+
+def make_handlers(lookahead: int, work_per_mb: float = 1.0):
+    """Build the handler dispatch table (list indexed by event kind)."""
+
+    LA = jnp.int32(lookahead)
+
+    def _delay(d) -> jax.Array:
+        return jnp.maximum(jnp.asarray(d, jnp.int32), LA)
+
+    # -- 0: NOOP ------------------------------------------------------------
+    def h_noop(world: World, counters, e: Ev):
+        return world, counters, _no_emits()
+
+    # -- 7: GEN_TICK — activity generator ------------------------------------
+    def h_gen_tick(world: World, counters, e: Ev):
+        g = world.lp_res[e.dst]
+        left = world.gen_left[g]
+        fire = left > 0
+        world = world._replace(gen_left=world.gen_left.at[g].add(
+            jnp.where(fire, -1, 0)))
+        out = _no_emits()
+        # slot 0: the generated activity event
+        out = _set_emit(out, 0, valid=fire,
+                        time=e.time + _delay(1),
+                        kind=world.gen_kind[g], src=e.dst,
+                        dst=world.gen_target[g], ctx=e.ctx,
+                        payload=world.gen_payload[g], parent_seq=e.seq)
+        # slot 1: next tick to self
+        out = _set_emit(out, 1, valid=fire & (left > 1),
+                        time=e.time + _delay(world.gen_interval[g]),
+                        kind=ev.K_GEN_TICK, src=e.dst, dst=e.dst, ctx=e.ctx,
+                        payload=jnp.zeros((ev.PAYLOAD,), jnp.float32),
+                        parent_seq=e.seq)
+        return world, counters, out
+
+    # -- 3: JOB_SUBMIT — compute farm ----------------------------------------
+    # payload: [work, mem, notify_lp, notify_kind, size, _, _, _]
+    def h_job_submit(world: World, counters, e: Ev):
+        f = world.lp_res[e.dst]
+        work, mem = e.payload[0], e.payload[1]
+        counters = mon.bump(counters, mon.C_JOBS_SUBMITTED)
+
+        free = (world.cpu_busy[f] == 0) & (world.cpu_power[f] > 0)
+        has_free = jnp.any(free)
+        slot = jnp.argmax(free).astype(jnp.int32)
+
+        # start immediately on a free CPU
+        power = world.cpu_power[f, slot]
+        dur = jnp.ceil(work / jnp.maximum(power, 1e-6)).astype(jnp.int32)
+        finish = e.time + _delay(dur)
+        world = world._replace(
+            cpu_busy=world.cpu_busy.at[f, slot].add(jnp.where(has_free, 1, 0)),
+            cpu_mem=world.cpu_mem.at[f, slot].add(jnp.where(has_free, mem, 0.0)),
+        )
+
+        # or queue (FIFO) when all CPUs are busy
+        qn = world.jobq_n[f]
+        qcap = world.jobq.shape[1]
+        can_q = (~has_free) & (qn < qcap)
+        qrow = jnp.stack([e.payload[0], e.payload[1], e.payload[2], e.payload[3],
+                          e.payload[4], 0.0])
+        world = world._replace(
+            jobq=world.jobq.at[f, jnp.where(can_q, qn, 0)].set(
+                jnp.where(can_q, qrow, world.jobq[f, jnp.where(can_q, qn, 0)])),
+            jobq_n=world.jobq_n.at[f].add(jnp.where(can_q, 1, 0)),
+        )
+        counters = mon.bump(counters, mon.C_DROP_QUEUE,
+                            jnp.where((~has_free) & (qn >= qcap), 1, 0))
+
+        out = _no_emits()
+        out = _set_emit(out, 0, valid=has_free, time=finish, kind=ev.K_JOB_END,
+                        src=e.dst, dst=e.dst, ctx=e.ctx,
+                        payload=_pad_payload([slot, work, mem, e.payload[2],
+                                              e.payload[3], e.payload[4]]),
+                        parent_seq=e.seq)
+        return world, counters, out
+
+    # -- 4: JOB_END — compute farm -------------------------------------------
+    # payload: [slot, work, mem, notify_lp, notify_kind, size, _, _]
+    def h_job_end(world: World, counters, e: Ev):
+        f = world.lp_res[e.dst]
+        slot = e.payload[0].astype(jnp.int32)
+        counters = mon.bump(counters, mon.C_JOBS_DONE)
+        world = world._replace(
+            cpu_busy=world.cpu_busy.at[f, slot].set(0),
+            cpu_mem=world.cpu_mem.at[f, slot].set(0.0),
+        )
+
+        # pop FIFO head into the freed CPU
+        qn = world.jobq_n[f]
+        has_q = qn > 0
+        head = world.jobq[f, 0]
+        qcap = world.jobq.shape[1]
+        shifted = jnp.concatenate([world.jobq[f, 1:], jnp.zeros((1, 6), jnp.float32)])
+        world = world._replace(
+            jobq=world.jobq.at[f].set(jnp.where(has_q, shifted, world.jobq[f])),
+            jobq_n=world.jobq_n.at[f].add(jnp.where(has_q, -1, 0)),
+            cpu_busy=world.cpu_busy.at[f, slot].set(jnp.where(has_q, 1, 0)),
+            cpu_mem=world.cpu_mem.at[f, slot].set(jnp.where(has_q, head[1], 0.0)),
+        )
+        power = world.cpu_power[f, slot]
+        dur = jnp.ceil(head[0] / jnp.maximum(power, 1e-6)).astype(jnp.int32)
+
+        out = _no_emits()
+        # slot 0: completion of the popped job
+        out = _set_emit(out, 0, valid=has_q, time=e.time + _delay(dur),
+                        kind=ev.K_JOB_END, src=e.dst, dst=e.dst, ctx=e.ctx,
+                        payload=_pad_payload([slot, head[0], head[1], head[2],
+                                              head[3], head[4]]),
+                        parent_seq=e.seq)
+        # slot 1: notification (e.g. DATA_WRITE to storage after an analysis job)
+        nlp = e.payload[3].astype(jnp.int32)
+        nkind = e.payload[4].astype(jnp.int32)
+        out = _set_emit(out, 1, valid=nlp >= 0, time=e.time + _delay(1),
+                        kind=nkind, src=e.dst, dst=jnp.maximum(nlp, 0), ctx=e.ctx,
+                        payload=_pad_payload([e.payload[5]]),
+                        parent_seq=e.seq)
+        return world, counters, out
+
+    # -- network helpers ------------------------------------------------------
+    def _reshare_and_schedule(world: World, counters, e: Ev, r):
+        """Recompute fair shares for region r and schedule the next completion."""
+        inc = net.incidence(world.flow_links[r], world.link_bw.shape[1])
+        rates = net.maxmin_rates(inc, world.link_bw[r], world.flow_active[r])
+        world = world._replace(flow_rate=world.flow_rate.at[r].set(rates))
+        counters = mon.bump(counters, mon.C_INTERRUPTS)
+        gen = world.net_gen[r] + 1
+        world = world._replace(net_gen=world.net_gen.at[r].set(gen))
+        t_fin = net.completion_times(world.flow_rem[r], rates,
+                                     world.flow_tlast[r], world.flow_active[r])
+        tmin = jnp.min(t_fin)
+        any_active = jnp.any(world.flow_active[r])
+        t_next = jnp.maximum(tmin, e.time + LA)
+        return world, counters, gen, any_active, t_next
+
+    # -- 1: FLOW_START — network region ---------------------------------------
+    # payload: [size, l0, l1, l2, notify_lp, notify_kind, notify2_lp, notify2_kind]
+    def h_flow_start(world: World, counters, e: Ev):
+        r = world.lp_res[e.dst]
+        size = e.payload[0]
+        counters = mon.bump(counters, mon.C_FLOWS_STARTED)
+
+        # progress flows to now (the paper's interrupt scheme: shares change now)
+        rem2, tlast2 = net.progress_flows(world.flow_rem[r], world.flow_rate[r],
+                                          world.flow_tlast[r],
+                                          world.flow_active[r], e.time)
+        world = world._replace(flow_rem=world.flow_rem.at[r].set(rem2),
+                               flow_tlast=world.flow_tlast.at[r].set(tlast2))
+
+        free = ~world.flow_active[r]
+        has_free = jnp.any(free)
+        s = jnp.argmax(free).astype(jnp.int32)
+        counters = mon.bump(counters, mon.C_DROP_FLOW, jnp.where(has_free, 0, 1))
+
+        route = e.payload[1:4].astype(jnp.int32)  # -1 padded
+        notify = jnp.stack([e.payload[4], e.payload[5], size * work_per_mb, size,
+                            e.payload[6], e.payload[7]])
+        world = world._replace(
+            flow_active=world.flow_active.at[r, s].set(
+                jnp.where(has_free, True, world.flow_active[r, s])),
+            flow_rem=world.flow_rem.at[r, s].set(
+                jnp.where(has_free, size, world.flow_rem[r, s])),
+            flow_tlast=world.flow_tlast.at[r, s].set(
+                jnp.where(has_free, e.time, world.flow_tlast[r, s])),
+            flow_links=world.flow_links.at[r, s].set(
+                jnp.where(has_free, route, world.flow_links[r, s])),
+            flow_notify=world.flow_notify.at[r, s].set(
+                jnp.where(has_free, notify, world.flow_notify[r, s])),
+        )
+
+        world, counters, gen, any_active, t_next = _reshare_and_schedule(
+            world, counters, e, r)
+        out = _no_emits()
+        out = _set_emit(out, 2, valid=any_active, time=t_next, kind=ev.K_FLOW_END,
+                        src=e.dst, dst=e.dst, ctx=e.ctx,
+                        payload=_pad_payload([gen]), parent_seq=e.seq)
+        return world, counters, out
+
+    # -- 2: FLOW_END — network region ------------------------------------------
+    # payload: [gen]
+    def h_flow_end(world: World, counters, e: Ev):
+        r = world.lp_res[e.dst]
+        gen_ok = e.payload[0].astype(jnp.int32) == world.net_gen[r]
+        counters = mon.bump(counters, mon.C_STALE, jnp.where(gen_ok, 0, 1))
+
+        def stale(world, counters):
+            return world, counters, _no_emits()
+
+        def live(world, counters):
+            rem2, tlast2 = net.progress_flows(world.flow_rem[r], world.flow_rate[r],
+                                              world.flow_tlast[r],
+                                              world.flow_active[r], e.time)
+            world = world._replace(flow_rem=world.flow_rem.at[r].set(rem2),
+                                   flow_tlast=world.flow_tlast.at[r].set(tlast2))
+            done = world.flow_active[r] & (world.flow_rem[r] <= 1e-3)
+            # complete up to 2 flows this event; a follow-up FLOW_END drains the rest
+            order = jnp.argsort(jnp.where(done, jnp.arange(done.shape[0]), 1 << 20))
+            d0, d1 = order[0], order[1]
+            c0 = done[d0]
+            c1 = done[d1]
+            world = world._replace(
+                flow_active=world.flow_active.at[r, d0].set(
+                    jnp.where(c0, False, world.flow_active[r, d0])))
+            world = world._replace(
+                flow_active=world.flow_active.at[r, d1].set(
+                    jnp.where(c1, False, world.flow_active[r, d1])))
+            n_done = c0.astype(jnp.int32) + c1.astype(jnp.int32)
+            counters2 = mon.bump(counters, mon.C_FLOWS_DONE, n_done)
+            mb = (jnp.where(c0, world.flow_notify[r, d0, 3], 0.0)
+                  + jnp.where(c1, world.flow_notify[r, d1, 3], 0.0))
+            counters2 = mon.bump(counters2, mon.C_MB_TRANSFERRED,
+                                 jnp.round(mb).astype(jnp.int32))
+
+            world, counters2, gen, any_active, t_next = _reshare_and_schedule(
+                world, counters2, e, r)
+
+            out = _no_emits()
+            for slot, (di, ci) in enumerate([(d0, c0), (d1, c1)]):
+                note = world.flow_notify[r, di]
+                nlp = note[0].astype(jnp.int32)
+                # notification payload: [work, mem(=size), notify2_lp, notify2_kind, size]
+                out = _set_emit(out, slot, valid=ci & (nlp >= 0),
+                                time=e.time + _delay(1),
+                                kind=note[1].astype(jnp.int32), src=e.dst,
+                                dst=jnp.maximum(nlp, 0), ctx=e.ctx,
+                                payload=_pad_payload([note[2], note[3], note[4],
+                                                      note[5], note[3]]),
+                                parent_seq=e.seq)
+            out = _set_emit(out, 2, valid=any_active, time=t_next,
+                            kind=ev.K_FLOW_END, src=e.dst, dst=e.dst, ctx=e.ctx,
+                            payload=_pad_payload([gen]), parent_seq=e.seq)
+            return world, counters2, out
+
+        return jax.lax.cond(gen_ok, live, stale, world, counters)
+
+    # -- 5: DATA_WRITE — storage ------------------------------------------------
+    # payload: [size]
+    def h_data_write(world: World, counters, e: Ev):
+        s = world.lp_res[e.dst]
+        size = e.payload[0]
+        counters = mon.bump(counters, mon.C_WRITES)
+        counters = mon.bump(counters, mon.C_MB_WRITTEN,
+                            jnp.round(size).astype(jnp.int32))
+        used = world.sto_used[s, 0] + size
+        world = world._replace(sto_used=world.sto_used.at[s, 0].set(used))
+
+        over = (used > 0.9 * world.sto_cap[s, 0]) & (world.sto_flag[s] == 0)
+        amount = jnp.maximum(used - 0.7 * world.sto_cap[s, 0], 0.0)
+        dur = jnp.ceil(amount / jnp.maximum(world.sto_rate[s], 1e-6)).astype(jnp.int32)
+        world = world._replace(
+            sto_flag=world.sto_flag.at[s].set(jnp.where(over, 1, world.sto_flag[s])))
+        out = _no_emits()
+        out = _set_emit(out, 0, valid=over, time=e.time + _delay(dur),
+                        kind=ev.K_MIGRATE, src=e.dst, dst=e.dst, ctx=e.ctx,
+                        payload=_pad_payload([amount]), parent_seq=e.seq)
+        return world, counters, out
+
+    # -- 6: MIGRATE — storage (db server -> mass storage, paper §4.2) -----------
+    def h_migrate(world: World, counters, e: Ev):
+        s = world.lp_res[e.dst]
+        amount = jnp.minimum(e.payload[0], world.sto_used[s, 0])
+        world = world._replace(
+            sto_used=world.sto_used.at[s, 0].add(-amount)
+                                 .at[s, 1].add(amount),
+            sto_flag=world.sto_flag.at[s].set(0),
+        )
+        counters = mon.bump(counters, mon.C_MIGRATIONS)
+        return world, counters, _no_emits()
+
+    table = [None] * ev.N_KINDS
+    table[ev.K_NOOP] = h_noop
+    table[ev.K_FLOW_START] = h_flow_start
+    table[ev.K_FLOW_END] = h_flow_end
+    table[ev.K_JOB_SUBMIT] = h_job_submit
+    table[ev.K_JOB_END] = h_job_end
+    table[ev.K_DATA_WRITE] = h_data_write
+    table[ev.K_MIGRATE] = h_migrate
+    table[ev.K_GEN_TICK] = h_gen_tick
+    return table
+
+
+def apply_handler(table, world: World, counters, e: Ev):
+    """Dispatch one event through the handler table (lax.switch over kind)."""
+    kind = jnp.clip(e.kind, 0, len(table) - 1)
+    return jax.lax.switch(kind, table, world, counters, e)

@@ -1,0 +1,71 @@
+"""In-graph monitoring — the LISA adaptation (paper §4.1).
+
+The paper couples the simulation with the LISA monitoring system so the scheduler can
+read "the load of the physical workstation ... the load of the network ... and also
+the load of the agents (number of logical processes already executing, what components
+are already duplicated locally)". Here the same signals are JAX arrays carried through
+the superstep: a per-agent counter vector plus derived *performance values*.
+
+Counters are per-agent and local (never auto-synced); ``gather_counters`` exposes the
+fleet view to the scheduler and to ``ft.straggler``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Counter indices.
+C_EVENTS = 0          # events processed
+C_MSGS_REMOTE = 1     # events routed to another agent
+C_STALE = 2           # stale (interrupted) flow-completion events — paper's Fig-2 driver
+C_INTERRUPTS = 3      # bandwidth-share recomputations
+C_JOBS_SUBMITTED = 4
+C_JOBS_DONE = 5
+C_FLOWS_STARTED = 6
+C_FLOWS_DONE = 7
+C_MB_TRANSFERRED = 8  # rounded to int MB
+C_DROP_POOL = 9       # event-pool overflow
+C_DROP_ROUTE = 10     # routing-buffer overflow
+C_DROP_FLOW = 11      # flow-table overflow
+C_DROP_QUEUE = 12     # job-queue overflow
+C_WINDOWS = 13        # conservative windows executed (sync rounds)
+C_MIGRATIONS = 14     # disk -> tape migrations
+C_WRITES = 15         # storage writes
+C_MB_WRITTEN = 16
+C_LP_LOCAL = 17       # events destined to locally-owned LPs (scheduler locality signal)
+N_COUNTERS = 18
+
+DROP_COUNTERS = (C_DROP_POOL, C_DROP_ROUTE, C_DROP_FLOW, C_DROP_QUEUE)
+
+
+def zero_counters() -> jax.Array:
+    return jnp.zeros((N_COUNTERS,), jnp.int32)
+
+
+def bump(counters: jax.Array, idx: int, amount=1) -> jax.Array:
+    return counters.at[idx].add(jnp.asarray(amount, jnp.int32))
+
+
+def gather_counters(counters: jax.Array, axis: str | None) -> jax.Array:
+    """(A, N_COUNTERS) fleet view (identity reshape when single-agent)."""
+    if axis is None:
+        return counters[None]
+    return jax.lax.all_gather(counters, axis)
+
+
+def performance_value(counters: jax.Array, n_owned_lps: jax.Array,
+                      pool_occupancy: jax.Array) -> jax.Array:
+    """Scalar performance value an agent publishes (paper §4.1). Higher == worse.
+
+    Folds the paper's three signal groups: workstation load (events processed per
+    window ~ CPU load; pool occupancy ~ memory), network load (remote message ratio),
+    and agent load (#LPs hosted).
+    """
+    c = counters.astype(jnp.float32)
+    windows = jnp.maximum(c[C_WINDOWS], 1.0)
+    events_per_window = c[C_EVENTS] / windows
+    remote_ratio = c[C_MSGS_REMOTE] / jnp.maximum(c[C_EVENTS], 1.0)
+    return (events_per_window
+            + 4.0 * remote_ratio
+            + 0.5 * n_owned_lps.astype(jnp.float32)
+            + 2.0 * pool_occupancy.astype(jnp.float32))

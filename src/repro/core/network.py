@@ -1,0 +1,86 @@
+"""Interrupt-based network traffic model (paper §4.2).
+
+The paper: "The proposed approach used to simulate the data traffic is again based on
+the 'interrupt' scheme" — when a flow starts or ends, the fair share of every flow
+crossing a shared link changes, and the predicted completion events of all affected
+flows must be re-issued. This is exactly the mechanism behind Fig 2's super-linear
+event growth at low bandwidth.
+
+Bandwidth sharing across competing connections uses progressive filling (max–min
+fairness), the standard model for "complex bandwidth sharing among competing network
+connections" (§4.2). ``maxmin_rates`` is the jnp reference; the Pallas kernel in
+``repro.kernels.bandwidth_share`` computes the same fixed point with VMEM tiling and
+is validated against this function.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core.components import MAXHOP
+
+_EPS = 1e-6
+_BIG = jnp.float32(3.0e38)
+
+
+def incidence(flow_links: jax.Array, n_links: int) -> jax.Array:
+    """(F, MAXHOP) routes -> (F, L) 0/1 incidence. -1 hops are padding."""
+    hops = flow_links[..., None] == jnp.arange(n_links, dtype=jnp.int32)  # (F,H,L)
+    return jnp.any(hops, axis=-2).astype(jnp.float32)
+
+
+def maxmin_rates(inc: jax.Array, bw: jax.Array, active: jax.Array) -> jax.Array:
+    """Progressive-filling max–min fair rates.
+
+    inc: (F, L) 0/1 flow-over-link incidence, bw: (L,) capacities (0 => absent link),
+    active: (F,) bool. Returns (F,) rates; inactive flows get 0. At most L rounds are
+    needed (each round freezes every flow crossing at least one bottleneck link).
+    """
+    F, L = inc.shape
+    inc = inc * active[:, None].astype(inc.dtype)
+
+    def round_(state, _):
+        rate, frozen = state
+        unfrozen = active & ~frozen
+        n_unf = inc.T @ unfrozen.astype(jnp.float32)            # (L,)
+        used = inc.T @ (rate * frozen.astype(jnp.float32))      # (L,)
+        resid = jnp.maximum(bw - used, 0.0)
+        fair = jnp.where(n_unf > 0, resid / jnp.maximum(n_unf, 1.0), _BIG)
+        # links with no capacity but unfrozen flows: fair share 0 (starved flows)
+        fair = jnp.where((bw <= 0) & (n_unf > 0), 0.0, fair)
+        level = jnp.min(fair)                                   # global bottleneck level
+        bottleneck = fair <= level + _EPS                       # (L,)
+        hits = (inc @ bottleneck.astype(jnp.float32)) > 0       # (F,)
+        newly = unfrozen & hits
+        rate = jnp.where(newly, level, rate)
+        frozen = frozen | newly
+        return (rate, frozen), None
+
+    rate0 = jnp.zeros((F,), jnp.float32)
+    frozen0 = ~active
+    (rate, _), _ = jax.lax.scan(round_, (rate0, frozen0), None, length=L)
+    return jnp.where(active, rate, 0.0)
+
+
+def progress_flows(rem, rate, tlast, active, now):
+    """Advance all active flows of a region to virtual time ``now``."""
+    dt = jnp.maximum(now - tlast, 0).astype(jnp.float32)
+    rem2 = jnp.where(active, jnp.maximum(rem - rate * dt, 0.0), rem)
+    tlast2 = jnp.where(active, now, tlast)
+    return rem2, tlast2
+
+
+def completion_times(rem, rate, tlast, active):
+    """(F,) predicted completion tick per flow (T_INF when idle or starved)."""
+    ticks = jnp.where(rate > _EPS, jnp.ceil(rem / jnp.maximum(rate, _EPS)), _BIG)
+    t_fin = tlast.astype(jnp.float32) + jnp.maximum(ticks, 1.0)
+    t_fin = jnp.where(active, t_fin, _BIG)
+    return jnp.minimum(t_fin, jnp.float32(ev.T_INF)).astype(jnp.int32)
+
+
+def route_latency(flow_links_row: jax.Array, link_lat: jax.Array) -> jax.Array:
+    """Total propagation latency of a route (sum over real hops)."""
+    valid = flow_links_row >= 0
+    lat = link_lat[jnp.clip(flow_links_row, 0, link_lat.shape[0] - 1)]
+    return jnp.sum(jnp.where(valid, lat, 0))

@@ -1,0 +1,54 @@
+"""Conservative synchronization (paper §4.3) — the CMB / null-message adaptation.
+
+The paper's agents keep per-peer LVT queues and exchange *null messages on demand*:
+an agent blocks until every peer's last-known LVT is >= the timestamp it wants to
+process ("the simulation agents for whom the known LVT values are higher or equal
+with the value of the timestamp are guaranteeing that will not produce events with
+lower timestamps in the future"). The fixed point of that protocol is exactly the
+global minimum of pending-event timestamps plus lookahead.
+
+On a TPU fleet point-to-point null messages have no fast path; the ICI-native
+equivalent is a single ``lax.pmin`` all-reduce per conservative window, which computes
+the same bound in O(log A) hops. The paper's own observation — "instead of
+synchronizing logical processes we are synchronizing the distributed simulation
+agents altogether" — is what makes the collective formulation legal. Per-context
+GVTs (C6) fall out of a segmented min before the collective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+
+
+def local_min_per_ctx(pool: ev.EventPool, n_ctx: int) -> jax.Array:
+    """(n_ctx,) minimum pending timestamp on this agent per simulation context."""
+    return ev.min_pending_time_per_ctx(pool, n_ctx)
+
+
+def global_min(x: jax.Array, axis: str | None) -> jax.Array:
+    """All-reduce min across agents — the collective null-message exchange."""
+    if axis is None:
+        return x
+    return jax.lax.pmin(x, axis)
+
+
+def horizons(gvt: jax.Array, lookahead: int, t_end: int) -> jax.Array:
+    """Per-context safe horizon: every event strictly below it may execute.
+
+    Correctness (DESIGN.md §5): all emit delays are >= lookahead, so any event still
+    to be created lands at >= GVT + lookahead. Clamped to t_end (simulation stop).
+    """
+    h = jnp.where(gvt < ev.T_INF - lookahead, gvt + jnp.int32(lookahead), ev.T_INF)
+    return jnp.minimum(h, jnp.int32(t_end))
+
+
+def all_done(gvt: jax.Array, t_end: int) -> jax.Array:
+    """True when every context has drained or passed the simulation horizon."""
+    return jnp.all((gvt >= jnp.int32(t_end)) | (gvt == ev.T_INF))
+
+
+def safe_mask(pool: ev.EventPool, horizon_per_ctx: jax.Array) -> jax.Array:
+    """Events allowed to execute in this conservative window."""
+    return pool.valid & (pool.time < horizon_per_ctx[pool.ctx])

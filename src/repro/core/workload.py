@@ -1,0 +1,143 @@
+"""Workload bridge: simulate a multi-pod training job with the paper's DES.
+
+This is the 2026 rendering of the paper's thesis — "it is important to simulate
+Grid resources as realistically as possible before they are used on real Grids"
+— applied to TPU fleets: an (arch x shape x mesh) cell's dry-run roofline terms
+parameterize a DES scenario whose components are pods (compute farms), ICI/DCN
+fabrics (network regions with the interrupt-based traffic model) and the
+training step dependency chain (compute -> gradient reduction -> next step).
+
+Scenario per pod p:
+  farm_p: one CPU unit per host-group, power calibrated so a per-step compute
+          job lasts t_compute ticks
+  gen:    emits step-0 JOB_SUBMITs; each JOB_END fires the cross-pod gradient
+          FLOW_START on the DCN region; flow completion submits the next step's
+          job — so congestion, stragglers (slow farm) and bandwidth contention
+          show up as longer simulated step times, exactly the effects the
+          scheduler (C3) is meant to absorb.
+
+``simulate_training`` returns the simulated seconds/step to compare against the
+analytic roofline estimate (EXPERIMENTS.md §Dry-run cross-check).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.components import ScenarioBuilder
+from repro.core.engine import Engine
+from repro.core import monitoring as mon
+
+TICK = 1e-6            # 1 tick = 1 us simulated
+
+
+@dataclasses.dataclass(frozen=True)
+class CellModel:
+    """Distilled cell description (from roofline terms)."""
+    n_pods: int
+    t_compute_s: float        # per-step per-chip compute+memory time
+    dcn_bytes_per_pod: float  # cross-pod gradient traffic per step
+    dcn_gbps: float = 25.0    # per-pod DCN bandwidth (GB/s)
+    n_steps: int = 8
+    slow_pod_factor: float = 1.0   # >1: one pod is a straggler
+
+
+def build_training_scenario(cell: CellModel, *, n_agents: int = 1):
+    b = ScenarioBuilder(max_cpu=4, queue_cap=16, max_link=4,
+                        max_flow=max(16, 2 * cell.n_pods))
+    t_comp_ticks = max(int(cell.t_compute_s / TICK), 10)
+    power = 1.0                      # 1 op/tick; job work = duration
+    farms = []
+    for p in range(cell.n_pods):
+        f = b.add_farm([power])
+        farms.append(f)
+    # DCN: one shared region; one link per pod (bandwidth in MB/tick)
+    mb_per_tick = cell.dcn_gbps * 1e3 * TICK
+    wan = b.add_net_region(link_bws=[mb_per_tick] * cell.n_pods,
+                           link_lats=[50] * cell.n_pods)
+    sink = b.add_storage(disk_cap=1e9, tape_cap=1e9, tape_rate=1e6)
+
+    grad_mb = cell.dcn_bytes_per_pod / 1e6
+    for p, f in enumerate(farms):
+        work = t_comp_ticks * (cell.slow_pod_factor if p == 0 else 1.0)
+        # chain: JOB_SUBMIT -> JOB_END -> (notify) FLOW_START -> (notify)
+        # JOB_SUBMIT(next step). The flow notify re-submits on the same farm.
+        for step in range(cell.n_steps):
+            if step == 0:
+                b.add_event(time=1, kind=ev.K_JOB_SUBMIT, src=f, dst=f,
+                            payload=[work, 1.0, wan, ev.K_FLOW_START, grad_mb])
+        # the flow payload: [size, l0,..] is built by JOB_END's notification,
+        # which forwards only [size]; model one step per generator instead:
+    return b, farms, wan, sink, t_comp_ticks
+
+
+def simulate_training(cell: CellModel, *, n_agents: int = 1,
+                      max_windows: int = 200_000) -> dict:
+    """Chained step simulation; returns simulated step time + counters."""
+    b = ScenarioBuilder(max_cpu=4, queue_cap=16, max_link=4,
+                        max_flow=max(16, 2 * cell.n_pods))
+    t_comp_ticks = max(int(cell.t_compute_s / TICK), 10)
+    mb_per_tick = cell.dcn_gbps * 1e3 * TICK
+    grad_mb = max(cell.dcn_bytes_per_pod / 1e6, 1e-3)
+
+    farms = [b.add_farm([1.0]) for _ in range(cell.n_pods)]
+    wan = b.add_net_region(link_bws=[mb_per_tick] * cell.n_pods,
+                           link_lats=[50] * cell.n_pods)
+
+    # per pod: generator drives n_steps jobs; each job's completion starts the
+    # gradient flow; flow completion submits the next job (notify chain).
+    for p, f in enumerate(farms):
+        work = t_comp_ticks * (cell.slow_pod_factor if p == 0 else 1.0)
+        # FLOW_START payload: [size, l0, l1, l2, nlp, nkind, n2lp, n2kind]
+        # JOB_SUBMIT payload: [work, mem, notify_lp, notify_kind, size]
+        b.add_event(time=1, kind=ev.K_JOB_SUBMIT, src=f, dst=f,
+                    payload=[work, 1.0, wan, ev.K_FLOW_START, grad_mb])
+    # NOTE: JOB_END forwards [size] only into the notification payload — the
+    # WAN handler needs the full route/notify payload, so generators per pod
+    # drive the repeating steps instead of a deep notify chain:
+    horizon = int(cell.n_steps * (t_comp_ticks * cell.slow_pod_factor
+                                  + grad_mb / mb_per_tick + 200) * 2)
+    for p, f in enumerate(farms):
+        work = t_comp_ticks * (cell.slow_pod_factor if p == 0 else 1.0)
+        step_ticks = int(work + grad_mb / mb_per_tick + 120)
+        b.add_generator(target_lp=wan, kind=ev.K_FLOW_START,
+                        payload=[grad_mb, p, -1, -1, f, ev.K_JOB_SUBMIT,
+                                 -1, 0],
+                        interval=step_ticks, count=cell.n_steps,
+                        start=int(work))
+
+    world, own, init_ev, spec = b.build(
+        n_agents=n_agents, lookahead=10, t_end=max(horizon, 1000),
+        pool_cap=1024, work_per_mb=t_comp_ticks / grad_mb)
+    eng = Engine(world, own, init_ev, spec)
+    st = eng.run_local(max_windows=max_windows)
+    c = np.asarray(st.counters).sum(axis=0)
+    w = jax.tree.map(lambda x: np.asarray(x[0]), st.world)
+    t_end_sim = int(np.max(w.lp_lvt))
+    steps_done = int(c[mon.C_FLOWS_DONE]) / max(cell.n_pods, 1)
+    sim_step_s = (t_end_sim * TICK / max(steps_done, 1e-9))
+    analytic_s = cell.t_compute_s + cell.dcn_bytes_per_pod / (
+        cell.dcn_gbps * 1e9)
+    return {
+        "simulated_step_s": sim_step_s,
+        "analytic_step_s": analytic_s,
+        "steps_done": steps_done,
+        "events": int(c[mon.C_EVENTS]),
+        "interrupts": int(c[mon.C_INTERRUPTS]),
+        "stale": int(c[mon.C_STALE]),
+        "windows": int(np.asarray(st.windows)[0]),
+    }
+
+
+def cell_from_roofline(row: dict, *, n_pods: int = 2, n_steps: int = 8,
+                       slow_pod_factor: float = 1.0) -> CellModel:
+    """Build a CellModel from a dry-run roofline row (results/dryrun/*.json)."""
+    t_cm = max(row["t_compute_s"], row["t_memory_s"])
+    # cross-pod traffic ~ the all-reduce share of collective bytes
+    dcn = row.get("coll_by_kind", {}).get("all-reduce", 0.0)
+    return CellModel(n_pods=n_pods, t_compute_s=t_cm,
+                     dcn_bytes_per_pod=dcn, n_steps=n_steps,
+                     slow_pod_factor=slow_pod_factor)

@@ -1,0 +1,74 @@
+"""Elastic scaling: rebuild the mesh from surviving hosts and re-shard state.
+
+Flow on failure (or straggler eviction):
+  1. `plan_remesh(n_alive)` picks the largest supported (data, model) grid that
+     fits the survivors, preferring to shrink the *data* axis (batch re-division
+     is free with the stateless pipeline) before touching *model* (weight layout).
+  2. `reshard_plan(old, new)` describes, per logical axis, gather/slice factors —
+     with the stateless data pipeline (data/pipeline.py) and logical-rules
+     sharding, re-sharding params is a device_put with the new NamedSharding.
+  3. The checkpointer restores the last committed step when the fleet must
+     restart cold; warm re-meshing reuses in-HBM state on survivors.
+
+The DES core is elastic by construction: the scheduler (C3) re-places LPs on the
+surviving agents (Engine.apply_placement_local) and replicated component state
+(C4) means no LP state is lost with a failed agent — the paper's replication
+argument becoming a fault-tolerance property.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    axes: tuple[str, ...]
+    shape: tuple[int, ...]
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def plan_remesh(n_alive: int, *, model_parallel: int = 16,
+                multi_pod: bool = False) -> MeshPlan:
+    """Largest power-of-two mesh <= n_alive keeping the model axis intact.
+
+    Shrinking `model` would re-layout every weight shard; shrinking `data` only
+    changes the batch divisor, so data gives way first. If fewer than one model
+    group survives, model halves (weights re-gathered from checkpoint shards).
+    """
+    assert n_alive >= 1
+    mp = model_parallel
+    while mp > n_alive:
+        mp //= 2
+    dp = 1
+    while dp * 2 * mp <= n_alive:
+        dp *= 2
+    if multi_pod and dp % 2 == 0:
+        return MeshPlan(("pod", "data", "model"), (2, dp // 2, mp))
+    return MeshPlan(("data", "model"), (dp, mp))
+
+
+def reshard_plan(old: MeshPlan, new: MeshPlan) -> dict:
+    """Logical description of the state movement between meshes."""
+    o = dict(zip(old.axes, old.shape))
+    n = dict(zip(new.axes, new.shape))
+    plan = {}
+    for ax in ("pod", "data", "model"):
+        a, b = o.get(ax, 1), n.get(ax, 1)
+        if a == b:
+            plan[ax] = "keep"
+        elif a > b:
+            plan[ax] = f"gather x{a // b}"     # fewer shards: all-gather groups
+        else:
+            plan[ax] = f"split x{b // a}"      # more shards: slice locally
+    plan["batch_divisor"] = n.get("pod", 1) * n.get("data", 1)
+    return plan
+
+
+def validate_plan(plan: MeshPlan, n_alive: int) -> bool:
+    return 1 <= plan.n_devices <= n_alive

@@ -1,0 +1,65 @@
+"""Straggler detection + mitigation — the paper's scheduler as a fleet feature.
+
+The paper's motivation (§4.1): "by assigning simulation jobs to be executed on slow
+workstation all other simulation jobs are affected ... because of the need to
+maintain causal consistency". A gang-scheduled SPMD training step has exactly the
+same failure mode: the step time is the max over hosts.
+
+Detection: per-host EWMA of step wall time; a host whose EWMA exceeds
+``threshold``x the fleet median is flagged. Mitigation: feed the measured slowness
+into the paper's performance values (core.scheduler) and re-place DES LPs away from
+the slow host; for the training fleet, surface an eviction/re-mesh recommendation
+consumed by ft/elastic.py (demote to a smaller healthy mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import scheduler as sched
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    n_hosts: int
+    alpha: float = 0.2
+    threshold: float = 1.5
+
+    def __post_init__(self):
+        self.ewma = np.zeros(self.n_hosts)
+        self.count = np.zeros(self.n_hosts, dtype=int)
+
+    def record(self, host: int, step: int, seconds: float):
+        if self.count[host] == 0:
+            self.ewma[host] = seconds
+        else:
+            self.ewma[host] = (1 - self.alpha) * self.ewma[host] \
+                + self.alpha * seconds
+        self.count[host] += 1
+
+    def stragglers(self) -> list[int]:
+        seen = self.count > 0
+        if seen.sum() < 2:
+            return []
+        med = float(np.median(self.ewma[seen]))
+        return [h for h in range(self.n_hosts)
+                if seen[h] and self.ewma[h] > self.threshold * max(med, 1e-9)]
+
+    # ---- paper-scheduler mitigation (DES fleet) ----------------------------
+    def replacement_plan(self, lp_agent, lp_ctx):
+        """Re-place LPs with the paper's §4.1 algorithm, with measured slowness
+        folded into the performance values (slow agents look expensive)."""
+        perf = jnp.asarray(np.where(self.count > 0, self.ewma, self.ewma.mean()
+                                    if self.count.any() else 1.0),
+                           jnp.float32)
+        perf = perf / jnp.maximum(jnp.min(perf), 1e-9)   # relative slowness
+        return sched.plan_placement(perf * 10.0, jnp.asarray(lp_ctx),
+                                    self.n_hosts)
+
+    def eviction_recommendation(self) -> dict:
+        s = self.stragglers()
+        return {"evict_hosts": s, "healthy": [h for h in range(self.n_hosts)
+                                              if h not in s]}

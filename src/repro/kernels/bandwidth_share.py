@@ -1,0 +1,67 @@
+"""Max–min fair bandwidth sharing (progressive filling) as a Pallas kernel.
+
+The paper's interrupt-based traffic model recomputes every flow's fair share on
+each flow start/end — the per-event hot spot of the network component (§4.2, the
+Fig-2 event storm). The fixed point is computed by at most L water-filling rounds;
+each round is two (L,F)x(F,) matvecs + reductions, all VMEM-resident. Mirrors
+core.network.maxmin_rates bit-for-bit in f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-6
+_BIG = 3.0e38
+
+
+def _waterfill_kernel(inc_ref, bw_ref, act_ref, rate_ref, *, n_flows: int,
+                      n_links: int):
+    inc = inc_ref[...]                      # (F, L)
+    bw = bw_ref[0]                          # (L,)
+    active = act_ref[0]                     # (F,) f32 0/1
+    inc = inc * active[:, None]
+
+    def round_(_, carry):
+        rate, frozen = carry                # (F,), (F,) f32
+        unfrozen = active * (1.0 - frozen)
+        n_unf = jax.lax.dot_general(inc, unfrozen, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        used = jax.lax.dot_general(inc, rate * frozen, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        resid = jnp.maximum(bw - used, 0.0)
+        fair = jnp.where(n_unf > 0, resid / jnp.maximum(n_unf, 1.0), _BIG)
+        fair = jnp.where((bw <= 0) & (n_unf > 0), 0.0, fair)
+        level = jnp.min(fair)
+        bottleneck = (fair <= level + _EPS).astype(jnp.float32)
+        hits = jax.lax.dot_general(inc, bottleneck, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32) > 0
+        newly = unfrozen * hits.astype(jnp.float32)
+        rate = jnp.where(newly > 0, level, rate)
+        frozen = jnp.maximum(frozen, newly)
+        return rate, frozen
+
+    rate0 = jnp.zeros((n_flows,), jnp.float32)
+    frozen0 = 1.0 - active
+    rate, _ = jax.lax.fori_loop(0, n_links, round_, (rate0, frozen0))
+    rate_ref[0] = jnp.where(active > 0, rate, 0.0)
+
+
+def maxmin_rates_pallas(inc: jax.Array, bw: jax.Array, active: jax.Array, *,
+                        interpret=False) -> jax.Array:
+    """inc: (F, L) 0/1 f32; bw: (L,); active: (F,) bool -> (F,) f32 rates."""
+    f, l = inc.shape
+    kernel = functools.partial(_waterfill_kernel, n_flows=f, n_links=l)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((f, l), lambda i: (0, 0)),
+                  pl.BlockSpec((1, l), lambda i: (0, 0)),
+                  pl.BlockSpec((1, f), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, f), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, f), jnp.float32),
+        interpret=interpret,
+    )(inc.astype(jnp.float32), bw[None], active.astype(jnp.float32)[None])[0]

@@ -1,0 +1,58 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the compiled kernels run natively; everywhere
+else (this CPU container, unit tests) ``interpret=True`` executes the same kernel
+bodies in Python for correctness validation against ref.py. The model zoo calls
+these through cfg.use_flash / engine sort_fn hooks, so the XLA fallbacks and the
+kernels are interchangeable implementations of identical math.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bandwidth_share as _bw
+from repro.kernels import event_select as _es
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rwkv6_scan as _gla
+from repro.kernels import ssm_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128, block_k=128):
+    """q: (BH, Sq, D); k, v: (BKV, Skv, D). GQA via BH % BKV grouping."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_scan(q, k, v, w, u, *, chunk=64):
+    """RWKV6 chunked recurrence. (BH, S, d) operands, u: (BH, d)."""
+    return _gla.gla_pallas(q, k, v, w, u, mode="k", chunk=chunk,
+                           interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(q, k, v, w, *, chunk=64):
+    """Mamba2-style SSD chunked recurrence (decay on V channels)."""
+    return _ssd.ssd_pallas(q, k, v, w, chunk=chunk, interpret=_interpret())
+
+
+@jax.jit
+def sort_events(time_key, seq):
+    """(CAP,) -> permutation ascending by (time, seq). Engine sort hook."""
+    return _es.sort_events(time_key, seq, interpret=_interpret())
+
+
+@jax.jit
+def maxmin_rates(inc, bw, active):
+    """(F, L), (L,), (F,) -> (F,) max-min fair rates."""
+    return _bw.maxmin_rates_pallas(inc, bw, active, interpret=_interpret())

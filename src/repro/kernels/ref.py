@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets in tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.network import maxmin_rates as maxmin_rates_ref  # noqa: F401
+from repro.models.linear_rnn import gla_ref  # noqa: F401
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (BH, Sq, D); k, v: (BKV, Skv, D); GQA via head grouping."""
+    bh, sq, d = q.shape
+    bkv, skv, _ = k.shape
+    group = bh // bkv
+    kr = jnp.repeat(k, group, axis=0)
+    vr = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / math.sqrt(d)
+    if causal:
+        qp = jnp.arange(sq)[:, None]
+        kp = jnp.arange(skv)[None, :]
+        mask = kp <= qp
+        if window > 0:
+            mask = mask & (kp > qp - window)
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def sort_events_ref(time_key: jax.Array, seq: jax.Array) -> jax.Array:
+    """Stable (time, seq) sort permutation — mirror of engine.lexsort_time_seq."""
+    perm = jnp.argsort(seq, stable=True)
+    perm2 = jnp.argsort(time_key[perm], stable=True)
+    return perm[perm2]

@@ -1,0 +1,144 @@
+"""Chunked gated-linear-attention Pallas kernel (RWKV6 time-mix hot loop).
+
+Grid = (batch*heads, n_chunks); chunks are the minor grid axis so TPU runs them
+sequentially per head while the recurrent state S (dk x dv, f32) persists in VMEM
+scratch — the cross-chunk carry never round-trips to HBM. Within a chunk everything
+is (C x C) / (C x d) matmuls on the MXU, which is the entire point of the chunked
+formulation (see models/linear_rnn.py for the math and the jnp twin).
+
+``mode='k'`` = RWKV6 (decay on K channels, +bonus u on the diagonal).
+``mode='v'`` = Mamba2-style SSD (decay on V channels) — reused by ssm_scan.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gla_kernel_k(q_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref, s_ref, *,
+                  chunk: int, n_chunks: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (C, dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)          # (C, dv)
+    w = w_ref[0].astype(jnp.float32)          # (C, dk)
+    u = u_ref[0].astype(jnp.float32)          # (1, dk)
+    S = s_ref[...]
+
+    logw = jnp.log(w)
+    qs = jnp.exp(jnp.cumsum(logw, axis=0))    # inclusive cumprod
+    qx = qs / w                                # exclusive
+    r_t = q * qx
+    k_t = k / qs
+
+    a = jax.lax.dot_general(r_t, k_t, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    a = jnp.where(jj < ii, a, 0.0)
+    diag = jnp.sum(q * u * k, axis=1)
+    a = a + jnp.where(jj == ii, diag[:, None], 0.0)
+
+    out = (jax.lax.dot_general(r_t, S, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+           + jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32))
+    o_ref[0] = out.astype(o_ref.dtype)
+
+    qc = qs[-1]                                # (dk,)
+    s_new = (S * qc[:, None]
+             + jax.lax.dot_general(k_t * qc[None, :], v,
+                                   (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+    s_ref[...] = s_new
+
+    @pl.when(c == n_chunks - 1)
+    def _flush():
+        s_out_ref[0] = s_new
+
+
+def _gla_kernel_v(q_ref, k_ref, v_ref, w_ref, o_ref, s_out_ref, s_ref, *,
+                  chunk: int, n_chunks: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (C, dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)          # (C, dv)
+    w = w_ref[0].astype(jnp.float32)          # (C, dv)
+    S = s_ref[...]
+
+    logw = jnp.log(w)
+    qs = jnp.exp(jnp.cumsum(logw, axis=0))    # inclusive (C, dv)
+    b = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    b = jnp.where(jj <= ii, b, 0.0)
+    v_t = v / qs
+    out = qs * (jax.lax.dot_general(q, S, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+                + jax.lax.dot_general(b, v_t, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32))
+    o_ref[0] = out.astype(o_ref.dtype)
+
+    qc = qs[-1]                                # (dv,)
+    s_new = qc[None, :] * (S + jax.lax.dot_general(
+        k, v_t, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32))
+    s_ref[...] = s_new
+
+    @pl.when(c == n_chunks - 1)
+    def _flush():
+        s_out_ref[0] = s_new
+
+
+def gla_pallas(q, k, v, w, u=None, *, mode="k", chunk=64, interpret=False):
+    """q,k: (BH, S, dk); v: (BH, S, dv); w per mode; u: (BH, dk) for mode='k'.
+
+    Returns (out (BH, S, dv), final_state (BH, dk, dv) f32).
+    """
+    bh, s, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0
+    n = s // c
+
+    spec3 = lambda d: pl.BlockSpec((1, c, d), lambda b, i: (b, i, 0))
+    if mode == "k":
+        kernel = functools.partial(_gla_kernel_k, chunk=c, n_chunks=n)
+        in_specs = [spec3(dk), spec3(dk), spec3(dv), spec3(dk),
+                    pl.BlockSpec((1, 1, dk), lambda b, i: (b, 0, 0))]
+        args = (q, k, v, w, u[:, None, :])
+    else:
+        kernel = functools.partial(_gla_kernel_v, chunk=c, n_chunks=n)
+        in_specs = [spec3(dk), spec3(dk), spec3(dv), spec3(dv)]
+        args = (q, k, v, w)
+
+    out, s_out = pl.pallas_call(
+        kernel,
+        grid=(bh, n),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, c, dv), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, i: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dv), q.dtype),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+    return out, s_out

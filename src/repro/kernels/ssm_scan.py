@@ -1,0 +1,13 @@
+"""SSD / Mamba2-style selective-scan Pallas kernel (hymba's SSM heads).
+
+Same chunked machinery as rwkv6_scan (decay on the V channels, inclusive-diagonal
+intra-chunk term, no bonus). See that module for the tiling story.
+"""
+from __future__ import annotations
+
+from repro.kernels.rwkv6_scan import gla_pallas
+
+
+def ssd_pallas(q, k, v, w, *, chunk=64, interpret=False):
+    """q,k: (BH, S, dk=state); v: (BH, S, dv=head); w: (BH, S, dv) decay."""
+    return gla_pallas(q, k, v, w, mode="v", chunk=chunk, interpret=interpret)

@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module: jax locks the
+# device count at first init, and the production meshes need 512 placeholders.
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import SHAPES, TrainConfig, applicable_shapes  # noqa: E402
+from repro.configs.registry import ARCHS, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import sharding as sh  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.roofline import analysis as roof  # noqa: E402
+from repro.train.loop import make_train_step  # noqa: E402
+from repro.train.optimizer import init_opt_state  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# Named sharding-rule variants for §Perf iterations.
+RULE_VARIANTS: dict[str, dict] = {
+    "baseline": dict(sh.DEFAULT_RULES),
+    # fsdp over both pod+data: ZeRO-3 across the fleet (more weight gather, less mem)
+    "fsdp_global": {**sh.DEFAULT_RULES,
+                    "fsdp": (("pod", "data"), ("data",))},
+    # sequence-parallel activations off (saved acts replicated over model axis)
+    "no_seqpar": {**sh.DEFAULT_RULES, "act_seq": ()},
+    # experts preferred over mlp sharding disabled (TP inside experts)
+    "moe_tp": {**sh.DEFAULT_RULES, "experts": ()},
+    # decode: shard the residual stream's embed dim over model — collectives
+    # become reduce-scatters of d/16 instead of all-reduces of d (§Perf H2)
+    "decode_embed": {**sh.DEFAULT_RULES, "embed": (("model",),)},
+    # inference: no ZeRO weight sharding — fsdp gathers (whole weight matrices
+    # per decoded token!) disappear; weights replicate over data, TP over model
+    "serve": {**sh.DEFAULT_RULES, "fsdp": ()},
+}
+
+
+def _input_names(batch_specs: dict) -> dict:
+    names = {}
+    for k, v in batch_specs.items():
+        if k == "positions3":
+            names[k] = ("conv", "batch", "seq")
+        elif v.ndim == 2:
+            names[k] = ("batch", "seq")
+        elif v.ndim == 3:
+            names[k] = ("batch", "seq", "embed")
+        else:
+            names[k] = tuple(["seq"] * v.ndim)
+    return names
+
+
+def _kv_names(cache_sds):
+    from repro.models.layers import KVCache
+    return KVCache(k=("layers", "batch", "seq_kv", "kv_heads", "head"),
+                   v=("layers", "batch", "seq_kv", "kv_heads", "head"),
+                   length=("layers",))
+
+
+def decode_state_names(model, state_sds):
+    """names pytree congruent with the decode-state structure."""
+    cfg = model.cfg
+    out = {}
+    for key, sub in state_sds.items():
+        if key in ("kv", "kv_first") and sub is not None:
+            out[key] = _kv_names(sub)
+        elif key == "cross":
+            nm = ("layers", "batch", "seq_kv", "kv_heads", "head")
+            out[key] = (nm, nm)
+        elif key == "rnn" and sub is not None:
+            nm = {}
+            for k2, leaf in sub.items():
+                if k2 == "S":
+                    nm[k2] = ("layers", "batch", "heads", "head", "head")
+                elif k2 == "ssd":
+                    nm[k2] = ("layers", "batch", "heads", "ssm_state", "head")
+                else:  # tm_prev / cm_prev
+                    nm[k2] = ("layers", "batch", "seq", "embed")
+            out[key] = nm
+        else:
+            out[key] = sub
+    return out
+
+
+def shardings_for(sds_tree, names_tree, mesh, rules):
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(sds, names):
+        if sds is None:
+            return None
+        if isinstance(names, tuple) and len(names) == len(sds.shape):
+            spec = sh.spec_for(sds.shape, names, rules, ms)
+        else:
+            spec = jax.sharding.PartitionSpec()
+        return jax.sharding.NamedSharding(mesh, spec)
+
+    is_none = lambda x: x is None
+    flat_sds, treedef = jax.tree.flatten(sds_tree, is_leaf=is_none)
+    is_names = lambda x: x is None or (isinstance(x, tuple) and all(
+        isinstance(s, str) or s is None for s in x))
+    flat_names = jax.tree.flatten(names_tree, is_leaf=is_names)[0]
+    assert len(flat_sds) == len(flat_names), (len(flat_sds), len(flat_names))
+    return jax.tree.unflatten(treedef, [one(s, n) for s, n
+                                        in zip(flat_sds, flat_names)])
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, rules_name="baseline",
+             overrides=None, tag="", verbose=True, train_overrides=None):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    if shape_name not in applicable_shapes(cfg):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped (DESIGN.md §6: not applicable)"}
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = RULE_VARIANTS[rules_name]
+    chips = mesh.devices.size
+
+    rng = jax.random.PRNGKey(0)
+    holder = {}
+
+    def _vals_only(r):
+        vals, names = model.init(r)
+        holder["names"] = names        # trace-invariant python side-channel
+        return vals
+
+    params_sds = jax.eval_shape(_vals_only, rng)
+    names = holder["names"]
+    p_shard = shardings_for(params_sds, names, mesh, rules)
+
+    batch_specs = model.input_specs(shape)
+    b_names = _input_names(batch_specs)
+    b_shard = shardings_for(batch_specs, b_names, mesh, rules)
+
+    t0 = time.time()
+    with sh.sharding_ctx(mesh, rules):
+        if shape.mode == "train":
+            tc = TrainConfig(**(train_overrides or {}))
+            opt_sds = jax.eval_shape(
+                lambda p: init_opt_state(p, tc.opt_dtype), params_sds)
+            o_shard = shardings_for(
+                opt_sds, type(opt_sds)(step=(), m=names, v=names), mesh, rules)
+            step = make_train_step(model, tc)
+            jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_sds, opt_sds, batch_specs)
+        elif shape.mode == "prefill":
+            jitted = jax.jit(model.prefill_fn, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_sds, batch_specs)
+        else:  # decode
+            state_sds = model.decode_state_specs(shape)
+            s_names = decode_state_names(model, state_sds)
+            s_shard = shardings_for(state_sds, s_names, mesh, rules)
+            tok_sds = batch_specs["tokens"]
+            tok_shard = shardings_for(
+                {"tokens": tok_sds}, {"tokens": ("batch", "seq")}, mesh,
+                rules)["tokens"]
+            len_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            len_shard = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            # logits stay vocab-sharded on the way out: sampling/argmax runs on
+            # shards; replicating (b, vocab) f32 per token costs an all-gather
+            # that dominated decode collectives (§Perf H2).
+            logits_shard = shardings_for(
+                {"x": jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.vocab), jnp.float32)},
+                {"x": ("batch", "vocab")}, mesh, rules)["x"]
+            jitted = jax.jit(model.decode_fn,
+                             in_shardings=(p_shard, s_shard, tok_shard,
+                                           len_shard),
+                             out_shardings=(logits_shard, s_shard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_sds, state_sds, tok_sds, len_sds)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            if hasattr(mem, attr):
+                mem_info[attr] = int(getattr(mem, attr))
+    hlo = compiled.as_text()
+    terms = roof.terms_from_artifacts(arch, shape, mesh_kind, chips, cfg,
+                                      lowered.as_text(), hlo)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": chips,
+        "status": "ok", "rules": rules_name, "tag": tag,
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "memory_analysis": mem_info,
+        "roofline": terms.row(),
+        "hlo_bytes": len(hlo),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: "
+              f"compile {t_compile:.0f}s  bottleneck={terms.bottleneck}  "
+              f"t=({terms.t_compute:.4f},{terms.t_memory:.4f},"
+              f"{terms.t_collective:.4f})s  frac={terms.roofline_fraction:.3f}")
+        print("  memory_analysis:", mem_info)
+    return result
+
+
+def cell_path(arch, shape, mesh_kind, rules_name="baseline", tag=""):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else (
+        f"__{rules_name}" if rules_name != "baseline" else "")
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_kind}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCHS) + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--rules", default="baseline", choices=list(RULE_VARIANTS))
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig overrides, e.g. --set causal_scheme=tri")
+    ap.add_argument("--tset", action="append", default=[],
+                    help="TrainConfig overrides, e.g. --tset microbatches=4")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    def parse_kv(items):
+        out = {}
+        for kv in items:
+            k, v = kv.split("=", 1)
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+            out[k] = v
+        return out
+
+    overrides = parse_kv(args.set)
+    train_overrides = parse_kv(args.tset)
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in applicable_shapes(get_config(a)):
+                for m in ("single", "multi"):
+                    cells.append((a, s, m))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    for a, s, m in cells:
+        path = cell_path(a, s, m, args.rules, args.tag)
+        if os.path.exists(path) and not args.force:
+            print(f"[dryrun] cached: {path}")
+            continue
+        try:
+            res = run_cell(a, s, m, rules_name=args.rules,
+                           overrides=overrides or None, tag=args.tag,
+                           train_overrides=train_overrides or None)
+        except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+            res = {"arch": a, "shape": s, "mesh": m, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            print(f"[dryrun] FAIL {a} x {s} x {m}: {e}")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax device
+state — the dry-run sets XLA_FLAGS for 512 host devices before any jax import,
+and tests/benches must keep seeing 1 device.
+
+Topology: TPU v5e pods of 256 chips as a (16, 16) (data, model) grid; the
+multi-pod mesh adds a leading "pod" axis (2, 16, 16) whose collectives cross DCN
+— which is why gradient compression (train/compression.py) targets exactly that
+axis and why the sharding rules put batch on ("pod", "data") but weights (fsdp)
+only on "data" (no cross-pod weight gathers on the critical path).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_devices: int | None = None, model: int = 2):
+    """Small mesh over available devices (subprocess tests with 4-8 devices)."""
+    n = n_devices or len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# Hardware constants (TPU v5e) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW_PER_LINK = 50e9       # bytes/s per link
+CHIPS_PER_POD = 256

@@ -1,0 +1,116 @@
+"""Simulation launcher — the paper's own workflow, as a CLI.
+
+Modes:
+  t0t1       reproduce the paper's §3.1 CERN study (bandwidth sweep)
+  workload   simulate a training cell from a dry-run roofline JSON
+  distributed run the T0/T1 scenario under shard_map (needs >1 device:
+             XLA_FLAGS=--xla_force_host_platform_device_count=8)
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import numpy as np
+
+
+def run_t0t1(args):
+    import jax
+    from repro.core import Engine, ScenarioBuilder, events as ev
+    from repro.core import monitoring as mon
+
+    for bw in args.bandwidths:
+        b = ScenarioBuilder(max_cpu=4, queue_cap=16, max_link=4, max_flow=32)
+        t0 = b.add_regional_center(n_cpu=2, cpu_power=10.0, disk=2000.0,
+                                   tape=20000.0, tape_rate=5.0)
+        t1 = b.add_regional_center(n_cpu=2, cpu_power=8.0, disk=2000.0,
+                                   tape=20000.0, tape_rate=5.0)
+        wan = b.add_net_region(link_bws=[bw, bw], link_lats=[5, 5])
+        b.add_generator(target_lp=wan, kind=ev.K_FLOW_START,
+                        payload=[40.0, 0, -1, -1, t1["farm"],
+                                 ev.K_JOB_SUBMIT, t1["storage"],
+                                 ev.K_DATA_WRITE],
+                        interval=15, count=args.flows)
+        world, own, init_ev, spec = b.build(
+            n_agents=args.agents, lookahead=2, t_end=100_000, pool_cap=1024,
+            work_per_mb=2.0)
+        eng = Engine(world, own, init_ev, spec)
+        st = eng.run_local(max_windows=200_000)
+        c = np.asarray(st.counters).sum(axis=0)
+        print(f"[t0t1] bw={bw:7.3f} MB/tick  events={int(c[mon.C_EVENTS]):6d} "
+              f"stale={int(c[mon.C_STALE]):5d} "
+              f"interrupts={int(c[mon.C_INTERRUPTS]):5d} "
+              f"MB={int(c[mon.C_MB_TRANSFERRED])}")
+
+
+def run_workload(args):
+    from repro.core.workload import cell_from_roofline, simulate_training
+    paths = sorted(glob.glob(os.path.join(args.results, "*.json")))
+    if args.cell:
+        paths = [p for p in paths if args.cell in p]
+    for p in paths[: args.limit]:
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        cell = cell_from_roofline(rec["roofline"], n_pods=2, n_steps=4)
+        out = simulate_training(cell)
+        print(f"[workload] {rec['arch']} x {rec['shape']} x {rec['mesh']}: "
+              f"sim={out['simulated_step_s']:.4f}s "
+              f"analytic={out['analytic_step_s']:.4f}s "
+              f"events={out['events']}")
+
+
+def run_distributed(args):
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import Engine, ScenarioBuilder, events as ev
+    from repro.core import monitoring as mon
+
+    n = min(len(jax.devices()), 8)
+    b = ScenarioBuilder(max_cpu=4, queue_cap=16, max_link=4, max_flow=32)
+    t0 = b.add_regional_center(n_cpu=2, cpu_power=10.0, disk=2000.0,
+                               tape=20000.0, tape_rate=5.0)
+    t1 = b.add_regional_center(n_cpu=2, cpu_power=8.0, disk=2000.0,
+                               tape=20000.0, tape_rate=5.0)
+    wan = b.add_net_region(link_bws=[0.5, 0.5], link_lats=[5, 5])
+    b.add_generator(target_lp=wan, kind=ev.K_FLOW_START,
+                    payload=[40.0, 0, -1, -1, t1["farm"], ev.K_JOB_SUBMIT,
+                             t1["storage"], ev.K_DATA_WRITE],
+                    interval=15, count=24)
+    world, own, init_ev, spec = b.build(n_agents=n, lookahead=2,
+                                        t_end=100_000, pool_cap=512,
+                                        work_per_mb=2.0)
+    eng = Engine(world, own, init_ev, spec)
+    mesh = Mesh(np.array(jax.devices()[:n]), ("agents",))
+    st = eng.run_distributed(mesh, max_windows=200_000)
+    c = np.asarray(st.counters).sum(axis=0)
+    print(f"[distributed] agents={n} events={int(c[mon.C_EVENTS])} "
+          f"windows={int(np.asarray(st.windows)[0])} "
+          f"remote_msgs={int(c[mon.C_MSGS_REMOTE])}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="mode", required=True)
+    p1 = sub.add_parser("t0t1")
+    p1.add_argument("--bandwidths", type=float, nargs="+",
+                    default=[8.0, 2.0, 0.5, 0.125])
+    p1.add_argument("--flows", type=int, default=24)
+    p1.add_argument("--agents", type=int, default=1)
+    p2 = sub.add_parser("workload")
+    p2.add_argument("--results", default="results/dryrun")
+    p2.add_argument("--cell", default="")
+    p2.add_argument("--limit", type=int, default=5)
+    sub.add_parser("distributed")
+    args = ap.parse_args()
+    dict(t0t1=run_t0t1, workload=run_workload,
+         distributed=run_distributed)[args.mode](args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Training launcher: ``python -m repro.launch.train --arch smollm-135m --steps 300``.
+
+On this CPU container it trains reduced configs (--smoke, default) or the real
+config on a single device; on a TPU fleet the same entrypoint builds the
+production mesh (launch/mesh.py), applies the sharding rules from
+launch/dryrun.RULE_VARIANTS and runs the identical jit'd step.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ARCHS, get_config, smoke_config
+from repro.data import pipeline as dp
+from repro.models.model import build_model
+from repro.train.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=ARCHS)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced same-family config (CPU-trainable)")
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    tc = TrainConfig(learning_rate=args.lr, warmup_steps=20,
+                     microbatches=args.microbatches)
+    dcfg = dp.DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                         global_batch=args.global_batch)
+    extra = None
+    if cfg.family == "encdec":
+        import jax, jax.numpy as jnp
+        extra = {"frames": jax.random.normal(
+            jax.random.PRNGKey(0),
+            (args.global_batch, args.seq_len, cfg.d_model), jnp.float32)}
+        dcfg = dp.DataConfig(vocab=cfg.vocab, seq_len=cfg.decoder_len,
+                             global_batch=args.global_batch)
+    params, opt_state, history = train(
+        model, tc, steps=args.steps, data_cfg=dcfg, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, extra_batch=extra)
+    print(f"[train] done: first-10 loss {sum(history[:10]) / max(len(history[:10]),1):.4f} "
+          f"-> last-10 loss {sum(history[-10:]) / max(len(history[-10:]),1):.4f}")
+
+
+if __name__ == "__main__":
+    main()

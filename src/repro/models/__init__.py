@@ -1,0 +1,1 @@
+"""Model zoo: 10 architectures across 6 families (DESIGN.md section 4)."""

@@ -1,0 +1,351 @@
+"""Shared neural layers: norms, RoPE (incl. M-RoPE), attention (chunked-online-
+softmax XLA path + KV caches + sliding window), MLPs, embeddings.
+
+All functions are pure; parameters are plain dicts built by ``init_*`` helpers that
+return ``Annotated`` leaves (array + logical axis names) so the model builder can
+derive sharding specs without a second source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import Annotated
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ----------------------------------------------------------------- init utils
+def _norm_init(key, shape, scale=1.0):
+    return jnp.ones(shape, jnp.float32) * scale
+
+
+def dense_init(key, shape, names, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    w = jax.random.normal(key, shape, jnp.float32) * std
+    return Annotated(w.astype(dtype), names)
+
+
+# ------------------------------------------------------------------ RMSNorm
+def rmsnorm(x, gamma, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma.astype(x.dtype)
+
+
+def init_rmsnorm(d):
+    return Annotated(jnp.ones((d,), jnp.float32), ("embed",))
+
+
+def layernorm(x, gamma, beta, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y.astype(x.dtype) * gamma.astype(x.dtype) + beta.astype(x.dtype))
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                                   # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., s, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                                # (..., s, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x: jax.Array, positions3: jax.Array, theta: float) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: positions3 (3, ..., seq) = (temporal, h, w).
+
+    The head_dim is split 2:1:1 between the three position streams (the published
+    mrope_section for Qwen2-VL is [16, 24, 24] of 64 pair-slots; we use the same
+    proportions parametrically).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    s_t = half // 2
+    s_h = (half - s_t) // 2
+    s_w = half - s_t - s_h
+    freqs = rope_freqs(hd, theta)                                   # (half,)
+    sections = [s_t, s_h, s_w]
+    pos_parts = []
+    off = 0
+    for i, sec in enumerate(sections):
+        p = positions3[i][..., None].astype(jnp.float32) * freqs[off:off + sec]
+        pos_parts.append(p)
+        off += sec
+    ang = jnp.concatenate(pos_parts, axis=-1)                       # (..., s, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+class KVCache(NamedTuple):
+    k: jax.Array    # (batch, cache_len, n_kv, head_dim) — cfg.kv_dtype storage
+    v: jax.Array
+    length: jax.Array  # i32 scalar — valid prefix
+
+
+def cache_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.kv_dtype) if cfg.kv_dtype else dtype_of(cfg)
+
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), ("fsdp", "heads", "head"), dt),
+        "wk": dense_init(ks[1], (d, kv, hd), ("fsdp", "kv_heads", "head"), dt),
+        "wv": dense_init(ks[2], (d, kv, hd), ("fsdp", "kv_heads", "head"), dt),
+        "wo": dense_init(ks[3], (h, hd, d), ("heads", "head", "fsdp"), dt,
+                         scale=1.0 / math.sqrt(h * hd)),
+    }
+    if cfg.use_bias:
+        p["bq"] = Annotated(jnp.zeros((h, hd), jnp.float32), ("heads", "head"))
+        p["bk"] = Annotated(jnp.zeros((kv, hd), jnp.float32), ("kv_heads", "head"))
+        p["bv"] = Annotated(jnp.zeros((kv, hd), jnp.float32), ("kv_heads", "head"))
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.use_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return q, k, v
+
+
+def _chunked_attention(q, k, v, *, causal: bool, window: int, q_offset,
+                       kv_len_valid, chunk_q: int, chunk_kv: int,
+                       scheme: str = "rect"):
+    """Online-softmax attention, O(chunk) memory — the XLA flash-equivalent.
+
+    q: (b, sq, h, hd); k/v: (b, skv, n_kv, hd). GQA via head grouping. ``q_offset``
+    is the absolute position of q[0] (decode / prefill continuation).
+    ``kv_len_valid`` masks cache tails. ``scheme='tri'`` skips fully-masked KV
+    chunks for causal prefill (§Perf knob) by unrolling the outer loop.
+    """
+    b, sq, h, hd = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    group = h // n_kv
+    scale = 1.0 / math.sqrt(hd)
+
+    def divisor_chunk(n, c):
+        c = min(c, n)
+        while n % c:
+            c -= 1
+        return c
+
+    cq = divisor_chunk(sq, chunk_q)
+    ck = divisor_chunk(skv, chunk_kv)
+    n_q, n_k = sq // cq, skv // ck
+    qr = q.reshape(b, n_q, cq, n_kv, group, hd)
+    kr = k.reshape(b, n_k, ck, n_kv, hd)
+    vr = v.reshape(b, n_k, ck, n_kv, hd)
+
+    kv_pos = jnp.arange(skv, dtype=jnp.int32).reshape(n_k, ck)
+
+    def q_block(qi, qblk):
+        # qblk: (b, cq, n_kv, group, hd)
+        q_pos = q_offset + qi * cq + jnp.arange(cq, dtype=jnp.int32)  # (cq,)
+
+        def kv_step2(carry, inputs):
+            m, l, acc = carry
+            kblk, vblk, kpos = inputs
+            # scores: (b, n_kv, group, cq, ck)
+            s = jnp.einsum("bqngd,bknd->bngqk",
+                           qblk.astype(jnp.float32), kblk.astype(jnp.float32))
+            s = s * scale
+            mask = kpos[None, :] <= q_pos[:, None] if causal else jnp.ones(
+                (cq, ck), bool)
+            if causal and window > 0:
+                mask = mask & (kpos[None, :] > q_pos[:, None] - window)
+            mask = mask & (kpos[None, :] < kv_len_valid)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m2[..., None])
+            corr = jnp.exp(m - m2)
+            l2 = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bngqk,bknd->bngqd", p, vblk.astype(jnp.float32))
+            acc2 = acc * corr[..., None] + pv
+            return (m2, l2, acc2), None
+
+        m0 = jnp.full((b, n_kv, group, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, group, cq), jnp.float32)
+        a0 = jnp.zeros((b, n_kv, group, cq, hd), jnp.float32)
+
+        if scheme == "tri" and causal:
+            # unrolled triangular/banded schedule: q chunk qi touches only kv
+            # chunks intersecting [qi*cq - window + 1, (qi+1)*cq) — skips the
+            # fully-masked blocks the rectangular scan pays for (2x for causal,
+            # ~seq/window x for sliding-window attention).
+            hi = int(qi) + 1
+            lo = 0
+            if window > 0:
+                lo = max(0, (int(qi) * cq - window + 1) // ck)
+            carry = (m0, l0, a0)
+            for kj in range(lo, hi):
+                carry, _ = kv_step2(carry, (kr[:, kj], vr[:, kj], kv_pos[kj]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step2, (m0, l0, a0),
+                (kr.swapaxes(0, 1), vr.swapaxes(0, 1), kv_pos))
+        out = acc / jnp.maximum(l[..., None], 1e-30)                  # (b,n_kv,g,cq,hd)
+        return out.transpose(0, 3, 1, 2, 4)                           # (b,cq,n_kv,g,hd)
+
+    if scheme == "tri" and causal:
+        outs = [q_block(qi, qr[:, qi]) for qi in range(n_q)]
+        out = jnp.stack(outs, axis=1)                                 # (b,n_q,cq,...)
+    else:
+        out = jax.vmap(q_block, in_axes=(0, 1), out_axes=1)(
+            jnp.arange(n_q), qr)
+    return out.reshape(b, sq, h, hd)
+
+
+def attention(p, x, cfg: ModelConfig, *, positions, causal=True, cache: KVCache |
+              None = None, update_cache=False, cross_kv=None):
+    """Full attention entry point used by all transformer families.
+
+    Modes: (a) self-attention over x (train / prefill — optionally writing a cache),
+    (b) decode against a cache (x is the new token(s)), (c) cross-attention when
+    ``cross_kv=(k, v)`` is precomputed (whisper decoder).
+    """
+    b, s, d = x.shape
+    q, k_new, v_new = _qkv(p, x, cfg)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        kv_valid = jnp.int32(k.shape[1])
+        out = _chunked_attention(q, k, v, causal=False, window=0, q_offset=0,
+                                 kv_len_valid=kv_valid, chunk_q=cfg.attn_chunk_q,
+                                 chunk_kv=cfg.attn_chunk_kv)
+        new_cache = cache
+    elif cache is not None:
+        if cfg.m_rope:
+            q = apply_m_rope(q, positions, cfg.rope_theta)
+            k_new = apply_m_rope(k_new, positions, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k_new = apply_rope(k_new, positions, cfg.rope_theta)
+        cache_len = cache.k.shape[1]
+        cdt = cache.k.dtype    # storage dtype (optionally f8: cfg.kv_dtype)
+        if s == 1:
+            # decode: ring-buffer write (one in-place slice update — no shift
+            # copies). When full, the oldest slot is overwritten: exactly the
+            # sliding-window semantics; RoPE is relative and every valid slot
+            # is attendable, so slot order never matters.
+            k_q, v_q = k_new.astype(cdt), v_new.astype(cdt)
+            widx = cache.length % cache_len          # length counts monotonically
+            k = jax.lax.dynamic_update_slice(cache.k, k_q, (0, widx, 0, 0))
+            v = jax.lax.dynamic_update_slice(cache.v, v_q, (0, widx, 0, 0))
+            new_cache = KVCache(k=k, v=v, length=cache.length + 1)
+            valid = jnp.minimum(cache.length + 1, cache_len)
+            # storage dtype flows into the attention chunks; each kv block is
+            # upcast to f32 inside the online-softmax step (never the full
+            # cache — the f8 cache stays f8 in HBM).
+            out = _chunked_attention(q, k, v,
+                                     causal=False, window=0, q_offset=0,
+                                     kv_len_valid=valid, chunk_q=1,
+                                     chunk_kv=cfg.attn_chunk_kv)
+        else:
+            # prefill: attend over the fresh K/V; store the (window) tail
+            out = _chunked_attention(
+                q, k_new, v_new, causal=True, window=cfg.window, q_offset=0,
+                kv_len_valid=jnp.int32(s), chunk_q=cfg.attn_chunk_q,
+                chunk_kv=cfg.attn_chunk_kv, scheme=cfg.causal_scheme)
+            keep = min(cache_len, s)
+            k = jax.lax.dynamic_update_slice(
+                cache.k, k_new[:, s - keep:].astype(cdt), (0, 0, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache.v, v_new[:, s - keep:].astype(cdt), (0, 0, 0, 0))
+            new_cache = KVCache(k=k, v=v, length=jnp.int32(keep))
+    else:
+        if cfg.m_rope:
+            q = apply_m_rope(q, positions, cfg.rope_theta)
+            k_new = apply_m_rope(k_new, positions, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k_new = apply_rope(k_new, positions, cfg.rope_theta)
+        out = _chunked_attention(
+            q, k_new, v_new, causal=causal, window=cfg.window, q_offset=0,
+            kv_len_valid=jnp.int32(s), chunk_q=cfg.attn_chunk_q,
+            chunk_kv=cfg.attn_chunk_kv, scheme=cfg.causal_scheme)
+        new_cache = None
+
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    return y, new_cache
+
+
+# ------------------------------------------------------------------- MLPs
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None, gated=True):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], (d, f), ("fsdp", "mlp"), dt),
+        "wo": dense_init(ks[1], (f, d), ("mlp", "fsdp"), dt),
+    }
+    if gated:
+        p["wg"] = dense_init(ks[2], (d, f), ("fsdp", "mlp"), dt)
+    return p
+
+
+def mlp(p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if "wg" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# -------------------------------------------------------------- embeddings
+def init_embedding(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 2)
+    p = {"tok": dense_init(ks[0], (cfg.vocab, cfg.d_model), ("vocab", "fsdp"),
+                           dt, scale=1.0 / math.sqrt(cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["out"] = dense_init(ks[1], (cfg.d_model, cfg.vocab), ("fsdp", "vocab"),
+                              dt, scale=1.0 / math.sqrt(cfg.d_model))
+    return p
+
+
+def embed(p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(p, x):
+    w = p.get("out")
+    if w is None:
+        w = p["tok"].T
+    return jnp.einsum("bsd,dv->bsv", x, w)

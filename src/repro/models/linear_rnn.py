@@ -1,0 +1,256 @@
+"""Gated linear recurrences: RWKV6 (Finch) and Mamba2-style SSD (hymba's SSM heads).
+
+Both are instances of one primitive — a decayed outer-product state recurrence
+
+    S_t = diag(decay_t) * S_{t-1} + k_t (x) v_t        out_t = q_t . S_t
+
+with two variants: RWKV applies the decay on the K channels *after* reading the
+state (plus a per-channel "bonus" u for the current token); Mamba/SSD applies a
+per-V-channel (here: per-head scalar) decay *before* reading. The TPU-native form
+is the chunked algorithm: within a chunk of C tokens everything is dense matmuls
+(MXU), and state crosses chunk boundaries through a lax.scan — sequential-scan
+FLOPs become O(S/C) matmuls instead of S scalar steps. ``*_ref`` are the sequential
+oracles; the Pallas kernels in repro.kernels mirror the chunked math.
+
+Numerics: cumulative decays are computed in f32 and clamped (decay >= exp(-8)); the
+chunk length bounds the dynamic range of the cumprod ratios. Validated against the
+sequential refs in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding import Annotated
+
+DECAY_MIN = math.exp(-8.0)
+
+
+# ----------------------------------------------------------- sequential refs
+def gla_ref(q, k, v, decay, bonus=None, mode="k", s0=None):
+    """Sequential oracle. q,k: (b,s,h,dk); v: (b,s,h,dv);
+    decay: (b,s,h,dk) for mode='k', (b,s,h,dv) for mode='v'; bonus: (h,dk)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    w = decay.astype(jnp.float32)
+    state0 = jnp.zeros((b, h, dk, dv), jnp.float32) if s0 is None else s0
+
+    def step(S, inp):
+        qt, kt, vt, wt = inp  # (b,h,dk) (b,h,dk) (b,h,dv) (b,h,dk|dv)
+        kv = kt[..., :, None] * vt[..., None, :]          # (b,h,dk,dv)
+        if mode == "k":
+            Su = S + bonus[None, :, :, None] * kv if bonus is not None else S
+            out = jnp.einsum("bhk,bhkv->bhv", qt, Su)
+            S2 = S * wt[..., :, None] + kv
+        else:
+            S2 = S * wt[..., None, :] + kv
+            out = jnp.einsum("bhk,bhkv->bhv", qt, S2)
+        return S2, out
+
+    xs = (qf.swapaxes(0, 1), kf.swapaxes(0, 1), vf.swapaxes(0, 1),
+          w.swapaxes(0, 1))
+    state, outs = jax.lax.scan(step, state0, xs)
+    return outs.swapaxes(0, 1), state                      # (b,s,h,dv), (b,h,dk,dv)
+
+
+# ------------------------------------------------------------- chunked form
+def gla_chunked(q, k, v, decay, bonus=None, mode="k", chunk=64, s0=None):
+    """Chunked (MXU-friendly) evaluation, == gla_ref up to f32 roundoff."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    while s % c:          # fall back to the largest divisor (odd prefills)
+        c -= 1
+    n = s // c
+    qf = q.astype(jnp.float32).reshape(b, n, c, h, dk)
+    kf = k.astype(jnp.float32).reshape(b, n, c, h, dk)
+    vf = v.astype(jnp.float32).reshape(b, n, c, h, dv)
+    wd = decay.astype(jnp.float32).reshape(b, n, c, h, decay.shape[-1])
+    state0 = jnp.zeros((b, h, dk, dv), jnp.float32) if s0 is None else s0
+    tri_lo = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)   # strictly lower
+    tri_inc = jnp.tril(jnp.ones((c, c), jnp.float32))        # incl diag
+
+    def chunk_step(S, inp):
+        qc, kc, vc, wc = inp   # (b,c,h,dk) (b,c,h,dk) (b,c,h,dv) (b,c,h,dk|dv)
+        if mode == "k":
+            # Q_i = prod_{j<i} w_j (exclusive), Qs_j = prod_{j'<=j} w_j' (inclusive)
+            logw = jnp.log(wc)
+            Qs = jnp.exp(jnp.cumsum(logw, axis=1))           # inclusive
+            Q = Qs / wc                                      # exclusive
+            r_t = qc * Q                                     # (b,c,h,dk)
+            k_t = kc / Qs
+            A = jnp.einsum("bihk,bjhk->bhij", r_t, k_t) * tri_lo[None, None]
+            if bonus is not None:
+                diag = jnp.einsum("bihk,hk,bihk->bhi", qc, bonus, kc)
+                A = A + diag[..., None] * jnp.eye(c)[None, None]
+            out = (jnp.einsum("bihk,bhkv->bihv", r_t, S)
+                   + jnp.einsum("bhij,bjhv->bihv", A, vc))
+            Qc_tot = Qs[:, -1]                               # (b,h,dk)
+            S2 = (S * Qc_tot[..., None]
+                  + jnp.einsum("bjhk,bjhv->bhkv", Qc_tot[:, None] * k_t, vc))
+        else:
+            logw = jnp.log(wc)                               # (b,c,h,dv)
+            Qs = jnp.exp(jnp.cumsum(logw, axis=1))           # inclusive
+            B = jnp.einsum("bihk,bjhk->bhij", qc, kc) * tri_inc[None, None]
+            v_t = vc / Qs
+            out = Qs * (jnp.einsum("bihk,bhkv->bihv", qc, S)
+                        + jnp.einsum("bhij,bjhv->bihv", B, v_t))
+            Qc_tot = Qs[:, -1]                               # (b,h,dv)
+            S2 = Qc_tot[:, :, None, :] * (
+                S + jnp.einsum("bjhk,bjhv->bhkv", kc, v_t))
+        return S2, out
+
+    xs = tuple(x.swapaxes(0, 1) for x in (qf, kf, vf, wd))
+    state, outs = jax.lax.scan(chunk_step, state0, xs)
+    outs = outs.swapaxes(0, 1).reshape(b, s, h, dv)
+    return outs, state
+
+
+def gla_decode_step(q, k, v, decay, state, bonus=None, mode="k"):
+    """Single-token recurrent step (serving). q,k: (b,h,dk); v: (b,h,dv);
+    decay per mode; state: (b,h,dk,dv)."""
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    w = decay.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]
+    if mode == "k":
+        Su = state + (bonus[None, :, :, None] * kv if bonus is not None else 0.0)
+        out = jnp.einsum("bhk,bhkv->bhv", qf, Su)
+        state2 = state * w[..., :, None] + kv
+    else:
+        state2 = state * w[..., None, :] + kv
+        out = jnp.einsum("bhk,bhkv->bhv", qf, state2)
+    return out, state2
+
+
+# ------------------------------------------------------------------ RWKV6
+def init_rwkv_time_mix(key, cfg: ModelConfig):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    lora = 64
+    return {
+        "mu": Annotated(jnp.full((5, d), 0.5, jnp.float32), ("conv", "embed")),
+        "wr": L.dense_init(ks[0], (d, h, hd), ("fsdp", "heads", "head"), dt),
+        "wk": L.dense_init(ks[1], (d, h, hd), ("fsdp", "heads", "head"), dt),
+        "wv": L.dense_init(ks[2], (d, h, hd), ("fsdp", "heads", "head"), dt),
+        "wg": L.dense_init(ks[3], (d, h, hd), ("fsdp", "heads", "head"), dt),
+        "wo": L.dense_init(ks[4], (h, hd, d), ("heads", "head", "fsdp"), dt,
+                           scale=1.0 / math.sqrt(d)),
+        # Finch data-dependent decay: w = exp(-exp(w0 + (tanh(x A) B)))
+        "w0": Annotated(jnp.full((h, hd), -2.0, jnp.float32), ("heads", "head")),
+        "wA": L.dense_init(ks[5], (d, lora), ("fsdp", "mlp"), jnp.float32,
+                           scale=0.01),
+        "wB": L.dense_init(ks[6], (lora, h, hd), ("mlp", "heads", "head"),
+                           jnp.float32, scale=0.01),
+        "u": Annotated(jnp.zeros((h, hd), jnp.float32), ("heads", "head")),
+        "ln_x": Annotated(jnp.ones((h, hd), jnp.float32), ("heads", "head")),
+    }
+
+
+def _token_shift(x, prev=None):
+    """RWKV token shift: x_{t-1} (zeros / supplied state at t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv_time_mix(p, x, cfg: ModelConfig, *, state=None, shift_prev=None,
+                  chunked=True):
+    """state: (b,h,dk,dv) recurrent state or None; returns (y, new_state, x_last)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    xx = _token_shift(x, shift_prev)
+    mu = p["mu"].astype(x.dtype)
+    xr = x + (xx - x) * mu[0]
+    xk = x + (xx - x) * mu[1]
+    xv = x + (xx - x) * mu[2]
+    xw = x + (xx - x) * mu[3]
+    xg = x + (xx - x) * mu[4]
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["wr"])
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["wv"])
+    g = jnp.einsum("bsd,dhk->bshk", xg, p["wg"])
+    # data-dependent decay (the Finch contribution)
+    dd = jnp.einsum("bsl,lhk->bshk", jnp.tanh(
+        jnp.einsum("bsd,dl->bsl", xw.astype(jnp.float32), p["wA"])), p["wB"])
+    w = jnp.exp(-jnp.exp(jnp.clip(p["w0"][None, None] + dd, -8.0, 2.0)))
+    w = jnp.maximum(w, DECAY_MIN)
+
+    fn = gla_chunked if chunked else gla_ref
+    out, new_state = fn(r, k, v, w, bonus=p["u"], mode="k",
+                        **({"chunk": cfg.chunk_gla} if chunked else {}), s0=state)
+    # per-head group norm, then output gate
+    mean = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = (out - mean) * jax.lax.rsqrt(var + 64e-5) * p["ln_x"][None, None]
+    out = out.astype(x.dtype) * jax.nn.silu(g)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_state, x[:, -1:]
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 2)
+    return {
+        "mu": Annotated(jnp.full((2, d), 0.5, jnp.float32), ("conv", "embed")),
+        "wk": L.dense_init(ks[0], (d, f), ("fsdp", "mlp"), dt),
+        "wv": L.dense_init(ks[1], (f, d), ("mlp", "fsdp"), dt),
+    }
+
+
+def rwkv_channel_mix(p, x, shift_prev=None):
+    xx = _token_shift(x, shift_prev)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + (xx - x) * mu[0]
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    return jnp.einsum("bsf,fd->bsd", k, p["wv"]), x[:, -1:]
+
+
+# ------------------------------------------------- Mamba2-style SSD (hymba)
+def init_ssd(key, cfg: ModelConfig):
+    """Scalar-per-head decay SSD: q=C, k=B, v=x*dt — hymba's SSM half."""
+    d, h = cfg.d_model, cfg.n_heads
+    n = cfg.ssm_state
+    hd = cfg.head_dim
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "wx": L.dense_init(ks[0], (d, h, hd), ("fsdp", "heads", "head"), dt),
+        "wB": L.dense_init(ks[1], (d, h, n), ("fsdp", "heads", "ssm_state"), dt),
+        "wC": L.dense_init(ks[2], (d, h, n), ("fsdp", "heads", "ssm_state"), dt),
+        "wdt": L.dense_init(ks[3], (d, h), ("fsdp", "heads"), jnp.float32,
+                            scale=0.01),
+        "a_log": Annotated(jnp.zeros((h,), jnp.float32), ("heads",)),
+        "wo": L.dense_init(ks[4], (h, hd, d), ("heads", "head", "fsdp"), dt,
+                           scale=1.0 / math.sqrt(d)),
+        "dt_bias": Annotated(jnp.full((h,), -1.0, jnp.float32), ("heads",)),
+    }
+
+
+def ssd_mix(p, x, cfg: ModelConfig, *, state=None, chunked=True):
+    """Returns (y, new_state). state: (b, h, n, hd)."""
+    b, s, d = x.shape
+    h, n, hd = cfg.n_heads, cfg.ssm_state, cfg.head_dim
+    xs = jnp.einsum("bsd,dhk->bshk", x, p["wx"])                  # v (b,s,h,hd)
+    Bm = jnp.einsum("bsd,dhn->bshn", x, p["wB"])                  # k
+    Cm = jnp.einsum("bsd,dhn->bshn", x, p["wC"])                  # q
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wdt"])
+        + p["dt_bias"][None, None])                               # (b,s,h)
+    a = jnp.exp(-dt * jnp.exp(p["a_log"])[None, None])            # (b,s,h) in (0,1)
+    a = jnp.maximum(a, DECAY_MIN)
+    v = xs.astype(jnp.float32) * dt[..., None]
+    decay = jnp.broadcast_to(a[..., None], (b, s, h, hd))         # per-v-channel
+
+    fn = gla_chunked if chunked else gla_ref
+    out, new_state = fn(Cm, Bm, v.astype(Cm.dtype), decay, mode="v",
+                        **({"chunk": cfg.chunk_gla} if chunked else {}), s0=state)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    return y, new_state

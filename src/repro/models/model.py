@@ -1,0 +1,541 @@
+"""Model assembly for all six architecture families.
+
+One ``Model`` object per config exposes:
+  init(rng) -> (params, names)      names = logical-axis tuples for sharding
+  loss_fn(params, batch)            training loss (+ metrics)
+  prefill_fn(params, batch)         -> (last-token logits, decode state)
+  decode_fn(params, state, tokens, length) -> (logits, state)
+  input_specs(shape) / decode_state_specs(shape)   ShapeDtypeStruct stand-ins
+
+Layers run under lax.scan (compile time / HLO size O(1) in depth) with optional
+full-block remat; saved activations are sequence-sharded via the "act_seq" rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import linear_rnn as R
+from repro.models import moe as M
+from repro.models.sharding import Annotated, shard, split_annotated
+
+AUX_WEIGHT = 0.01
+VLM_PATCHES = 1024          # stub frontend: patch-embedding slots at seq start
+LOSS_CHUNKS = 8             # seq chunks for the big-vocab chunked loss
+
+
+# ======================================================================== init
+def _init_block(key, cfg: ModelConfig, kind: str):
+    """One transformer block's params. kind: dense|moe|hybrid|rwkv|enc|dec."""
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {}
+    if kind == "rwkv":
+        p["ln1"] = L.init_rmsnorm(cfg.d_model)
+        p["tmix"] = R.init_rwkv_time_mix(ks[0], cfg)
+        p["ln2"] = L.init_rmsnorm(cfg.d_model)
+        p["cmix"] = R.init_rwkv_channel_mix(ks[1], cfg)
+        return p
+    p["ln1"] = L.init_rmsnorm(cfg.d_model)
+    p["attn"] = L.init_attention(ks[0], cfg)
+    p["ln2"] = L.init_rmsnorm(cfg.d_model)
+    if kind == "hybrid":
+        p["ssd"] = R.init_ssd(ks[1], cfg)
+        p["ln_attn_out"] = L.init_rmsnorm(cfg.d_model)
+        p["ln_ssd_out"] = L.init_rmsnorm(cfg.d_model)
+        p["mlp"] = L.init_mlp(ks[2], cfg)
+    elif kind == "moe":
+        p["moe"] = M.init_moe(ks[1], cfg)
+    elif kind == "dense_ffn_moe_arch":
+        p["mlp"] = L.init_mlp(ks[1], cfg, d_ff=4 * cfg.d_model)
+    elif kind == "enc":
+        p["lnb1"] = Annotated(jnp.zeros((cfg.d_model,), jnp.float32), ("embed",))
+        p["lnb2"] = Annotated(jnp.zeros((cfg.d_model,), jnp.float32), ("embed",))
+        p["mlp"] = L.init_mlp(ks[1], cfg, gated=False)
+    elif kind == "dec":
+        p["xattn"] = L.init_attention(ks[1], cfg, cross=True)
+        p["ln3"] = L.init_rmsnorm(cfg.d_model)
+        p["lnb1"] = Annotated(jnp.zeros((cfg.d_model,), jnp.float32), ("embed",))
+        p["lnb2"] = Annotated(jnp.zeros((cfg.d_model,), jnp.float32), ("embed",))
+        p["lnb3"] = Annotated(jnp.zeros((cfg.d_model,), jnp.float32), ("embed",))
+        p["mlp"] = L.init_mlp(ks[2], cfg, gated=False)
+    else:  # dense / vlm
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def _stack_init(key, cfg: ModelConfig, kind: str, n: int):
+    """Init per layer, stack with a leading 'layers' axis (the scan axis)."""
+    keys = jax.random.split(key, n)
+    blocks = [_init_block(k, cfg, kind) for k in keys]
+    def stack(*leaves):
+        if isinstance(leaves[0], Annotated):
+            return Annotated(jnp.stack([l.value for l in leaves]),
+                             ("layers",) + leaves[0].names)
+        return jnp.stack(leaves)
+    return jax.tree.map(stack, *blocks,
+                        is_leaf=lambda x: isinstance(x, Annotated))
+
+
+def _block_kind(cfg: ModelConfig) -> str:
+    return {"dense": "dense", "vlm": "dense", "moe": "moe",
+            "hybrid": "hybrid", "ssm": "rwkv", "encdec": "dec"}[cfg.family]
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"embed": L.init_embedding(ks[0], cfg)}
+    kind = _block_kind(cfg)
+    n_scan = cfg.n_layers - cfg.moe_first_dense
+    if cfg.moe_first_dense:
+        p["first_layers"] = _stack_init(ks[1], cfg, "dense_ffn_moe_arch",
+                                        cfg.moe_first_dense)
+    p["layers"] = _stack_init(ks[2], cfg, kind, n_scan)
+    p["final_norm"] = L.init_rmsnorm(cfg.d_model)
+    if cfg.family == "encdec":
+        p["encoder"] = _stack_init(ks[3], cfg, "enc", cfg.encoder_layers)
+        p["enc_norm"] = L.init_rmsnorm(cfg.d_model)
+        p["enc_normb"] = Annotated(jnp.zeros((cfg.d_model,), jnp.float32),
+                                   ("embed",))
+    if cfg.family == "vlm":
+        p["patch_proj"] = L.dense_init(ks[4], (cfg.d_model, cfg.d_model),
+                                       ("fsdp", "embed"), L.dtype_of(cfg))
+    return split_annotated(p)
+
+
+# ================================================================= block apply
+def _apply_block(p, x, cfg: ModelConfig, kind: str, *, positions, cache=None,
+                 cross_kv=None, rnn_state=None, decode=False):
+    """Returns (x, aux, new_cache, new_rnn_state)."""
+    aux = jnp.float32(0.0)
+    new_cache, new_rnn = None, None
+
+    if kind == "rwkv":
+        tm_state = rnn_state["S"] if rnn_state else None
+        tm_prev = rnn_state["tm_prev"] if rnn_state else None
+        cm_prev = rnn_state["cm_prev"] if rnn_state else None
+        h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        y, S2, tm_last = R.rwkv_time_mix(p["tmix"], h, cfg, state=tm_state,
+                                         shift_prev=tm_prev, chunked=not decode)
+        x = x + y
+        h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        y, cm_last = R.rwkv_channel_mix(p["cmix"], h, shift_prev=cm_prev)
+        x = x + y
+        if rnn_state is not None:
+            new_rnn = {"S": S2, "tm_prev": tm_last, "cm_prev": cm_last}
+        return x, aux, new_cache, new_rnn
+
+    if kind in ("enc", "dec"):
+        h = L.layernorm(x, p["ln1"], p["lnb1"], cfg.norm_eps)
+        y, new_cache = L.attention(p["attn"], h, cfg, positions=positions,
+                                   causal=(kind == "dec"), cache=cache)
+        x = x + y
+        if kind == "dec":
+            h = L.layernorm(x, p["ln3"], p["lnb3"], cfg.norm_eps)
+            y, _ = L.attention(p["xattn"], h, cfg, positions=positions,
+                               cross_kv=cross_kv)
+            x = x + y
+        h = L.layernorm(x, p["ln2"], p["lnb2"], cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h)
+        return x, aux, new_cache, new_rnn
+
+    # pre-norm self-attention families
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind == "hybrid":
+        attn_y, new_cache = L.attention(p["attn"], h, cfg, positions=positions,
+                                        cache=cache)
+        ssd_state = rnn_state["ssd"] if rnn_state else None
+        ssd_y, S2 = R.ssd_mix(p["ssd"], h, cfg, state=ssd_state,
+                              chunked=not decode)
+        # hymba: normalize both heads' outputs, then average
+        y = 0.5 * (L.rmsnorm(attn_y, p["ln_attn_out"], cfg.norm_eps)
+                   + L.rmsnorm(ssd_y, p["ln_ssd_out"], cfg.norm_eps))
+        x = x + y
+        if rnn_state is not None:
+            new_rnn = {"ssd": S2}
+    else:
+        y, new_cache = L.attention(p["attn"], h, cfg, positions=positions,
+                                   cache=cache)
+        x = x + y
+
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        # routing gathers index the seq dim: keep it unsharded here (batch-only
+        # sharding) or the partitioner replicates the token table fleet-wide
+        h = shard(h, ("batch", "seq", "embed"))
+        y, aux = M.moe_ffn(p["moe"], h, cfg)
+        y = shard(y, ("batch", "act_seq", "embed"))
+    else:
+        y = L.mlp(p["mlp"], h)
+    x = x + y
+    return x, aux, new_cache, new_rnn
+
+
+# ================================================================== backbones
+def _scan_blocks(params_layers, x, cfg: ModelConfig, kind: str, *, positions,
+                 caches=None, cross_kv=None, rnn_states=None, decode=False,
+                 remat: bool):
+    """lax.scan over the stacked layer params (+ per-layer cache/state)."""
+
+    def body(carry, inp):
+        x, aux_sum = carry
+        p, cache, rnn = inp
+        x = shard(x, ("batch", "act_seq", "embed"))
+        x, aux, new_cache, new_rnn = _apply_block(
+            p, x, cfg, kind, positions=positions, cache=cache,
+            cross_kv=cross_kv, rnn_state=rnn, decode=decode)
+        return (x, aux_sum + aux), (new_cache, new_rnn)
+
+    fn = jax.checkpoint(body) if remat else body
+    (x, aux), (new_caches, new_rnns) = jax.lax.scan(
+        fn, (x, jnp.float32(0.0)), (params_layers, caches, rnn_states))
+    return x, aux, new_caches, new_rnns
+
+
+# ==================================================================== Model
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ----------------------------------------------------------------- init
+    def init(self, rng):
+        return init_params(rng, self.cfg)
+
+    # ------------------------------------------------------------- embedding
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"])
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            patches = jnp.einsum("bpd,de->bpe",
+                                 batch["patch_embeds"].astype(x.dtype),
+                                 params["patch_proj"])
+            x = jax.lax.dynamic_update_slice(x, patches, (0, 0, 0))
+        return x
+
+    def _positions(self, batch, seq, offset=0):
+        cfg = self.cfg
+        b = batch["tokens"].shape[0]
+        if cfg.m_rope:
+            if "positions3" in batch:
+                return batch["positions3"]
+            pos = jnp.arange(seq, dtype=jnp.int32)[None].repeat(b, 0) + offset
+            return jnp.stack([pos, pos, pos])
+        return jnp.arange(seq, dtype=jnp.int32)[None].repeat(b, 0) + offset
+
+    # ------------------------------------------------------------- encoders
+    def _encode(self, params, batch):
+        cfg = self.cfg
+        frames = batch["frames"].astype(L.dtype_of(cfg))       # (b, s, d) stub
+        b, s, d = frames.shape
+        pos = jnp.arange(s, dtype=jnp.int32)[None].repeat(b, 0)
+        # sinusoidal positions (whisper style)
+        half = d // 2
+        freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                        / max(half - 1, 1))
+        ang = pos[..., None].astype(jnp.float32) * freqs
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = frames + pe.astype(frames.dtype)
+        x, _, _, _ = _scan_blocks(params["encoder"], x, cfg, "enc",
+                                  positions=pos, caches=None, rnn_states=None,
+                                  remat=(cfg.remat == "full"))
+        return L.layernorm(x, params["enc_norm"], params["enc_normb"],
+                           cfg.norm_eps)
+
+    def _cross_kv(self, params, enc_out):
+        """Precompute per-layer cross K/V from encoder output (stacked)."""
+        cfg = self.cfg
+
+        def per_layer(pl):
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, pl["xattn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, pl["xattn"]["wv"])
+            return k, v
+
+        return jax.vmap(per_layer)(params["layers"])            # (L, b, s, kv, hd)
+
+    # ----------------------------------------------------------------- train
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        kind = _block_kind(cfg)
+        remat = cfg.remat == "full"
+
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch)
+            xk, xv = self._cross_kv(params, enc_out)
+            tokens = batch["tokens"]                            # decoder tokens
+            x = L.embed(params["embed"], tokens)
+            pos = self._positions(batch, tokens.shape[1])
+            x, aux, _, _ = self._dec_scan(params, x, pos, (xk, xv), remat)
+        else:
+            x = self._embed_inputs(params, batch)
+            pos = self._positions(batch, x.shape[1])
+            first_aux = jnp.float32(0.0)
+            if cfg.moe_first_dense:
+                x, first_aux, _, _ = _scan_blocks(
+                    params["first_layers"], x, cfg, "dense_ffn_moe_arch",
+                    positions=pos, remat=remat)
+            x, aux, _, _ = _scan_blocks(params["layers"], x, cfg, kind,
+                                        positions=pos, remat=remat)
+            aux = aux + first_aux
+
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        x = shard(x, ("batch", "act_seq", "embed"))
+        loss, ntok = _chunked_xent(params["embed"], x, batch["targets"], cfg)
+        total = loss + AUX_WEIGHT * aux
+        return total, {"loss": loss, "aux": aux, "tokens": ntok}
+
+    def _dec_scan(self, params, x, pos, cross_kv, remat):
+        """Decoder scan with per-layer cross-KV (stacked along the scan axis)."""
+        cfg = self.cfg
+        xk, xv = cross_kv
+
+        def body(carry, inp):
+            x, aux = carry
+            p, k_l, v_l = inp
+            x = shard(x, ("batch", "act_seq", "embed"))
+            x, a, _, _ = _apply_block(p, x, cfg, "dec", positions=pos,
+                                      cross_kv=(k_l, v_l))
+            return (x, aux + a), None
+
+        fn = jax.checkpoint(body) if remat else body
+        (x, aux), _ = jax.lax.scan(fn, (x, jnp.float32(0.0)),
+                                   (params["layers"], xk, xv))
+        return x, aux, None, None
+
+    # --------------------------------------------------------------- prefill
+    def prefill_fn(self, params, batch):
+        """Forward with cache writes; returns (last logits (b, v), decode state)."""
+        cfg = self.cfg
+        kind = _block_kind(cfg)
+        b = batch["tokens"].shape[0]
+
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch)
+            xk, xv = self._cross_kv(params, enc_out)
+            tokens = batch["tokens"]
+            s = tokens.shape[1]
+            x = L.embed(params["embed"], tokens)
+            pos = self._positions(batch, s)
+            caches = self._self_caches(b, cfg.decoder_len)
+
+            def body(x, inp):
+                p, cache, k_l, v_l = inp
+                x = shard(x, ("batch", "act_seq", "embed"))
+                h = L.layernorm(x, p["ln1"], p["lnb1"], cfg.norm_eps)
+                y, new_cache = L.attention(p["attn"], h, cfg, positions=pos,
+                                           causal=True, cache=cache)
+                x = x + y
+                h = L.layernorm(x, p["ln3"], p["lnb3"], cfg.norm_eps)
+                y, _ = L.attention(p["xattn"], h, cfg, positions=pos,
+                                   cross_kv=(k_l, v_l))
+                x = x + y
+                h = L.layernorm(x, p["ln2"], p["lnb2"], cfg.norm_eps)
+                x = x + L.mlp(p["mlp"], h)
+                return x, new_cache
+
+            x, new_caches = jax.lax.scan(
+                body, x, (params["layers"], caches, xk, xv))
+            state = {"kv": new_caches, "cross": (xk, xv)}
+        else:
+            x = self._embed_inputs(params, batch)
+            s = x.shape[1]
+            pos = self._positions(batch, s)
+            caches, rnn = self._inner_state(b, self._cache_len(s), s)
+            state = {}
+            if cfg.moe_first_dense:
+                fcaches = self._self_caches(b, self._cache_len(s),
+                                            n=cfg.moe_first_dense)
+                x, _, fkv, _ = _scan_blocks(params["first_layers"], x, cfg,
+                                            "dense_ffn_moe_arch", positions=pos,
+                                            caches=fcaches, remat=False)
+                state["kv_first"] = fkv
+            x, _, new_caches, new_rnn = _scan_blocks(
+                params["layers"], x, cfg, kind, positions=pos, caches=caches,
+                rnn_states=rnn, remat=False)
+            state.update(kv=new_caches, rnn=new_rnn)
+
+        x = L.rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], x.astype(L.dtype_of(cfg)))
+        return logits[:, 0].astype(jnp.float32), state
+
+    # ---------------------------------------------------------------- decode
+    def decode_fn(self, params, state, tokens, length):
+        """One token for every sequence in the batch. tokens: (b, 1)."""
+        cfg = self.cfg
+        kind = _block_kind(cfg)
+        b = tokens.shape[0]
+        x = L.embed(params["embed"], tokens)
+        if cfg.m_rope:
+            pos1 = jnp.full((b, 1), length, jnp.int32)
+            pos = jnp.stack([pos1, pos1, pos1])
+        else:
+            pos = jnp.full((b, 1), length, jnp.int32)
+
+        if cfg.family == "encdec":
+            xk, xv = state["cross"]
+
+            def body(x, inp):
+                p, cache, k_l, v_l = inp
+                h = L.layernorm(x, p["ln1"], p["lnb1"], cfg.norm_eps)
+                y, new_cache = L.attention(p["attn"], h, cfg, positions=pos,
+                                           causal=True, cache=cache)
+                x = x + y
+                h = L.layernorm(x, p["ln3"], p["lnb3"], cfg.norm_eps)
+                y, _ = L.attention(p["xattn"], h, cfg, positions=pos,
+                                   cross_kv=(k_l, v_l))
+                x = x + y
+                h = L.layernorm(x, p["ln2"], p["lnb2"], cfg.norm_eps)
+                x = x + L.mlp(p["mlp"], h)
+                return x, new_cache
+
+            x, new_caches = jax.lax.scan(body, x, (params["layers"],
+                                                   state["kv"], xk, xv))
+            new_state = {"kv": new_caches, "cross": state["cross"]}
+        else:
+            caches, rnn = state.get("kv"), state.get("rnn")
+            new_state = {}
+            if cfg.moe_first_dense:
+                x, _, fkv, _ = _scan_blocks(params["first_layers"], x, cfg,
+                                            "dense_ffn_moe_arch", positions=pos,
+                                            caches=state["kv_first"],
+                                            remat=False, decode=True)
+                new_state["kv_first"] = fkv
+            x, _, new_caches, new_rnn = _scan_blocks(
+                params["layers"], x, cfg, kind, positions=pos, caches=caches,
+                rnn_states=rnn, remat=False, decode=True)
+            new_state.update(kv=new_caches, rnn=new_rnn)
+
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], x.astype(L.dtype_of(cfg)))
+        return logits[:, 0].astype(jnp.float32), new_state
+
+    # ------------------------------------------------------- state factories
+    def _cache_len(self, seq: int) -> int:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return 0
+        base = seq + cfg.cache_headroom
+        if cfg.window > 0:
+            return min(cfg.window, base)
+        return base
+
+    def _self_caches(self, b, cache_len, n=None):
+        cfg = self.cfg
+        if n is None:
+            n = cfg.n_layers - cfg.moe_first_dense
+        dt = L.cache_dtype(cfg)
+        z = jnp.zeros((n, b, cache_len, cfg.n_kv, cfg.head_dim), dt)
+        return L.KVCache(k=z, v=z, length=jnp.zeros((n,), jnp.int32))
+
+    def _inner_state(self, b, cache_len, seq):
+        cfg = self.cfg
+        kind = _block_kind(cfg)
+        n = cfg.n_layers - cfg.moe_first_dense
+        caches = None
+        rnn = None
+        if kind in ("dense", "moe"):
+            caches = self._self_caches(b, cache_len)
+        elif kind == "hybrid":
+            caches = self._self_caches(b, cache_len)
+            rnn = {"ssd": jnp.zeros((n, b, cfg.n_heads, cfg.ssm_state,
+                                     cfg.head_dim), jnp.float32)}
+        elif kind == "rwkv":
+            d = cfg.d_model
+            dt = L.dtype_of(cfg)
+            rnn = {
+                "S": jnp.zeros((n, b, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                               jnp.float32),
+                "tm_prev": jnp.zeros((n, b, 1, d), dt),
+                "cm_prev": jnp.zeros((n, b, 1, d), dt),
+            }
+        return caches, rnn
+
+    # ------------------------------------------------------------ input specs
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input (dry-run, no alloc)."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32, f = jnp.int32, jnp.dtype(cfg.dtype)
+        sds = jax.ShapeDtypeStruct
+        if shape.mode == "train":
+            out = {"tokens": sds((b, s), i32), "targets": sds((b, s), i32)}
+            if cfg.family == "encdec":
+                out = {"frames": sds((b, s, cfg.d_model), f),
+                       "tokens": sds((b, cfg.decoder_len), i32),
+                       "targets": sds((b, cfg.decoder_len), i32)}
+            if cfg.family == "vlm":
+                out["patch_embeds"] = sds((b, VLM_PATCHES, cfg.d_model), f)
+                out["positions3"] = sds((3, b, s), i32)
+            return out
+        if shape.mode == "prefill":
+            out = {"tokens": sds((b, s), i32)}
+            if cfg.family == "encdec":
+                out = {"frames": sds((b, s, cfg.d_model), f),
+                       "tokens": sds((b, cfg.decoder_len), i32)}
+            if cfg.family == "vlm":
+                out["patch_embeds"] = sds((b, VLM_PATCHES, cfg.d_model), f)
+                out["positions3"] = sds((3, b, s), i32)
+            return out
+        return {"tokens": sds((b, 1), i32)}
+
+    def decode_state_specs(self, shape: ShapeConfig):
+        """Decode-state stand-ins matching prefill_fn's output structure.
+
+        Built with eval_shape — no allocation, safe for 500k-token cache specs.
+        """
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+
+        def make():
+            if cfg.family == "encdec":
+                n = cfg.n_layers
+                dt = L.dtype_of(cfg)
+                xk = jnp.zeros((n, b, s, cfg.n_kv, cfg.head_dim), dt)
+                return {"kv": self._self_caches(b, cfg.decoder_len),
+                        "cross": (xk, xk)}
+            state = {}
+            if cfg.moe_first_dense:
+                state["kv_first"] = self._self_caches(
+                    b, self._cache_len(s), n=cfg.moe_first_dense)
+            caches, rnn = self._inner_state(b, self._cache_len(s), s)
+            state.update(kv=caches, rnn=rnn)
+            return state
+
+        return jax.eval_shape(make)
+
+
+# ------------------------------------------------------------- chunked loss
+def _chunked_xent(embed_params, x, targets, cfg: ModelConfig):
+    """Cross-entropy without materializing full-seq logits (seq-chunked).
+
+    Big-vocab models (moonshot: 163840) would otherwise hold (b, s, v) f32.
+    Targets < 0 are masked (padding).
+    """
+    b, s, d = x.shape
+    n_chunks = math.gcd(LOSS_CHUNKS, s)
+    c = s // n_chunks
+    xc = x.reshape(b, n_chunks, c, d).swapaxes(0, 1)
+    tc = targets.reshape(b, n_chunks, c).swapaxes(0, 1)
+
+    def one(chunk):
+        xb, tb = chunk
+        logits = L.unembed(embed_params, xb).astype(jnp.float32)   # (b,c,v)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        ll = jnp.take_along_axis(logits, jnp.maximum(tb, 0)[..., None],
+                                 axis=-1)[..., 0]
+        mask = (tb >= 0).astype(jnp.float32)
+        return jnp.sum((lse - ll) * mask), jnp.sum(mask)
+
+    losses, counts = jax.lax.map(one, (xc, tc))
+    ntok = jnp.maximum(jnp.sum(counts), 1.0)
+    return jnp.sum(losses) / ntok, jnp.sum(counts)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded sort-based dispatch,
+expert-parallel einsums, load-balancing auxiliary loss.
+
+Dispatch is gather/scatter based (tokens sorted by expert, truncated at capacity)
+— the memory-lean encoding that shards cleanly: with "experts" -> "model" the expert
+einsum becomes expert-parallel (a2a-style redistribution inserted by SPMD); when the
+expert count does not divide the axis (mixtral's 8 on a 16-way axis) the rules fall
+back to tensor-parallel expert MLPs ("mlp" -> "model") automatically.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding import Annotated, shard
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+    return {
+        "router": L.dense_init(ks[0], (d, e), ("fsdp", "experts"), jnp.float32),
+        "wi": Annotated(jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                        .astype(dt) * std, ("experts", "fsdp", "mlp")),
+        "wg": Annotated(jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                        .astype(dt) * std, ("experts", "fsdp", "mlp")),
+        "wo": Annotated(jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                        .astype(dt) / math.sqrt(f), ("experts", "mlp", "fsdp")),
+    }
+
+
+def moe_ffn(p, x, cfg: ModelConfig):
+    """x: (b, s, d) -> (y, aux_loss). Capacity per row = cf * s * top_k / E.
+
+    Dispatch is PER BATCH ROW (gather/scatter indices stay < s), so the sharded
+    batch axis survives the routing untouched — flattening (b, s) together would
+    force SPMD to replicate the token table across the fleet (an "involuntary
+    full rematerialization" in the partitioner, observed in the dry-run; see
+    EXPERIMENTS.md §Perf for before/after).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                  # (b,s,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch/Mixtral form, global means)
+    me = jnp.mean(probs, axis=(0, 1))                              # (e,)
+    ce = jnp.mean(
+        (jax.nn.one_hot(gate_idx, e).sum(axis=2) > 0).astype(jnp.float32),
+        axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    cap = max(int(cfg.capacity_factor * s * k / e), 1)
+    cap = (cap + 127) // 128 * 128 if cap >= 128 else (cap + 7) // 8 * 8
+    cap = min(cap, s * k)        # an expert can never see more than s*k slots
+    cap = max(cap, 1)            # decode: s*k tiny -> minimal but nonzero
+
+    flat_expert = gate_idx.reshape(b, s * k)
+    tok_ids = jnp.arange(s * k, dtype=jnp.int32) // k              # (s*k,)
+    flat_gate = gate_vals.reshape(b, s * k)
+
+    def route_row(fe, fg, xrow):
+        order = jnp.argsort(fe, stable=True)
+        se, sg = fe[order], fg[order]
+        stok = tok_ids[order]
+        grp_start = jnp.searchsorted(se, se, side="left")
+        pos = jnp.arange(s * k, dtype=jnp.int32) - grp_start
+        keep = pos < cap
+        slot = jnp.where(keep, se * cap + pos, e * cap)            # OOB -> drop
+        # empty slots keep gate 0 and point at token 0 (masked by the gate at
+        # combine time) — no sentinel row, so the gather operand keeps shape
+        # (s, d) and partitions cleanly.
+        tok_of_slot = jnp.zeros((e * cap,), jnp.int32).at[slot].set(
+            stok, mode="drop")
+        gate_of_slot = jnp.zeros((e * cap,), jnp.float32).at[slot].set(
+            sg, mode="drop")
+        xe = xrow[tok_of_slot] * (gate_of_slot > 0)[:, None].astype(xrow.dtype)
+        return xe.reshape(e, cap, d), tok_of_slot, gate_of_slot
+
+    flat_expert = shard(flat_expert, ("batch", "seq"))
+    flat_gate = shard(flat_gate, ("batch", "seq"))
+    xe, tok_of_slot, gate_of_slot = jax.vmap(route_row)(
+        flat_expert, flat_gate, x)                                 # (b,e,cap,d)
+
+    # pin the activation shardings so the partitioner gathers the (small, fsdp)
+    # expert weights instead of re-sharding the (huge) token activations
+    xe = shard(xe, ("batch", "experts", "expert_cap", "embed"))
+    tok_of_slot = shard(tok_of_slot, ("batch", "seq"))
+    gate_of_slot = shard(gate_of_slot, ("batch", "seq"))
+    h = jnp.einsum("becd,edf->becf", xe, p["wi"])
+    g = jnp.einsum("becd,edf->becf", xe, p["wg"])
+    h = shard(h, ("batch", "experts", "expert_cap", "mlp"))
+    g = shard(g, ("batch", "experts", "expert_cap", "mlp"))
+    y = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * h, p["wo"])  # (b,e,cap,d)
+    y = shard(y, ("batch", "experts", "expert_cap", "embed"))
+
+    def combine_row(yrow, tok, gate):
+        y_flat = yrow.reshape(e * cap, d).astype(jnp.float32) * gate[:, None]
+        return jnp.zeros((s, d), jnp.float32).at[tok].add(y_flat)
+
+    out = jax.vmap(combine_row)(y, tok_of_slot, gate_of_slot)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,136 @@
+"""Logical-axis sharding rules (MaxText-style, with divisibility-aware fallbacks).
+
+Every tensor in the model zoo carries a tuple of logical axis names. A ``Rules``
+mapping takes each logical name to an ordered list of mesh-axis candidates; the
+first candidate whose mesh-axis product divides the dimension (and whose mesh axes
+are not already consumed by an earlier dim of the same tensor) wins. This makes one
+rule set serve every architecture (25-head models simply fall back to unsharded
+heads while their MLPs stay tensor-parallel) and makes hillclimbing a rules edit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name -> ordered candidates; each candidate is a tuple of mesh axes
+Rules = Mapping[str, Sequence[tuple[str, ...]]]
+
+DEFAULT_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
+    # activations
+    "batch": (("pod", "data"), ("data",), ("pod",)),
+    "seq": (),                      # unsharded by default (full activations)
+    "act_seq": (("model",),),       # sequence-sharded saved activations / norms
+    "embed": (),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head": (),
+    "mlp": (("model",),),
+    "experts": (("model",),),
+    "expert_cap": (),
+    "vocab": (("model",),),
+    "seq_kv": (("model",),),        # decode KV-cache fallback axis
+    # weights
+    "fsdp": (("data",),),           # ZeRO-3 weight axis
+    "layers": (),                   # scan axis
+    "ssm_state": (),
+    "conv": (),
+}
+
+
+def spec_for(shape: Sequence[int], names: Sequence[str], rules: Rules,
+             mesh_shape: Mapping[str, int]) -> P:
+    """Resolve logical names to a PartitionSpec for a concrete shape + mesh."""
+    assert len(shape) == len(names), (shape, names)
+    used: set[str] = set()
+    parts = []
+    for dim, name in zip(shape, names):
+        pick = None
+        for cand in rules.get(name, ()):
+            if any(a in used or a not in mesh_shape for a in cand):
+                continue
+            prod = math.prod(mesh_shape[a] for a in cand)
+            if dim > 0 and dim % prod == 0 and prod > 1:
+                pick = cand
+                break
+        if pick is None:
+            parts.append(None)
+        else:
+            used.update(pick)
+            parts.append(pick[0] if len(pick) == 1 else pick)
+    return P(*parts)
+
+
+def constrain(x: jax.Array, names: Sequence[str], rules: Rules | None,
+              mesh: Mesh | None) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op outside a mesh)."""
+    if mesh is None or rules is None or mesh.empty:
+        return x
+    spec = spec_for(x.shape, names, rules, dict(zip(mesh.axis_names, mesh.devices.shape)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Trace-time sharding context: launcher sets it around jit tracing; model code
+# calls ``shard(x, names)``. Outside the context it is the identity, so tests
+# and single-device paths never touch mesh state.
+# ---------------------------------------------------------------------------
+import contextlib
+import threading
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, rules: Rules | None = None):
+    prev = getattr(_CTX, "val", None)
+    _CTX.val = (mesh, rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _CTX.val = prev
+
+
+def current_rules() -> Rules | None:
+    ctx = getattr(_CTX, "val", None)
+    return ctx[1] if ctx else None
+
+
+def shard(x: jax.Array, names: Sequence[str]) -> jax.Array:
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None:
+        return x
+    return constrain(x, names, ctx[1], ctx[0])
+
+
+def tree_specs(specs_names, shapes, rules: Rules, mesh: Mesh):
+    """Map a pytree of logical-name tuples + matching shapes -> NamedShardings."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(names, shaped):
+        return NamedSharding(mesh, spec_for(shaped.shape, names, rules, mesh_shape))
+
+    return jax.tree.map(one, specs_names, shapes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(s, str) for s in x))
+
+
+class Annotated:
+    """Carrier for (array-like, logical names). Used in init to emit spec trees."""
+
+    __slots__ = ("value", "names")
+
+    def __init__(self, value, names: tuple[str, ...]):
+        self.value = value
+        self.names = names
+
+
+def split_annotated(tree):
+    """Annotated pytree -> (values pytree, names pytree)."""
+    leaves_is = lambda x: isinstance(x, Annotated)
+    values = jax.tree.map(lambda a: a.value, tree, is_leaf=leaves_is)
+    names = jax.tree.map(lambda a: a.names, tree, is_leaf=leaves_is)
+    return values, names

@@ -1,0 +1,185 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, all in seconds:
+  compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / link_bw
+
+``compiled.cost_analysis()`` reports the *partitioned per-device* module, so the
+per-chip convention is native (verified in tests against analytic 6ND counts).
+Collective bytes are not in cost_analysis: we parse the post-SPMD HLO text and sum
+result-shape bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Conventions (documented, deterministic): all-reduce counts
+2x its payload (ring reduce-scatter + all-gather); others count their result
+bytes once. MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) gives the
+useful-compute ratio that flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,4096,6144]' -> bytes. Tuple shapes handled by the caller."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes per collective kind from post-SPMD HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result "<shape> op-name(" — find which collective this line defines
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        shapes_str, op = m.groups()
+        base = op.rstrip("-start").rstrip(".")
+        kind = None
+        for k in _COLLECTIVES:
+            if op == k or op == k + "-start" or op.startswith(k + "."):
+                kind = k
+                break
+        if kind is None:
+            continue
+        # result may be a tuple: (bf16[...], bf16[...])
+        total = sum(_shape_bytes(s) for s in re.findall(
+            r"[a-z0-9]+\[[0-9,]*\]", shapes_str))
+        out[kind] += total
+    return out
+
+
+def total_collective_bytes(per_kind: dict[str, int]) -> int:
+    tot = 0
+    for k, v in per_kind.items():
+        tot += 2 * v if k == "all-reduce" else v
+    return tot
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_by_kind: dict
+    model_flops_total: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW_PER_LINK
+
+    @property
+    def bottleneck(self) -> str:
+        t = {"compute": self.t_compute, "memory": self.t_memory,
+             "collective": self.t_collective}
+        return max(t, key=t.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs (remat & redundancy waste detector)."""
+        hlo_total = self.flops_per_chip * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / achievable step time (max of the three terms)."""
+        t_useful = (self.model_flops_total / self.chips) / PEAK_FLOPS_BF16
+        t_step = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_step if t_step else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops_total,
+            "hlo_flops_per_chip": self.flops_per_chip,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "coll_by_kind": self.coll_by_kind,
+        }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N*D (dense) or 6*N_active*D (MoE); D = tokens processed per step.
+
+    Train counts fwd+bwd (6); prefill counts fwd only (2); decode counts fwd for
+    global_batch single tokens. Enc-dec splits N across the two stacks since
+    they see different token counts (encoder: seq_len frames; decoder: the
+    448-token transcript).
+    """
+    n = cfg.active_param_count if cfg.n_experts else cfg.param_count
+    mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[shape.mode]
+    if cfg.encoder_layers:
+        frac_enc = cfg.encoder_layers / (cfg.encoder_layers + cfg.n_layers)
+        n_enc, n_dec = n * frac_enc, n * (1 - frac_enc)
+        if shape.mode == "decode":
+            return 2.0 * n_dec * shape.global_batch
+        d_enc = shape.global_batch * shape.seq_len
+        d_dec = shape.global_batch * cfg.decoder_len
+        return mult * (n_enc * d_enc + n_dec * d_dec)
+    if shape.mode == "decode":
+        return 2.0 * n * shape.global_batch
+    return mult * n * shape.global_batch * shape.seq_len
+
+
+def terms_from_artifacts(arch: str, shape_cfg: ShapeConfig, mesh_name: str,
+                         chips: int, cfg: ModelConfig, stablehlo_text: str,
+                         compiled_text: str) -> RooflineTerms:
+    """Loop-aware roofline terms (see hlocount.py for counting conventions).
+
+    compute/memory come from the pre-partition StableHLO (global shapes / chips);
+    collectives from the post-SPMD module (per-device shapes), both with while
+    trip-count multiplication. Memory adds one read of the resident parameters
+    per step (dot-operand traffic alone misses weight streaming when a dimension
+    folds into a fused op).
+    """
+    from repro.roofline import hlocount
+    sc = hlocount.stablehlo_costs(stablehlo_text)
+    per_kind = hlocount.collective_costs(compiled_text)
+    param_bytes = cfg.param_count * 2.0  # bf16 residents
+    return RooflineTerms(
+        arch=arch, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
+        flops_per_chip=sc["flops"] / chips,
+        bytes_per_chip=sc["dot_bytes"] / chips + param_bytes / chips,
+        coll_bytes_per_chip=float(total_collective_bytes(per_kind)),
+        coll_by_kind={k: float(v) for k, v in per_kind.items()},
+        model_flops_total=model_flops(cfg, shape_cfg),
+    )

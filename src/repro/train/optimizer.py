@@ -1,0 +1,74 @@
+"""AdamW with warmup + cosine decay and global-norm clipping (no external deps).
+
+Optimizer state is a pytree congruent with params (m, v in f32), so it shards with
+the same logical rules as the weights (ZeRO-style: the "fsdp" axes of the params
+shard the moments identically).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def init_opt_state(params, opt_dtype: str = "float32") -> OptState:
+    dt = jnp.dtype(opt_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def lr_schedule(step, tc: TrainConfig, total_steps: int = 10_000):
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / jnp.maximum(total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(params, grads, opt: OptState, tc: TrainConfig,
+                 total_steps: int = 10_000):
+    """Returns (new_params, new_opt, metrics). Grads may be bf16; math is f32."""
+    step = opt.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(step, tc, total_steps)
+    b1c = 1.0 - tc.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - tc.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = tc.b1 * m.astype(jnp.float32) + (1.0 - tc.b1) * g
+        v2 = tc.b2 * v.astype(jnp.float32) + (1.0 - tc.b2) * jnp.square(g)
+        mh = m2 / b1c
+        vh = v2 / b2c
+        delta = mh / (jnp.sqrt(vh) + tc.eps) + tc.weight_decay * p.astype(
+            jnp.float32)
+        p2 = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p2, m2.astype(m.dtype), v2.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt.m)
+    flat_v = jax.tree.leaves(opt.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(step=step, m=new_m, v=new_v), metrics

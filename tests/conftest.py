@@ -1,0 +1,34 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 device; only the
+dry-run (and the subprocess tests that exec it) get placeholder devices."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Engine, ScenarioBuilder, events as ev
+
+
+def t0t1_builder(*, wan_bw=2.0, n_flows=12, interval=25, flow_mb=40.0,
+                 lookahead=2):
+    """The paper's T0/T1 replication study, small: production at T0 generates
+    WAN transfers; arrival triggers analysis jobs at T1; results hit storage."""
+    b = ScenarioBuilder(max_cpu=4, queue_cap=8, max_link=4, max_flow=16)
+    t0 = b.add_regional_center(n_cpu=2, cpu_power=10.0, disk=500.0, tape=5000.0,
+                               tape_rate=5.0)
+    t1 = b.add_regional_center(n_cpu=2, cpu_power=8.0, disk=300.0, tape=3000.0,
+                               tape_rate=5.0)
+    wan = b.add_net_region(link_bws=[wan_bw, wan_bw], link_lats=[5, 5])
+    b.add_generator(
+        target_lp=wan, kind=ev.K_FLOW_START,
+        payload=[flow_mb, 0, -1, -1, t1["farm"], ev.K_JOB_SUBMIT,
+                 t1["storage"], ev.K_DATA_WRITE],
+        interval=interval, count=n_flows, start=0)
+    return b, dict(lookahead=lookahead, t_end=5000, pool_cap=256,
+                   work_per_mb=2.0)
+
+
+@pytest.fixture(scope="session")
+def t0t1_oracle():
+    from repro.core import run_sequential
+    b, kw = t0t1_builder()
+    world, own, init_ev, spec = b.build(n_agents=1, **kw)
+    return run_sequential(world, own, init_ev, spec)

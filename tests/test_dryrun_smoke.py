@@ -1,0 +1,128 @@
+"""Dry-run machinery tests.
+
+The 512-device production sweep runs out-of-band (launch/dryrun.py, results/);
+here we validate (a) the loop-aware HLO cost accounting against analytic counts,
+(b) the sharding-rule resolution, and (c) — in a subprocess so this process
+keeps its single device — that a small arch lowers + compiles under the
+production rules on an 8-device mesh with collectives present.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.sharding import DEFAULT_RULES, spec_for
+from repro.roofline.hlocount import stablehlo_costs
+from repro.roofline.analysis import model_flops
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config
+
+
+def test_stablehlo_costs_scan_exact():
+    def f(x, w):
+        def body(x, wi):
+            return jnp.tanh(x @ wi), None
+        x, _ = jax.lax.scan(body, x, w)
+        return x
+    x = jax.ShapeDtypeStruct((8, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((30, 256, 256), jnp.float32)
+    c = stablehlo_costs(jax.jit(f).lower(x, w).as_text())
+    assert c["flops"] == 30 * 2 * 8 * 256 * 256
+
+
+def test_stablehlo_costs_grad_remat_multiplier():
+    def h(x, w):
+        def body(x, wi):
+            return jnp.tanh(x @ wi), None
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, w)
+        return jnp.sum(x)
+    g = jax.grad(h, argnums=1)
+    c = stablehlo_costs(jax.jit(g).lower(
+        jnp.zeros((8, 256)), jnp.zeros((30, 256, 256))).as_text())
+    base = 30 * 2 * 8 * 256 * 256
+    assert c["flops"] == 4 * base          # fwd + remat-fwd + 2x bwd
+
+
+def test_spec_for_divisibility_fallbacks():
+    mesh = {"data": 16, "model": 16}
+    # heads=9 not divisible -> unsharded; mlp divisible -> model
+    s = spec_for((1536,), ("mlp",), DEFAULT_RULES, mesh)
+    assert s == jax.sharding.PartitionSpec("model")
+    s = spec_for((9, 64), ("heads", "head"), DEFAULT_RULES, mesh)
+    assert s == jax.sharding.PartitionSpec(None, None)
+    # batch folds pod+data when both present
+    mesh3 = {"pod": 2, "data": 16, "model": 16}
+    s = spec_for((256, 4096), ("batch", "seq"), DEFAULT_RULES, mesh3)
+    assert s == jax.sharding.PartitionSpec(("pod", "data"), None)
+    # one mesh axis never used twice in a tensor
+    s = spec_for((32, 32), ("heads", "mlp"), DEFAULT_RULES, mesh)
+    assert s == jax.sharding.PartitionSpec("model", None)
+
+
+def test_model_flops_conventions():
+    cfg = get_config("deepseek-7b")
+    t = model_flops(cfg, SHAPES["train_4k"])
+    # 6 * N * D around the nominal 7B params x 1M tokens = 4.2e16
+    assert 2e16 < t < 8e16
+    d = model_flops(cfg, SHAPES["decode_32k"])
+    assert d == 2.0 * cfg.param_count * 128
+
+
+@pytest.mark.slow
+def test_subprocess_small_mesh_compile():
+    """smollm train lowers+compiles on an 8-device (4,2) mesh with the
+    production sharding rules; collectives appear in the compiled module."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, json
+from repro.configs.base import SHAPES, TrainConfig
+from repro.configs.registry import smoke_config
+import dataclasses
+from repro.models.model import build_model
+from repro.models import sharding as sh
+import repro.launch.dryrun as D
+from repro.train.loop import make_train_step
+from repro.train.optimizer import init_opt_state
+
+cfg = dataclasses.replace(smoke_config("smollm-135m"), n_layers=4, d_model=128,
+                          n_heads=4, n_kv=2, d_ff=256, vocab=512, head_dim=32)
+model = build_model(cfg)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+rules = D.RULE_VARIANTS["baseline"]
+holder = {}
+def _v(r):
+    vals, names = model.init(r)
+    holder["n"] = names
+    return vals
+p_sds = jax.eval_shape(_v, jax.random.PRNGKey(0))
+p_sh = D.shardings_for(p_sds, holder["n"], mesh, rules)
+shape = dataclasses.replace(SHAPES["train_4k"], seq_len=256, global_batch=8)
+b_sds = model.input_specs(shape)
+b_sh = D.shardings_for(b_sds, D._input_names(b_sds), mesh, rules)
+o_sds = jax.eval_shape(init_opt_state, p_sds)
+o_sh = D.shardings_for(o_sds, type(o_sds)(step=(), m=holder["n"], v=holder["n"]),
+                       mesh, rules)
+with sh.sharding_ctx(mesh, rules):
+    step = make_train_step(model, TrainConfig())
+    comp = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                   donate_argnums=(0, 1)).lower(p_sds, o_sds, b_sds).compile()
+text = comp.as_text()
+print(json.dumps({
+    "ok": True,
+    "has_collectives": any(k in text for k in
+                           ("all-reduce", "all-gather", "reduce-scatter")),
+}))
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ok"] and res["has_collectives"]

@@ -1,0 +1,79 @@
+"""Hypothesis property tests: engine == oracle over randomized scenarios.
+
+The scenario STRUCTURE is fixed (same array shapes => one jit compilation,
+cached across examples); hypothesis drives every parameter: CPU powers, link
+bandwidths/latencies, generator rates/sizes, placement, lookahead.
+"""
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Engine, ScenarioBuilder, events as ev,
+                        merged_engine_trace, run_sequential)
+from repro.core import monitoring as mon
+
+scenario_params = st.fixed_dictionaries(dict(
+    p0=st.floats(1.0, 20.0),
+    p1=st.floats(1.0, 20.0),
+    bw0=st.floats(0.1, 8.0),
+    bw1=st.floats(0.1, 8.0),
+    lat=st.integers(1, 20),
+    interval=st.integers(5, 60),
+    size=st.floats(5.0, 120.0),
+    count=st.integers(2, 10),
+    lookahead=st.integers(1, 4),
+    wpm=st.floats(0.5, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+))
+
+
+def build(p, n_agents):
+    b = ScenarioBuilder(max_cpu=4, queue_cap=8, max_link=4, max_flow=16)
+    t0 = b.add_regional_center(n_cpu=2, cpu_power=p["p0"], disk=400.0,
+                               tape=4000.0, tape_rate=5.0)
+    t1 = b.add_regional_center(n_cpu=2, cpu_power=p["p1"], disk=250.0,
+                               tape=2500.0, tape_rate=5.0)
+    wan = b.add_net_region(link_bws=[p["bw0"], p["bw1"]],
+                           link_lats=[p["lat"], p["lat"]])
+    b.add_generator(target_lp=wan, kind=ev.K_FLOW_START,
+                    payload=[p["size"], 0, -1, -1, t1["farm"],
+                             ev.K_JOB_SUBMIT, t1["storage"], ev.K_DATA_WRITE],
+                    interval=p["interval"], count=p["count"])
+    rng = np.random.RandomState(p["seed"])
+    placement = rng.randint(0, n_agents, size=len(b._lps))
+    return b.build(n_agents=n_agents, lookahead=p["lookahead"], t_end=4000,
+                   pool_cap=256, work_per_mb=p["wpm"],
+                   placement=placement if n_agents > 1 else None)
+
+
+@settings(max_examples=12, deadline=None)
+@given(scenario_params)
+def test_random_scenarios_match_oracle(p):
+    world, own, init_ev, spec = build(p, 1)
+    ow, oc, otrace = run_sequential(world, own, init_ev, spec)
+
+    world, own, init_ev, spec = build(p, 2)
+    eng = Engine(world, own, init_ev, spec, trace_cap=4096)
+    stt = eng.run_local(max_windows=20000)
+    trace = merged_engine_trace(np.asarray(stt.trace), np.asarray(stt.trace_n))
+    assert trace == otrace
+    w = jax.tree.map(lambda x: np.asarray(x[0]), stt.world)
+    np.testing.assert_allclose(np.asarray(ow.sto_used), w.sto_used, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ow.lp_lvt), w.lp_lvt)
+    # conservative engine must never drop anything at these sizes
+    drops = np.asarray(stt.counters)[:, list(mon.DROP_COUNTERS)]
+    assert drops.sum() == 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(scenario_params)
+def test_lookahead_invariance_of_flow_accounting(p):
+    """Changing lookahead reorders windows but conserves flow accounting:
+    every started flow completes (or is still in flight at t_end)."""
+    world, own, init_ev, spec = build(p, 2)
+    stt = Engine(world, own, init_ev, spec).run_local(max_windows=20000)
+    c = np.asarray(stt.counters).sum(axis=0)
+    assert c[mon.C_FLOWS_DONE] <= c[mon.C_FLOWS_STARTED]
+    w = jax.tree.map(lambda x: np.asarray(x[0]), stt.world)
+    in_flight = int(w.flow_active.sum())
+    assert c[mon.C_FLOWS_STARTED] == c[mon.C_FLOWS_DONE] + in_flight

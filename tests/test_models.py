@@ -1,0 +1,166 @@
+"""Per-architecture smoke tests + decode/prefill consistency for all families."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.model as MM
+from repro.configs.base import SHAPES, TrainConfig, applicable_shapes
+from repro.configs.registry import ARCHS, get_config, smoke_config
+from repro.models.model import build_model
+from repro.train.loop import make_train_step
+from repro.train.optimizer import init_opt_state
+
+RNG = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=64, with_targets=True):
+    tok = jax.random.randint(RNG, (b, s), 0, cfg.vocab)
+    batch = {"tokens": tok}
+    if cfg.family == "encdec":
+        dec = jax.random.randint(RNG, (b, 8), 0, cfg.vocab)
+        batch = {"frames": jax.random.normal(RNG, (b, s, cfg.d_model),
+                                             jnp.float32),
+                 "tokens": dec}
+        if with_targets:
+            batch["targets"] = dec
+        return batch
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            RNG, (b, 16, cfg.d_model), jnp.float32)
+        pos = jnp.arange(s, dtype=jnp.int32)[None].repeat(b, 0)
+        batch["positions3"] = jnp.stack([pos, pos, pos])
+    if with_targets:
+        batch["targets"] = tok
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch, monkeypatch):
+    monkeypatch.setattr(MM, "VLM_PATCHES", 16)
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params, names = model.init(RNG)
+    # every param leaf has a matching logical-name tuple
+    flat_p = jax.tree.leaves(params)
+    flat_n = jax.tree.flatten(
+        names, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(s, str) for s in x))[0]
+    assert len(flat_p) == len(flat_n)
+    for p, n in zip(flat_p, flat_n):
+        assert p.ndim == len(n), (p.shape, n)
+
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert np.isfinite(float(loss))
+
+    step = jax.jit(make_train_step(model, TrainConfig(learning_rate=1e-3)))
+    opt = init_opt_state(params)
+    p2, opt2, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert int(opt2.step) == 1
+    # params actually moved
+    delta = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(arch, monkeypatch):
+    """prefill(s) + decode == prefill(s+1): the KV-cache/recurrent-state path
+    reproduces the full forward, for every architecture family."""
+    monkeypatch.setattr(MM, "VLM_PATCHES", 16)
+    # capacity_factor high enough to be dropless: token drops depend on the
+    # whole batch's routing, which legitimately differs between prefill(s) and
+    # prefill(s+1) — the test targets cache/state semantics, not drop policy.
+    cfg = dataclasses.replace(smoke_config(arch), dtype="float32",
+                              cache_headroom=8, capacity_factor=4.0)
+    model = build_model(cfg)
+    params, _ = model.init(RNG)
+    b, s = 2, 48
+    if cfg.family == "encdec":
+        frames = jax.random.normal(RNG, (b, 64, cfg.d_model), jnp.float32)
+        dec = jax.random.randint(RNG, (b, 9), 0, cfg.vocab)
+        batch_s = {"frames": frames, "tokens": dec[:, :8]}
+        batch_s1 = {"frames": frames, "tokens": dec}
+    else:
+        tok = jax.random.randint(RNG, (b, s + 1), 0, cfg.vocab)
+        batch_s = {"tokens": tok[:, :s]}
+        batch_s1 = {"tokens": tok}
+        if cfg.family == "vlm":
+            pe = jax.random.normal(RNG, (b, 16, cfg.d_model), jnp.float32)
+            pos = jnp.arange(s, dtype=jnp.int32)[None].repeat(b, 0)
+            pos1 = jnp.arange(s + 1, dtype=jnp.int32)[None].repeat(b, 0)
+            batch_s = {**batch_s, "patch_embeds": pe,
+                       "positions3": jnp.stack([pos] * 3)}
+            batch_s1 = {**batch_s1, "patch_embeds": pe,
+                        "positions3": jnp.stack([pos1] * 3)}
+
+    logits_s, state = jax.jit(model.prefill_fn)(params, batch_s)
+    next_tok = (batch_s1["tokens"][:, -1:])
+    length = jnp.int32(8 if cfg.family == "encdec" else s)
+    logits_d, _ = jax.jit(model.decode_fn)(params, state, next_tok, length)
+    logits_full, _ = jax.jit(model.prefill_fn)(params, batch_s1)
+
+    got = np.asarray(logits_d)
+    want = np.asarray(logits_full)
+    # window/SWA archs drop the oldest key when the cache slides: compare only
+    # when semantics align (cache >= context used by the full forward)
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_cover_all_applicable_shapes(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    for sname in applicable_shapes(cfg):
+        shape = SHAPES[sname]
+        specs = model.input_specs(shape)
+        assert "tokens" in specs
+        for v in specs.values():
+            assert all(d > 0 for d in v.shape)
+        if shape.mode == "decode":
+            st = model.decode_state_specs(shape)
+            assert st is not None
+            leaves = [x for x in jax.tree.leaves(st)
+                      if hasattr(x, "shape")]
+            assert leaves
+
+
+def test_long_500k_skips_are_exactly_the_quadratic_archs():
+    subq = {a for a in ARCHS if "long_500k" in applicable_shapes(get_config(a))}
+    assert subq == {"rwkv6-7b", "hymba-1.5b", "mixtral-8x22b"}
+
+
+def test_loss_decreases_on_structured_data():
+    """~3-layer model learns the synthetic Markov stream (data pipeline signal)."""
+    from repro.data import pipeline as dp
+    cfg = dataclasses.replace(smoke_config("smollm-135m"), n_layers=2,
+                              vocab=64, dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(RNG)
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(model, TrainConfig(learning_rate=3e-3,
+                                                      warmup_steps=5)))
+    dcfg = dp.DataConfig(vocab=64, seq_len=64, global_batch=8)
+    losses = []
+    for i in range(30):
+        batch = dp.batch_for_shard(dcfg, i, 0, 1)
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor >= top_k renormalized routing, most tokens route."""
+    cfg = dataclasses.replace(smoke_config("mixtral-8x22b"), dtype="float32",
+                              capacity_factor=2.0)
+    model = build_model(cfg)
+    params, _ = model.init(RNG)
+    batch = make_batch(cfg, b=2, s=64)
+    loss, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(metrics["aux"]) >= 1.0 - 1e-3   # >= 1 by Cauchy-Schwarz

@@ -1,0 +1,67 @@
+"""Max–min fairness properties (hypothesis) for the interrupt-based traffic model."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.network import (completion_times, incidence, maxmin_rates,
+                                progress_flows)
+
+flows = st.integers(2, 12)
+links = st.integers(1, 5)
+
+
+@st.composite
+def problem(draw):
+    f = draw(flows)
+    l = draw(links)
+    rng = np.random.RandomState(draw(st.integers(0, 2**31 - 1)))
+    routes = rng.randint(-1, l, size=(f, 3)).astype(np.int32)
+    # each active flow needs >= 1 real hop
+    routes[:, 0] = rng.randint(0, l, size=f)
+    bw = (rng.rand(l) * 10 + 0.1).astype(np.float32)
+    active = rng.rand(f) > 0.3
+    return routes, bw, active
+
+
+@settings(max_examples=40, deadline=None)
+@given(problem())
+def test_maxmin_invariants(p):
+    routes, bw, active = p
+    inc = incidence(jnp.asarray(routes), bw.shape[0])
+    rates = np.asarray(maxmin_rates(inc, jnp.asarray(bw), jnp.asarray(active)))
+    inc_n = np.asarray(inc)
+
+    # inactive flows get zero
+    assert np.all(rates[~active] == 0)
+    # nonnegative
+    assert np.all(rates >= 0)
+    # link capacities respected (small epsilon for f32)
+    link_load = inc_n[active].T @ rates[active] if active.any() else np.zeros(
+        bw.shape)
+    assert np.all(link_load <= bw * (1 + 1e-4) + 1e-4)
+    # max-min: every active flow is bottlenecked — it crosses some link that is
+    # (a) saturated and (b) where it gets >= the share of every other flow
+    for i in np.where(active)[0]:
+        ok = False
+        for l_ in np.where(inc_n[i] > 0)[0]:
+            others = [j for j in np.where(active)[0] if inc_n[j, l_] > 0]
+            saturated = (inc_n[:, l_][active] @ rates[active]
+                         >= bw[l_] * (1 - 1e-3) - 1e-4)
+            if saturated and all(rates[i] >= rates[j] * (1 - 1e-3) - 1e-4
+                                 for j in others):
+                ok = True
+                break
+        assert ok, (i, rates, bw, inc_n)
+
+
+def test_progress_and_completion():
+    rem = jnp.asarray([10.0, 5.0, 7.0])
+    rate = jnp.asarray([1.0, 0.0, 2.0])
+    tlast = jnp.asarray([0, 0, 0], jnp.int32)
+    active = jnp.asarray([True, True, False])
+    rem2, tlast2 = progress_flows(rem, rate, tlast, active, jnp.int32(3))
+    np.testing.assert_allclose(np.asarray(rem2), [7.0, 5.0, 7.0])
+    t_fin = completion_times(rem2, rate, tlast2, active)
+    assert int(t_fin[0]) == 3 + 7          # ceil(7/1)
+    assert int(t_fin[1]) > 10**8           # starved flow: effectively never
+    assert int(t_fin[2]) > 10**8           # inactive

@@ -1,0 +1,94 @@
+"""Paper §4.1 scheduling algorithm: APSP correctness, placement properties,
+run clustering, monitoring-driven rebalance."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scheduler as sched
+
+
+def floyd_warshall(w):
+    d = w.copy()
+    n = d.shape[0]
+    for k in range(n):
+        for i in range(n):
+            for j in range(n):
+                d[i, j] = min(d[i, j], d[i, k] + d[k, j])
+    return d
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 9), st.integers(0, 2**31 - 1))
+def test_apsp_matches_floyd_warshall(n, seed):
+    rng = np.random.RandomState(seed)
+    perf = rng.rand(n).astype(np.float32) * 10
+    w = np.asarray(sched.performance_graph(jnp.asarray(perf)))
+    d_ref = floyd_warshall(w.astype(np.float64))
+    d = np.asarray(sched.apsp(jnp.asarray(w)))
+    np.testing.assert_allclose(d, d_ref, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 2**31 - 1))
+def test_choose_agent_is_paper_formula(n, seed):
+    rng = np.random.RandomState(seed)
+    perf = rng.rand(n).astype(np.float32) * 10
+    part = rng.rand(n) > 0.5
+    a = int(sched.choose_agent(jnp.asarray(perf), jnp.asarray(part)))
+    # reference: mean shortest path to participating nodes, argmin
+    w = np.asarray(sched.performance_graph(jnp.asarray(perf)))
+    d = floyd_warshall(w.astype(np.float64))
+    if part.any():
+        scores = d[:, part].mean(axis=1)
+    else:
+        scores = perf
+    assert a == int(np.argmin(scores))
+
+
+def test_first_placement_prefers_least_loaded():
+    perf = jnp.asarray([5.0, 1.0, 9.0])
+    a = int(sched.choose_agent(perf, jnp.zeros(3, bool)))
+    assert a == 1
+
+
+def test_same_run_clusters():
+    """LPs of one run land near each other (paper: 'group the logical processes
+    belonging to the same simulation run into a minimum cluster')."""
+    perf = jnp.asarray([1.0, 1.05, 20.0, 20.0])
+    placement = np.asarray(sched.plan_placement(perf, jnp.zeros(6, jnp.int32), 4))
+    # all six LPs of the single run avoid the two heavily loaded agents
+    assert set(placement.tolist()) <= {0, 1}
+
+
+def test_rebalance_triggers_on_hot_agent():
+    from repro.core import monitoring as mon
+    a = 4
+    counters = np.zeros((a, mon.N_COUNTERS), np.int32)
+    counters[:, mon.C_WINDOWS] = 10
+    counters[0, mon.C_EVENTS] = 10_000          # agent 0 is hot
+    counters[1:, mon.C_EVENTS] = 10
+    lp_agent = jnp.zeros(8, jnp.int32)          # everything on agent 0
+    lp_ctx = jnp.zeros(8, jnp.int32)
+    new = np.asarray(sched.rebalance(jnp.asarray(counters), lp_agent, lp_ctx,
+                                     jnp.zeros(a)))
+    assert not np.all(new == 0)                 # moved off the hot agent
+
+    # balanced fleet: placement untouched
+    counters[:, mon.C_EVENTS] = 100
+    same = np.asarray(sched.rebalance(jnp.asarray(counters), lp_agent, lp_ctx,
+                                      jnp.zeros(a)))
+    np.testing.assert_array_equal(same, np.zeros(8))
+
+
+def test_straggler_monitor_detects_and_replans():
+    from repro.ft.straggler import StragglerMonitor
+    m = StragglerMonitor(n_hosts=4)
+    for step in range(5):
+        for h in range(4):
+            m.record(h, step, 1.0 if h != 2 else 3.0)
+    assert m.stragglers() == [2]
+    plan = np.asarray(m.replacement_plan(np.zeros(6, np.int32),
+                                         np.zeros(6, np.int32)))
+    assert 2 not in set(plan.tolist())
+    rec = m.eviction_recommendation()
+    assert rec["evict_hosts"] == [2]

@@ -1,0 +1,180 @@
+"""End-to-end behaviour of the distributed DES against the sequential oracle.
+
+These are the load-bearing correctness tests for the paper's contribution: the
+conservative-window engine (any number of agents) must execute the exact same
+event trace as a sequential heapq DES, and replicated component state must end
+identical. Covers C1 (LPs), C2 (conservative sync), C4 (replication), C5
+(component models incl. the interrupt-based network), C6 (contexts) and the
+§4.1 scheduler migration path.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import t0t1_builder
+from repro.core import (Engine, ScenarioBuilder, events as ev,
+                        merged_engine_trace, run_sequential)
+from repro.core import monitoring as mon
+
+
+def run_engine(n_agents, trace_cap=4096, **kw_over):
+    b, kw = t0t1_builder()
+    kw.update(kw_over)
+    world, own, init_ev, spec = b.build(n_agents=n_agents, **kw)
+    eng = Engine(world, own, init_ev, spec, trace_cap=trace_cap)
+    st = eng.run_local(max_windows=20000)
+    return eng, st
+
+
+@pytest.mark.parametrize("n_agents", [1, 2, 4])
+def test_engine_matches_oracle(n_agents, t0t1_oracle):
+    ow, oc, otrace = t0t1_oracle
+    eng, st = run_engine(n_agents)
+    trace = merged_engine_trace(np.asarray(st.trace), np.asarray(st.trace_n))
+    assert trace == otrace
+    w = jax.tree.map(lambda x: np.asarray(x[0]), st.world)
+    np.testing.assert_allclose(np.asarray(ow.sto_used), w.sto_used, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ow.lp_lvt), w.lp_lvt)
+    np.testing.assert_array_equal(np.asarray(ow.cpu_busy), w.cpu_busy)
+    np.testing.assert_allclose(np.asarray(ow.flow_rem), w.flow_rem, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_agents", [2, 4])
+def test_no_buffer_drops(n_agents):
+    _, st = run_engine(n_agents)
+    drops = np.asarray(st.counters)[:, list(mon.DROP_COUNTERS)]
+    assert drops.sum() == 0, drops
+
+
+def test_interrupt_scheme_fires(t0t1_oracle):
+    """The paper's Fig-2 mechanism: low bandwidth => overlapping flows =>
+    stale (interrupted) completion events and bandwidth re-shares."""
+    _, _, _ = t0t1_oracle
+    _, st_hi = run_engine(1, trace_cap=1)
+    b, kw = t0t1_builder(wan_bw=0.2)    # starve the WAN
+    world, own, init_ev, spec = b.build(n_agents=1, **kw)
+    st_lo = Engine(world, own, init_ev, spec).run_local(max_windows=20000)
+    c_hi = np.asarray(st_hi.counters)[0]
+    c_lo = np.asarray(st_lo.counters)[0]
+    assert c_lo[mon.C_STALE] > c_hi[mon.C_STALE]
+    assert c_lo[mon.C_EVENTS] > c_hi[mon.C_EVENTS]
+
+
+def test_storage_migration_triggers():
+    """C5: db server auto-migrates to mass storage when disk passes 90%."""
+    b = ScenarioBuilder()
+    sto = b.add_storage(disk_cap=100.0, tape_cap=1000.0, tape_rate=10.0)
+    b.add_generator(target_lp=sto, kind=ev.K_DATA_WRITE, payload=[30.0],
+                    interval=10, count=5)
+    world, own, init_ev, spec = b.build(n_agents=1, lookahead=1, t_end=1000)
+    eng = Engine(world, own, init_ev, spec)
+    st = eng.run_local()
+    c = np.asarray(st.counters)[0]
+    assert c[mon.C_MIGRATIONS] >= 1
+    w = jax.tree.map(lambda x: np.asarray(x[0]), st.world)
+    assert w.sto_used[0, 1] > 0            # tape received data
+    assert w.sto_used[0, 0] <= 100.0
+
+
+def test_job_queueing_fifo():
+    """Farm with 1 CPU and burst arrivals must queue and finish all jobs."""
+    b = ScenarioBuilder(max_cpu=2, queue_cap=16)
+    farm = b.add_farm([5.0])
+    for i in range(6):
+        b.add_event(time=1, kind=ev.K_JOB_SUBMIT, src=farm, dst=farm,
+                    payload=[50.0, 1.0, -1, 0, 0.0])
+    world, own, init_ev, spec = b.build(n_agents=1, lookahead=1, t_end=10_000)
+    ow, oc, otrace = run_sequential(world, own, init_ev, spec)
+    assert int(np.asarray(oc)[mon.C_JOBS_DONE]) == 6
+    st = Engine(world, own, init_ev, spec).run_local()
+    assert int(np.asarray(st.counters)[0, mon.C_JOBS_DONE]) == 6
+
+
+def test_contexts_isolated():
+    """C6: two simulation runs on the same fleet do not interact; the combined
+    engine reproduces the oracle and each context's components evolve as in a
+    solo build."""
+    def add_run(b, ctx, bw):
+        t1 = b.add_regional_center(n_cpu=2, cpu_power=8.0, disk=300.0,
+                                   tape=3000.0, tape_rate=5.0, ctx=ctx)
+        wan = b.add_net_region(link_bws=[bw], link_lats=[5], ctx=ctx)
+        b.add_generator(target_lp=wan, kind=ev.K_FLOW_START,
+                        payload=[40.0, 0, -1, -1, t1["farm"], ev.K_JOB_SUBMIT,
+                                 t1["storage"], ev.K_DATA_WRITE],
+                        interval=25, count=8, ctx=ctx)
+        return t1
+
+    b2 = ScenarioBuilder(max_cpu=4, max_flow=16)
+    add_run(b2, 0, 2.0)
+    add_run(b2, 1, 0.5)
+    world, own, init_ev, spec = b2.build(n_agents=2, n_ctx=2, lookahead=2,
+                                         t_end=4000, pool_cap=256,
+                                         work_per_mb=2.0)
+    ow, oc, otrace = run_sequential(world, own, init_ev, spec)
+    eng = Engine(world, own, init_ev, spec, trace_cap=8192)
+    st = eng.run_local(max_windows=20000)
+    trace = merged_engine_trace(np.asarray(st.trace), np.asarray(st.trace_n))
+    assert trace == otrace
+
+    # solo build of run-0 must match run-0's component rows in the combined run
+    b1 = ScenarioBuilder(max_cpu=4, max_flow=16)
+    add_run(b1, 0, 2.0)
+    w1, own1, ev1, spec1 = b1.build(n_agents=1, lookahead=2, t_end=4000,
+                                    pool_cap=256, work_per_mb=2.0)
+    ow1, _, _ = run_sequential(w1, own1, ev1, spec1)
+    w = jax.tree.map(lambda x: np.asarray(x[0]), st.world)
+    np.testing.assert_allclose(np.asarray(ow1.sto_used)[0], w.sto_used[0],
+                               rtol=1e-6)
+
+
+def test_migration_preserves_execution():
+    """§4.1 dynamic re-decomposition: re-homing LPs mid-run (replicated state
+    means only pending events move) must not change the simulation."""
+    ow, oc, otrace = None, None, None
+    b, kw = t0t1_builder()
+    world, own, init_ev, spec = b.build(n_agents=1, **kw)
+    ow, oc, otrace = run_sequential(world, own, init_ev, spec)
+
+    b, kw = t0t1_builder()
+    world, own, init_ev, spec = b.build(n_agents=4, **kw)
+    eng = Engine(world, own, init_ev, spec, trace_cap=4096)
+    st = eng.init_state()
+    for _ in range(10):
+        st = eng.step_local(st)
+    rng = np.random.RandomState(0)
+    new_placement = jax.numpy.asarray(
+        rng.randint(0, 4, size=spec.n_lp), jax.numpy.int32)
+    st = eng.apply_placement_local(st, new_placement)
+    # run to completion
+    fn = jax.jit(jax.vmap(eng._run_fn("agents", 20000), axis_name="agents"))
+    st = fn(st)
+    trace = merged_engine_trace(np.asarray(st.trace), np.asarray(st.trace_n))
+    assert trace == otrace
+    w = jax.tree.map(lambda x: np.asarray(x[0]), st.world)
+    np.testing.assert_allclose(np.asarray(ow.sto_used), w.sto_used, rtol=1e-6)
+
+
+def test_gvt_monotone_and_safe():
+    """C2: GVT never regresses; processed events stay below the horizon."""
+    from repro.core import sync
+    b, kw = t0t1_builder()
+    world, own, init_ev, spec = b.build(n_agents=2, **kw)
+    eng = Engine(world, own, init_ev, spec, trace_cap=4096)
+    st = eng.init_state()
+    last_gvt = -1
+    for _ in range(40):
+        pool0 = jax.tree.map(lambda x: x[0], st.pool)
+        lmin = int(np.asarray(sync.local_min_per_ctx(pool0, 1))[0])
+        pool1 = jax.tree.map(lambda x: x[1], st.pool)
+        lmin = min(lmin, int(np.asarray(sync.local_min_per_ctx(pool1, 1))[0]))
+        if lmin != int(ev.T_INF):
+            assert lmin >= last_gvt
+            last_gvt = lmin
+        st = eng.step_local(st)
+    # trace timestamps per-agent must be processed in causal (time,seq) order
+    tr = np.asarray(st.trace)
+    tn = np.asarray(st.trace_n)
+    for a in range(2):
+        rows = tr[a, : tn[a]]
+        keys = [(int(t), int(s)) for t, s, _, _ in rows]
+        assert keys == sorted(keys)
