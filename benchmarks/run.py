@@ -9,13 +9,18 @@
   scheduler        — §4.1: paper placement vs random/round-robin (load balance
                      + cross-agent message ratio)
   contexts         — fig 9: multiplexing independent runs on one fleet
+  exec_compaction  — engine step 4: compact-then-scan (exec_cap) vs full-pool
+                     scan, events/s on sparse pools at growing pool_cap
   kernels          — µs/call for each Pallas kernel's XLA reference path
   workload_sim     — DESIGN.md §2: DES-predicted step time vs analytic roofline
 
 Output: ``name,us_per_call,derived`` CSV rows on stdout.
+``--quick`` runs only the fast subset (CI smoke): exec_compaction at
+pool_cap=4096, scheduler, kernels, workload_sim.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -204,6 +209,42 @@ def bench_contexts():
          f"two_runs_vs_serial={t_multi / max(2 * t_single, 1e-9):.2f}x")
 
 
+def bench_exec_compaction(pool_caps=(1024, 4096, 16384)):
+    """Compacted windowed execution vs the seed's full-pool scan.
+
+    Sparse-pool worst case for the seed engine: events spaced wider than the
+    lookahead, so every conservative window has ~1 safe event but the seed
+    fold still pays O(pool_cap) sequential scan iterations. exec_cap=pool_cap
+    reproduces the seed behavior exactly (the compaction is then the identity
+    permutation prefix), so the comparison isolates the scan length.
+    """
+    def build(pool_cap, exec_cap):
+        b = ScenarioBuilder(max_cpu=2, queue_cap=8, max_link=2, max_flow=8)
+        farm = b.add_farm([5.0])
+        n_ev = min(pool_cap // 4, 512)
+        for i in range(n_ev):
+            b.add_event(time=1 + 8 * i, kind=ev.K_NOOP, src=farm, dst=farm)
+        built = b.build(n_agents=1, lookahead=4, t_end=8 * n_ev + 16,
+                        pool_cap=pool_cap, emit_cap=64, exec_cap=exec_cap)
+        return built, n_ev
+
+    for pool_cap in pool_caps:
+        rates = {}
+        for label, exec_cap in (("compact", 256), ("fullscan", pool_cap)):
+            built, n_ev = build(pool_cap, exec_cap)
+            run_engine(built)                         # compile
+            t0 = time.perf_counter()
+            _, st = run_engine(built)
+            dt = time.perf_counter() - t0
+            n = int(np.asarray(st.counters)[0, mon.C_EVENTS])
+            assert n == n_ev, (n, n_ev)
+            rates[label] = n / dt
+        emit(f"exec_compaction_p{pool_cap}", 1e6 / rates["compact"],
+             f"events_s_compact={rates['compact']:.0f};"
+             f"events_s_fullscan={rates['fullscan']:.0f};"
+             f"speedup={rates['compact'] / rates['fullscan']:.1f}x")
+
+
 def bench_kernels():
     from repro.kernels import ops
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
@@ -276,13 +317,24 @@ def bench_workload_sim():
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fast CI-smoke subset only")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
+    if args.quick:
+        bench_exec_compaction(pool_caps=(4096,))
+        bench_scheduler()
+        bench_kernels()
+        bench_workload_sim()
+        return
     bench_fig2_t0t1()
     bench_fig2b_congestion()
     bench_agent_scaling()
     bench_sync_overhead()
     bench_scheduler()
     bench_contexts()
+    bench_exec_compaction()
     bench_kernels()
     bench_workload_sim()
 

@@ -99,6 +99,8 @@ class ScenarioSpec:
     route_cap: int          # per-(src,dst)-agent routing-buffer capacity
     n_lp: int
     work_per_mb: float = 1.0  # CPU ops per transferred MB (job sizing)
+    exec_cap: int = 256     # per-window execution-buffer capacity (compacted scan);
+                            # safe events beyond it spill to the next window
 
 
 def _owner_mask_rows(res_lp: jax.Array, lp_agent: jax.Array, me) -> jax.Array:
@@ -244,8 +246,8 @@ class ScenarioBuilder:
     # --- build -------------------------------------------------------------
     def build(self, *, n_agents: int = 1, n_ctx: int = 1, lookahead: int,
               t_end: int, pool_cap: int = 1024, emit_cap: int | None = None,
-              route_cap: int | None = None, placement=None,
-              work_per_mb: float = 1.0):
+              route_cap: int | None = None, exec_cap: int | None = None,
+              placement=None, work_per_mb: float = 1.0):
         nlp = max(len(self._lps), 1)
         nfarm = max(len(self._farms), 1)
         nnet = max(len(self._nets), 1)
@@ -349,6 +351,8 @@ class ScenarioBuilder:
             pool_cap=pool_cap,
             emit_cap=emit_cap or pool_cap,
             route_cap=route_cap or max(pool_cap // max(n_agents, 1), 16),
+            exec_cap=max(exec_cap if exec_cap is not None
+                         else min(pool_cap, 256), 1),
             n_lp=nlp,
             work_per_mb=work_per_mb,
         )

@@ -4,11 +4,26 @@ Per window (one "simulation step" in the paper's event-scheduler terms):
 
   1. GVT: per-context local min pending timestamp -> collective min (sync.py, C2).
   2. Safe mask: events strictly below the per-context horizon may execute.
-  3. Order: stable (time, seq) sort — on TPU the ``event_select`` Pallas kernel, on
-     CPU the XLA lexsort reference (both produce identical permutations).
-  4. Execute: sequential fold (lax.scan) over sorted slots; each safe event is
-     dispatched through the handler table (handlers.py); emitted events accumulate
-     in a fixed emit buffer; per-LP LVT/lifecycle columns update.
+  3. Order + compact: stable (time, seq) sort with unsafe slots keyed T_INF — on
+     TPU the ``event_select`` Pallas kernel, on CPU the XLA lexsort reference
+     (identical prefixes) — keeping only the first ``spec.exec_cap`` gather
+     indices (the earliest safe slots).
+  4. Execute (compacted): sequential fold (lax.scan) over the ``exec_cap``
+     gathered slots — not the whole pool, so a sparse window costs O(exec_cap),
+     not O(pool_cap). Each safe slot is dispatched through the handler table
+     (handlers.py); emitted events accumulate in a fixed emit buffer; per-LP
+     LVT/lifecycle columns update. Safe events beyond ``exec_cap`` *spill*: they
+     stay in the pool and execute in a later window (counted by C_EXEC_SPILL).
+     Spilling preserves exactness — the horizon/GVT math is untouched, spilled
+     events remain below the horizon, and emits of later windows carry
+     timestamps >= horizon > any spilled timestamp, so the per-agent execution
+     order (and hence the oracle-merged trace) is unchanged; only the window
+     count grows. Caveat: a compacted window frees at most exec_cap pool slots
+     before insert, so a near-saturated pool has less headroom for the window's
+     emits than a full-pool scan would leave — as everywhere in this engine,
+     any resulting overflow is counted (C_DROP_POOL), never silent, and results
+     are exact iff the drop counters stay zero. Size pool_cap with that
+     headroom (or raise exec_cap) for emit-heavy dense scenarios.
   5. Route: emits are bucketed by destination agent (``lp_agent``) and exchanged with
      one ``all_to_all`` (the Jini remote-event adaptation); overflow is counted.
   6. Insert: received events enter pool free slots.
@@ -36,12 +51,26 @@ from repro.core.handlers import Ev, apply_handler, make_handlers
 
 AXIS = "agents"
 
+# jax >= 0.6 exposes shard_map at top level with check_vma; older releases keep
+# it in jax.experimental with the check_rep spelling.
+if hasattr(jax, "shard_map"):
+    _shard_map = functools.partial(jax.shard_map, check_vma=False)
+else:  # pragma: no cover - exercised only on older jax
+    from jax.experimental.shard_map import shard_map as _sm
+    _shard_map = functools.partial(_sm, check_rep=False)
+
 
 def lexsort_time_seq(time_key: jax.Array, seq: jax.Array) -> jax.Array:
     """Stable (time, seq) sort permutation — the XLA reference for event_select."""
     perm = jnp.argsort(seq, stable=True)
     perm2 = jnp.argsort(time_key[perm], stable=True)
     return perm[perm2]
+
+
+def select_events_xla(time_key: jax.Array, seq: jax.Array,
+                      exec_cap: int) -> jax.Array:
+    """Compacted gather indices (sort + safe-prefix) — XLA default select_fn."""
+    return lexsort_time_seq(time_key, seq)[:exec_cap]
 
 
 class EngineState(NamedTuple):
@@ -61,13 +90,17 @@ class Engine:
     def __init__(self, world: World, own: WorldOwnership,
                  init_events: ev.EventBatch, spec: ScenarioSpec,
                  trace_cap: int = 0,
-                 sort_fn: Callable[[jax.Array, jax.Array], jax.Array] | None = None):
+                 select_fn: Callable[[jax.Array, jax.Array, int], jax.Array]
+                 | None = None):
         self.world = world
         self.own = own
         self.init_events = init_events
         self.spec = spec
         self.trace_cap = trace_cap
-        self.sort_fn = sort_fn or lexsort_time_seq
+        # select_fn(time_key, seq, exec_cap) -> (exec_cap,) distinct pool-slot
+        # indices: the prefix of the stable (time, seq) sort. Hook point for the
+        # Pallas kernel (kernels.ops.select_events); default is the XLA lexsort.
+        self.select_fn = select_fn or select_events_xla
         self.table = make_handlers(spec.lookahead, spec.work_per_mb)
 
     # ------------------------------------------------------------------ init
@@ -109,21 +142,26 @@ class Engine:
         done = sync.all_done(gvt, spec.t_end)
         safe = sync.safe_mask(pool, horizon)
 
-        # 3. order (time, seq); unsafe slots sort to the back
+        # 3. order (time, seq) + compact: unsafe slots sort to the back, and only
+        # the first exec_cap gather indices (the earliest safe slots) are kept
         time_key = jnp.where(safe, pool.time, ev.T_INF)
-        order = self.sort_fn(time_key, pool.seq)
+        xcap = max(min(spec.exec_cap, spec.pool_cap), 1)
+        exec_idx = self.select_fn(time_key, pool.seq, xcap)
+        exec_slots, exec_safe = sync.exec_selection(safe, exec_idx)
+        cand = ev.gather(pool, exec_idx)
 
-        # 4. execute the window: sequential fold over sorted slots
+        # 4. execute the window: sequential fold over the exec_cap gathered
+        # slots; safe events beyond exec_cap spill to the next window
         ecap = spec.emit_cap
         emit0 = ev.empty_batch(ecap)
         trace0, trace_n0 = st.trace, st.trace_n
 
-        def body(carry, idx):
+        def body(carry, x):
             world, counters, emits, emit_n, trace, trace_n = carry
-            e = Ev(time=pool.time[idx], seq=pool.seq[idx], kind=pool.kind[idx],
-                   src=pool.src[idx], dst=pool.dst[idx], ctx=pool.ctx[idx],
-                   payload=pool.payload[idx])
-            is_safe = safe[idx]
+            row, is_safe = x
+            e = Ev(time=row.time, seq=row.seq, kind=row.kind,
+                   src=row.src, dst=row.dst, ctx=row.ctx,
+                   payload=row.payload)
 
             def run(w, c):
                 w2, c2, out = apply_handler(self.table, w, c, e)
@@ -168,12 +206,14 @@ class Engine:
 
         carry0 = (world, counters, emit0, jnp.int32(0), trace0, trace_n0)
         (world, counters, emits, _, trace, trace_n), _ = jax.lax.scan(
-            body, carry0, order)
+            body, carry0, (cand, exec_safe))
 
-        n_processed = jnp.sum(safe.astype(jnp.int32))
+        n_processed = jnp.sum(exec_safe.astype(jnp.int32))
+        n_spill = jnp.sum(safe.astype(jnp.int32)) - n_processed
         counters = mon.bump(counters, mon.C_EVENTS, n_processed)
+        counters = mon.bump(counters, mon.C_EXEC_SPILL, n_spill)
         counters = mon.bump(counters, mon.C_WINDOWS, 1)
-        pool = ev.pop_mask(pool, safe)
+        pool = ev.pop_mask(pool, exec_slots)
 
         # processed LPs drop back to WAITING at window end (thread states -> data)
         world = world._replace(
@@ -287,8 +327,8 @@ class Engine:
             out = per_agent(s1)
             return jax.tree.map(lambda x: x[None], out)
 
-        fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=P(AXIS),
-                           out_specs=P(AXIS), check_vma=False)
+        fn = _shard_map(shard_fn, mesh=mesh, in_specs=P(AXIS),
+                        out_specs=P(AXIS))
         return jax.jit(fn)(st)
 
     # -------------------------------------------------------------- migration

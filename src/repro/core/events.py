@@ -171,6 +171,25 @@ def insert(pool: EventPool, batch: EventBatch):
     return pool, n_drop
 
 
+def gather(pool: EventPool, idx: jax.Array) -> EventBatch:
+    """Gather pool slots ``idx`` into a dense candidate batch.
+
+    The engine's compacted window (step 4) gathers the safe prefix of the
+    (time, seq) sort so the handler fold runs over ``exec_cap`` slots instead of
+    the whole pool. ``valid`` carries the gathered slots' liveness.
+    """
+    return EventBatch(
+        time=pool.time[idx],
+        seq=pool.seq[idx],
+        kind=pool.kind[idx],
+        src=pool.src[idx],
+        dst=pool.dst[idx],
+        ctx=pool.ctx[idx],
+        payload=pool.payload[idx],
+        valid=pool.valid[idx],
+    )
+
+
 def pop_mask(pool: EventPool, mask: jax.Array) -> EventPool:
     """Invalidate ``mask``-ed slots (processed events leave the pool)."""
     gone = pool.valid & mask

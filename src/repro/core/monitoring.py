@@ -33,7 +33,8 @@ C_MIGRATIONS = 14     # disk -> tape migrations
 C_WRITES = 15         # storage writes
 C_MB_WRITTEN = 16
 C_LP_LOCAL = 17       # events destined to locally-owned LPs (scheduler locality signal)
-N_COUNTERS = 18
+C_EXEC_SPILL = 18     # safe events deferred past exec_cap to the next window
+N_COUNTERS = 19
 
 DROP_COUNTERS = (C_DROP_POOL, C_DROP_ROUTE, C_DROP_FLOW, C_DROP_QUEUE)
 

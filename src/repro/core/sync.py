@@ -52,3 +52,21 @@ def all_done(gvt: jax.Array, t_end: int) -> jax.Array:
 def safe_mask(pool: ev.EventPool, horizon_per_ctx: jax.Array) -> jax.Array:
     """Events allowed to execute in this conservative window."""
     return pool.valid & (pool.time < horizon_per_ctx[pool.ctx])
+
+
+def exec_selection(safe: jax.Array, exec_idx: jax.Array):
+    """Compacted-window execution masks (engine step 4).
+
+    ``exec_idx`` is the (exec_cap,) safe-prefix of the per-window (time, seq)
+    sort — distinct pool-slot indices with every safe slot ordered before any
+    unsafe one. Returns ``(slot_mask, exec_safe)``: ``slot_mask`` marks the pool
+    slots actually executed this window, ``exec_safe`` flags the executable rows
+    of the gathered candidate buffer. Safe slots beyond ``exec_cap`` stay in the
+    pool and spill to the next window; this is sound because they remain below
+    the (unchanged) horizon, and GVT cannot advance past them while they are
+    pending — conservative-window correctness is preserved, only window count
+    grows.
+    """
+    exec_safe = safe[exec_idx]
+    slot_mask = jnp.zeros_like(safe).at[exec_idx].set(exec_safe)
+    return slot_mask, exec_safe

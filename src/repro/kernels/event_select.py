@@ -8,9 +8,12 @@ traffic beyond one read and one write of the pool keys. The XOR-partner exchange
 of the classic network is expressed as a (N/2j, 2, j) reshape + pair swap, which
 vectorizes on the VPU.
 
-Output is the permutation (i32 indices), matching engine.lexsort_time_seq exactly
-(stable for equal (time, seq) pairs because the index participates as the final
-tie-break, and input indices are distinct).
+``sort_events`` outputs the full permutation (i32 indices), matching
+engine.lexsort_time_seq exactly (stable for equal (time, seq) pairs because the
+index participates as the final tie-break, and input indices are distinct).
+``select_events`` is the compacted variant for the engine's windowed execution:
+sort + safe-prefix in one pass — only the first ``exec_cap`` indices leave VMEM,
+so the engine can gather exactly the slots it will execute.
 """
 from __future__ import annotations
 
@@ -62,13 +65,15 @@ def _sort_kernel(time_ref, seq_ref, perm_ref, *, n: int):
             j //= 2
         k *= 2
 
-    perm_ref[0] = idx
+    # the out block may be a prefix of the sorted permutation (select_events)
+    perm_ref[0] = idx[: perm_ref.shape[1]]
 
 
-def sort_events(time_key: jax.Array, seq: jax.Array, *, interpret=False):
-    """(CAP,) i32 keys -> (CAP,) i32 permutation, ascending (time, seq)."""
+def _run_sort(time_key: jax.Array, seq: jax.Array, m: int, *, interpret):
+    """Shared pallas_call: sort padded keys, emit the first ``m`` indices."""
     cap = time_key.shape[0]
     n = 1 << max((cap - 1).bit_length(), 1)
+    mpad = 1 << max((m - 1).bit_length(), 1)
     tpad = jnp.full((n,), I32_MAX, jnp.int32).at[:cap].set(time_key)[None]
     spad = jnp.full((n,), I32_MAX, jnp.int32).at[:cap].set(seq)[None]
     kernel = functools.partial(_sort_kernel, n=n)
@@ -77,8 +82,25 @@ def sort_events(time_key: jax.Array, seq: jax.Array, *, interpret=False):
         grid=(1,),
         in_specs=[pl.BlockSpec((1, n), lambda i: (0, 0)),
                   pl.BlockSpec((1, n), lambda i: (0, 0))],
-        out_specs=pl.BlockSpec((1, n), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, n), jnp.int32),
+        out_specs=pl.BlockSpec((1, mpad), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, mpad), jnp.int32),
         interpret=interpret,
     )(tpad, spad)
-    return perm[0, :cap]
+    return perm[0, :m]
+
+
+def sort_events(time_key: jax.Array, seq: jax.Array, *, interpret=False):
+    """(CAP,) i32 keys -> (CAP,) i32 permutation, ascending (time, seq)."""
+    return _run_sort(time_key, seq, time_key.shape[0], interpret=interpret)
+
+
+def select_events(time_key: jax.Array, seq: jax.Array, exec_cap: int, *,
+                  interpret=False):
+    """Compacted gather indices: first ``exec_cap`` of the (time, seq) sort.
+
+    With unsafe slots keyed T_INF, the returned indices are the ``exec_cap``
+    earliest safe pool slots (then, if fewer are safe, unsafe filler the engine
+    masks out). One kernel pass; only the prefix is written back.
+    """
+    return _run_sort(time_key, seq, min(exec_cap, time_key.shape[0]),
+                     interpret=interpret)

@@ -3,8 +3,8 @@
 Dispatch policy: on TPU backends the compiled kernels run natively; everywhere
 else (this CPU container, unit tests) ``interpret=True`` executes the same kernel
 bodies in Python for correctness validation against ref.py. The model zoo calls
-these through cfg.use_flash / engine sort_fn hooks, so the XLA fallbacks and the
-kernels are interchangeable implementations of identical math.
+these through cfg.use_flash / engine select_fn hooks, so the XLA fallbacks and
+the kernels are interchangeable implementations of identical math.
 """
 from __future__ import annotations
 
@@ -50,6 +50,12 @@ def ssd_scan(q, k, v, w, *, chunk=64):
 def sort_events(time_key, seq):
     """(CAP,) -> permutation ascending by (time, seq). Engine sort hook."""
     return _es.sort_events(time_key, seq, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("exec_cap",))
+def select_events(time_key, seq, exec_cap):
+    """(CAP,) -> (exec_cap,) compacted gather indices. Engine select_fn hook."""
+    return _es.select_events(time_key, seq, exec_cap, interpret=_interpret())
 
 
 @jax.jit

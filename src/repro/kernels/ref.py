@@ -37,3 +37,10 @@ def sort_events_ref(time_key: jax.Array, seq: jax.Array) -> jax.Array:
     perm = jnp.argsort(seq, stable=True)
     perm2 = jnp.argsort(time_key[perm], stable=True)
     return perm[perm2]
+
+
+def select_events_ref(time_key: jax.Array, seq: jax.Array,
+                      exec_cap: int) -> jax.Array:
+    """Compacted gather indices: first ``exec_cap`` of the stable (time, seq)
+    sort — the XLA reference for kernels.event_select.select_events."""
+    return sort_events_ref(time_key, seq)[: min(exec_cap, time_key.shape[0])]

@@ -35,7 +35,7 @@ def run_t0t1(args):
                         interval=15, count=args.flows)
         world, own, init_ev, spec = b.build(
             n_agents=args.agents, lookahead=2, t_end=100_000, pool_cap=1024,
-            work_per_mb=2.0)
+            exec_cap=args.exec_cap, work_per_mb=2.0)
         eng = Engine(world, own, init_ev, spec)
         st = eng.run_local(max_windows=200_000)
         c = np.asarray(st.counters).sum(axis=0)
@@ -84,6 +84,7 @@ def run_distributed(args):
                     interval=15, count=24)
     world, own, init_ev, spec = b.build(n_agents=n, lookahead=2,
                                         t_end=100_000, pool_cap=512,
+                                        exec_cap=args.exec_cap,
                                         work_per_mb=2.0)
     eng = Engine(world, own, init_ev, spec)
     mesh = Mesh(np.array(jax.devices()[:n]), ("agents",))
@@ -102,11 +103,17 @@ def main():
                     default=[8.0, 2.0, 0.5, 0.125])
     p1.add_argument("--flows", type=int, default=24)
     p1.add_argument("--agents", type=int, default=1)
+    p1.add_argument("--exec-cap", type=int, default=None,
+                    help="per-window compacted execution cap "
+                         "(default min(pool_cap, 256))")
     p2 = sub.add_parser("workload")
     p2.add_argument("--results", default="results/dryrun")
     p2.add_argument("--cell", default="")
     p2.add_argument("--limit", type=int, default=5)
-    sub.add_parser("distributed")
+    p3 = sub.add_parser("distributed")
+    p3.add_argument("--exec-cap", type=int, default=None,
+                    help="per-window compacted execution cap "
+                         "(default min(pool_cap, 256))")
     args = ap.parse_args()
     dict(t0t1=run_t0t1, workload=run_workload,
          distributed=run_distributed)[args.mode](args)

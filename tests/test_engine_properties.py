@@ -6,6 +6,9 @@ bandwidths/latencies, generator rates/sizes, placement, lookahead.
 """
 import jax
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Engine, ScenarioBuilder, events as ev,

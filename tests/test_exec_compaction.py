@@ -1,0 +1,130 @@
+"""Compacted windowed execution (engine step 4).
+
+The engine gathers only the exec_cap earliest safe slots per conservative
+window; safe events beyond exec_cap spill to later windows. These tests pin the
+two correctness claims: the executed trace stays byte-identical to the
+sequential oracle on both the spill and no-spill paths, and processed-event /
+final-world accounting is invariant to exec_cap. Overflow counters
+(C_DROP_POOL, C_DROP_ROUTE, C_EXEC_SPILL) are exercised under forced overflow.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import t0t1_builder
+from repro.core import (Engine, ScenarioBuilder, events as ev,
+                        merged_engine_trace, run_sequential)
+from repro.core import monitoring as mon
+
+
+def run_t0t1(n_agents, exec_cap, **kw_over):
+    b, kw = t0t1_builder()
+    kw.update(kw_over)
+    world, own, init_ev, spec = b.build(n_agents=n_agents, exec_cap=exec_cap,
+                                        **kw)
+    eng = Engine(world, own, init_ev, spec, trace_cap=4096)
+    return eng, eng.run_local(max_windows=20000)
+
+
+def assert_world_equal(wa, wb):
+    for name, a, b in zip(wa._fields, wa, wb):
+        a, b = np.asarray(a), np.asarray(b)
+        if np.issubdtype(a.dtype, np.floating):
+            np.testing.assert_allclose(a, b, atol=1e-6, err_msg=name)
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+@pytest.mark.parametrize("n_agents", [1, 2])
+def test_spill_path_matches_oracle(n_agents, t0t1_oracle):
+    """exec_cap < per-window safe count: spilled events execute in later
+    windows, yet the merged trace and final world are oracle-identical."""
+    ow, oc, otrace = t0t1_oracle
+    _, st = run_t0t1(n_agents, exec_cap=1)
+    c = np.asarray(st.counters).sum(axis=0)
+    assert c[mon.C_EXEC_SPILL] > 0          # the spill path actually ran
+    trace = merged_engine_trace(np.asarray(st.trace), np.asarray(st.trace_n))
+    assert trace == otrace
+    w = jax.tree.map(lambda x: np.asarray(x[0]), st.world)
+    np.testing.assert_allclose(np.asarray(ow.sto_used), w.sto_used, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ow.lp_lvt), w.lp_lvt)
+
+
+@pytest.mark.parametrize("n_agents", [1, 2])
+def test_no_spill_path_matches_oracle(n_agents, t0t1_oracle):
+    """exec_cap >= pool_cap: compaction is the identity prefix (seed behavior)."""
+    ow, oc, otrace = t0t1_oracle
+    _, st = run_t0t1(n_agents, exec_cap=256)   # == pool_cap in this scenario
+    c = np.asarray(st.counters).sum(axis=0)
+    assert c[mon.C_EXEC_SPILL] == 0
+    trace = merged_engine_trace(np.asarray(st.trace), np.asarray(st.trace_n))
+    assert trace == otrace
+    w = jax.tree.map(lambda x: np.asarray(x[0]), st.world)
+    np.testing.assert_allclose(np.asarray(ow.sto_used), w.sto_used, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ow.lp_lvt), w.lp_lvt)
+
+
+@pytest.fixture(scope="module")
+def full_cap_state():
+    """exec_cap == pool_cap reference run, shared across invariance cases."""
+    _, st = run_t0t1(2, exec_cap=256)
+    return st
+
+
+@pytest.mark.parametrize("exec_cap", [1, 2, 7, 64])
+def test_exec_cap_invariance(exec_cap, full_cap_state):
+    """Total processed events and the final world state do not depend on
+    exec_cap — only window count (and spill accounting) may differ."""
+    ref_st = full_cap_state
+    ref_c = np.asarray(ref_st.counters).sum(axis=0)
+    _, st = run_t0t1(2, exec_cap=exec_cap)
+    c = np.asarray(st.counters).sum(axis=0)
+    assert c[mon.C_EVENTS] == ref_c[mon.C_EVENTS]
+    assert not np.asarray(st.pool.valid).any()      # both drained the pool
+    assert_world_equal(jax.tree.map(lambda x: x[0], ref_st.world),
+                       jax.tree.map(lambda x: x[0], st.world))
+
+
+def test_exec_spill_counter_under_forced_overflow():
+    """6 same-tick events with exec_cap=1 drain one per window: spill sums
+    5+4+3+2+1 and every event still executes."""
+    b = ScenarioBuilder(max_cpu=2)
+    farm = b.add_farm([5.0])
+    for i in range(6):
+        b.add_event(time=1, kind=ev.K_NOOP, src=farm, dst=farm)
+    world, own, init_ev, spec = b.build(n_agents=1, lookahead=1, t_end=10,
+                                        pool_cap=32, exec_cap=1)
+    st = Engine(world, own, init_ev, spec).run_local(max_windows=100)
+    c = np.asarray(st.counters)[0]
+    assert c[mon.C_EVENTS] == 6
+    assert c[mon.C_EXEC_SPILL] == 15
+
+
+def test_drop_pool_counter_under_tiny_emit_cap():
+    """emit_cap=1 cannot hold a generator's (target, next-tick) pair: the
+    overflowing emit is counted in C_DROP_POOL, never silently lost."""
+    b = ScenarioBuilder(max_cpu=2)
+    farm = b.add_farm([5.0])
+    b.add_generator(target_lp=farm, kind=ev.K_NOOP, payload=[], interval=5,
+                    count=4)
+    world, own, init_ev, spec = b.build(n_agents=1, lookahead=2, t_end=100,
+                                        pool_cap=32, emit_cap=1)
+    st = Engine(world, own, init_ev, spec).run_local(max_windows=200)
+    c = np.asarray(st.counters)[0]
+    assert c[mon.C_DROP_POOL] > 0
+
+
+def test_drop_route_counter_under_tiny_route_cap():
+    """Three generators on agent 0 all emitting to agent 1 in the same window
+    overflow a route_cap=1 bucket; the drops are counted in C_DROP_ROUTE."""
+    b = ScenarioBuilder(max_cpu=2)
+    farm = b.add_farm([5.0])
+    for _ in range(3):
+        b.add_generator(target_lp=farm, kind=ev.K_NOOP, payload=[], interval=5,
+                        count=4)
+    world, own, init_ev, spec = b.build(
+        n_agents=2, lookahead=2, t_end=100, pool_cap=32, route_cap=1,
+        placement=[1, 0, 0, 0])    # farm on agent 1, generators on agent 0
+    st = Engine(world, own, init_ev, spec).run_local(max_windows=200)
+    c = np.asarray(st.counters).sum(axis=0)
+    assert c[mon.C_DROP_ROUTE] > 0

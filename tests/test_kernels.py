@@ -6,7 +6,8 @@ import pytest
 
 from repro.core.network import incidence, maxmin_rates as mm_ref
 from repro.kernels import ops, ref
-from repro.kernels.event_select import sort_events as sort_raw
+from repro.kernels.event_select import (select_events as select_raw,
+                                        sort_events as sort_raw)
 from repro.kernels.flash_attention import flash_attention as fa_raw
 from repro.models.linear_rnn import gla_ref
 
@@ -76,6 +77,26 @@ def test_event_sort_sweep(n, tmax):
     np.testing.assert_array_equal(tk[p1], tk[p2])
     np.testing.assert_array_equal(sq[p1], sq[p2])
     assert sorted(p1.tolist()) == list(range(n))
+
+
+@pytest.mark.parametrize("n,m,tmax", [(64, 16, 8), (513, 64, 10**6),
+                                      (1000, 1000, 50), (128, 7, 3),
+                                      (256, 1, 5)])
+def test_event_select_compaction_sweep(n, m, tmax):
+    """select_events == sort prefix, with unsafe slots keyed T_INF as in the
+    engine's compacted window."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    tk = jax.random.randint(ks[0], (n,), 0, tmax)
+    safe = jax.random.bernoulli(ks[1], 0.3, (n,))
+    tk = jnp.where(safe, tk, jnp.int32(2**31 - 1))
+    sq = jax.random.randint(ks[2], (n,), 0, 2**20)
+    got = np.asarray(select_raw(tk, sq, m, interpret=True))
+    want = np.asarray(ref.select_events_ref(tk, sq, m))
+    assert got.shape == (min(m, n),)
+    tk, sq = np.asarray(tk), np.asarray(sq)
+    np.testing.assert_array_equal(tk[got], tk[want])
+    np.testing.assert_array_equal(sq[got], sq[want])
+    assert len(set(got.tolist())) == got.shape[0]   # distinct gather indices
 
 
 @pytest.mark.parametrize("f,l,seed", [(8, 2, 0), (24, 6, 1), (48, 8, 2),

@@ -1,6 +1,9 @@
 """Max–min fairness properties (hypothesis) for the interrupt-based traffic model."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.network import (completion_times, incidence, maxmin_rates,
