@@ -1,0 +1,50 @@
+"""Benchmark regression gate for CI.
+
+Usage: python benchmarks/check_regression.py RESULTS.json BASELINE.json
+
+Reads the machine-readable output of ``benchmarks/run.py --json`` and fails
+(exit 1) when the dense same-kind dispatch benchmark's events/s regresses more
+than ``tolerance`` below the committed baseline. The gated metric is the
+batched/sequential speedup ratio measured in one process on one host, so the
+gate is insensitive to how fast the CI runner happens to be.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        results = json.load(f)
+    with open(sys.argv[2]) as f:
+        baseline = json.load(f)
+
+    name = baseline["benchmark"]
+    metric = baseline["metric"]
+    rows = {row["name"]: row["derived"] for row in results["rows"]}
+    if name not in rows:
+        print(f"FAIL: benchmark row {name!r} missing from {sys.argv[1]}")
+        return 1
+
+    measured = float(rows[name][metric])
+    gate = float(baseline["gate_speedup"])
+    tolerance = float(baseline["tolerance"])
+    floor = gate * (1.0 - tolerance)
+    ref = float(baseline["reference"]["speedup"])
+    msg = (
+        f"{name}.{metric}: measured={measured:.2f} floor={floor:.2f} "
+        f"(gate={gate:.2f} -{tolerance:.0%}, dev reference={ref:.2f})"
+    )
+    print(msg)
+    if measured < floor:
+        print(f"FAIL: {metric} regressed below the gate floor")
+        return 1
+    print("OK: no regression")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

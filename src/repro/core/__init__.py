@@ -6,7 +6,7 @@ Public surface:
   scheduler                                 — monitoring-driven placement (C3)
   oracle                                    — sequential reference DES
 """
-from repro.core import events, monitoring, network, scheduler, sync
+from repro.core import events, monitoring, network, oracle, scheduler, sync
 from repro.core.components import (LPK_FARM, LPK_GEN, LPK_NET, LPK_STORAGE,
                                    ScenarioBuilder, ScenarioSpec, World,
                                    WorldOwnership, sync_world)

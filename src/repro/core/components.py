@@ -101,6 +101,8 @@ class ScenarioSpec:
     work_per_mb: float = 1.0  # CPU ops per transferred MB (job sizing)
     exec_cap: int = 256     # per-window execution-buffer capacity (compacted scan);
                             # safe events beyond it spill to the next window
+    batched_dispatch: bool = True  # engine step 4: grouped vectorized dispatch
+                                   # (False = PR 1 sequential compacted fold)
 
 
 def _owner_mask_rows(res_lp: jax.Array, lp_agent: jax.Array, me) -> jax.Array:
@@ -217,6 +219,14 @@ class ScenarioBuilder:
         self._nets.append(dict(bws=list(link_bws), lats=list(link_lats)))
         return self._new_lp(LPK_NET, len(self._nets) - 1, ctx)
 
+    def add_idle_lp(self, ctx: int = 0) -> int:
+        """A bare LP with no component row (LPK_IDLE): a NOOP event sink.
+
+        Used by dispatch benchmarks/tests that want many distinct destination
+        LPs without growing any component table, and as a placement target.
+        """
+        return self._new_lp(LPK_IDLE, 0, ctx)
+
     def add_storage(self, disk_cap: float, tape_cap: float, tape_rate: float,
                     ctx: int = 0) -> int:
         self._stos.append(dict(disk=disk_cap, tape=tape_cap, rate=tape_rate))
@@ -247,7 +257,8 @@ class ScenarioBuilder:
     def build(self, *, n_agents: int = 1, n_ctx: int = 1, lookahead: int,
               t_end: int, pool_cap: int = 1024, emit_cap: int | None = None,
               route_cap: int | None = None, exec_cap: int | None = None,
-              placement=None, work_per_mb: float = 1.0):
+              placement=None, work_per_mb: float = 1.0,
+              batched_dispatch: bool = True):
         nlp = max(len(self._lps), 1)
         nfarm = max(len(self._farms), 1)
         nnet = max(len(self._nets), 1)
@@ -355,6 +366,7 @@ class ScenarioBuilder:
                          else min(pool_cap, 256), 1),
             n_lp=nlp,
             work_per_mb=work_per_mb,
+            batched_dispatch=batched_dispatch,
         )
         init_events = ev.batch_from_rows(self._events)
         return world, own, init_events, spec

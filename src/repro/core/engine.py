@@ -8,18 +8,30 @@ Per window (one "simulation step" in the paper's event-scheduler terms):
      TPU the ``event_select`` Pallas kernel, on CPU the XLA lexsort reference
      (identical prefixes) — keeping only the first ``spec.exec_cap`` gather
      indices (the earliest safe slots).
-  4. Execute (compacted): sequential fold (lax.scan) over the ``exec_cap``
-     gathered slots — not the whole pool, so a sparse window costs O(exec_cap),
-     not O(pool_cap). Each safe slot is dispatched through the handler table
-     (handlers.py); emitted events accumulate in a fixed emit buffer; per-LP
-     LVT/lifecycle columns update. Safe events beyond ``exec_cap`` *spill*: they
-     stay in the pool and execute in a later window (counted by C_EXEC_SPILL).
-     Spilling preserves exactness — the horizon/GVT math is untouched, spilled
-     events remain below the horizon, and emits of later windows carry
-     timestamps >= horizon > any spilled timestamp, so the per-agent execution
-     order (and hence the oracle-merged trace) is unchanged; only the window
-     count grows. Caveat: a compacted window frees at most exec_cap pool slots
-     before insert, so a near-saturated pool has less headroom for the window's
+  4. Execute (grouped vectorized dispatch, the default): the ``exec_cap``
+     gathered slots are partitioned by ``kind`` (``group_by_kind``) and checked
+     for write conflicts (``sync.conflict_mask``: duplicate dst LPs or two
+     events addressing the same replicated-component row). Conflict-free slots
+     — by construction touching pairwise-disjoint world state — execute in ONE
+     vmapped handler call whose per-lane writes are merged with an exact
+     element-wise segment scatter (``handlers.apply_handler_batch``); the few
+     conflicted slots fall back to a sequential fold compacted to just those
+     slots (a while_loop that runs zero iterations on clean windows). Each
+     slot's emits land in a per-slot row of an (exec_cap, MAX_EMIT) matrix, so
+     flattening it row-major reproduces the sequential fold's emit-append order
+     byte-for-byte (``events.compact_batch``), and the trace is written in
+     (time, seq) window order independently of execution order — the batched
+     path is byte-identical to the sequential fold (and hence to the oracle) in
+     traces, counters, and world state. ``spec.batched_dispatch=False``
+     restores the PR 1 sequential lax.scan over all exec_cap slots. Safe
+     events beyond ``exec_cap`` *spill* either way: they stay in the pool and
+     execute in a later window (counted by C_EXEC_SPILL). Spilling preserves
+     exactness — the horizon/GVT math is untouched, spilled events remain
+     below the horizon, and emits of later windows carry timestamps >=
+     horizon > any spilled timestamp, so the per-agent execution order (and
+     hence the oracle-merged trace) is unchanged; only the window count grows.
+     Caveat: a compacted window frees at most exec_cap pool slots before
+     insert, so a near-saturated pool has less headroom for the window's
      emits than a full-pool scan would leave — as everywhere in this engine,
      any resulting overflow is counted (C_DROP_POOL), never silent, and results
      are exact iff the drop counters stay zero. Size pool_cap with that
@@ -47,7 +59,8 @@ from repro.core import events as ev
 from repro.core import monitoring as mon
 from repro.core import sync
 from repro.core.components import ScenarioSpec, World, WorldOwnership, sync_world
-from repro.core.handlers import Ev, apply_handler, make_handlers
+from repro.core.handlers import (Ev, apply_handler, apply_handler_batch,
+                                 make_handlers)
 
 AXIS = "agents"
 
@@ -73,6 +86,25 @@ def select_events_xla(time_key: jax.Array, seq: jax.Array,
     return lexsort_time_seq(time_key, seq)[:exec_cap]
 
 
+def group_by_kind_xla(kind: jax.Array, active: jax.Array,
+                      n_kinds: int = ev.N_KINDS):
+    """Same-kind grouping — the XLA reference for kernels.ops.group_by_kind.
+
+    Returns ``(order, rank, counts)``: ``order`` is the stable permutation
+    putting active rows first, grouped by ascending kind and original position
+    within a kind (inactive rows trail in original order); ``rank`` is aligned
+    with ``order`` and gives each grouped row's index within its segment;
+    ``counts`` is the (n_kinds,) active-row population per kind.
+    """
+    key = jnp.where(active, jnp.clip(kind, 0, n_kinds - 1), n_kinds)
+    order = jnp.argsort(key, stable=True).astype(jnp.int32)
+    ks = key[order]
+    start = jnp.searchsorted(ks, ks, side="left").astype(jnp.int32)
+    rank = jnp.arange(ks.shape[0], dtype=jnp.int32) - start
+    counts = jnp.zeros((n_kinds,), jnp.int32).at[key].add(1, mode="drop")
+    return order, rank, counts
+
+
 class EngineState(NamedTuple):
     world: World
     pool: ev.EventPool
@@ -91,6 +123,8 @@ class Engine:
                  init_events: ev.EventBatch, spec: ScenarioSpec,
                  trace_cap: int = 0,
                  select_fn: Callable[[jax.Array, jax.Array, int], jax.Array]
+                 | None = None,
+                 group_fn: Callable[[jax.Array, jax.Array], tuple]
                  | None = None):
         self.world = world
         self.own = own
@@ -101,7 +135,18 @@ class Engine:
         # indices: the prefix of the stable (time, seq) sort. Hook point for the
         # Pallas kernel (kernels.ops.select_events); default is the XLA lexsort.
         self.select_fn = select_fn or select_events_xla
+        # group_fn(kind, active) -> (order, rank, counts): same-kind grouping
+        # for the batched dispatch. Hook point for the Pallas segment-rank
+        # kernel (kernels.ops.group_by_kind); default is the XLA argsort.
+        self.group_fn = group_fn or group_by_kind_xla
         self.table = make_handlers(spec.lookahead, spec.work_per_mb)
+        # widest resource table: bound for the conflict-detection key space
+        self._n_res = max(world.cpu_power.shape[0], world.link_bw.shape[0],
+                          world.sto_cap.shape[0], world.gen_interval.shape[0])
+        # jitted-driver cache: run_local/step_local build a fresh closure per
+        # call, which would otherwise defeat jax.jit's function-identity cache
+        # and recompile the whole superstep on every invocation
+        self._jit_cache: dict = {}
 
     # ------------------------------------------------------------------ init
     def init_state(self) -> EngineState:
@@ -109,20 +154,26 @@ class Engine:
         A = self.spec.n_agents
         cap = self.spec.pool_cap
         pools = []
+        drops = []
         lp_agent = self.world.lp_agent
         for a in range(A):
             mine = self.init_events.valid & (lp_agent[self.init_events.dst] == a)
             batch = self.init_events._replace(valid=mine)
             pool, dropped = ev.insert(ev.empty_pool(cap), batch)
             pools.append(pool)
+            drops.append(dropped)
         pool = jax.tree.map(lambda *xs: jnp.stack(xs), *pools)
         rep = lambda x: jnp.broadcast_to(x, (A,) + x.shape)
         world = jax.tree.map(rep, self.world)
         tc = max(self.trace_cap, 1)
+        # oversubscribed seeds (init events beyond pool_cap) are visible, not
+        # silent: the per-agent insert drop count lands in C_DROP_POOL
+        counters = jnp.zeros((A, mon.N_COUNTERS), jnp.int32).at[
+            :, mon.C_DROP_POOL].set(jnp.stack(drops))
         return EngineState(
             world=world,
             pool=pool,
-            counters=jnp.zeros((A, mon.N_COUNTERS), jnp.int32),
+            counters=counters,
             t_now=jnp.zeros((A,), jnp.int32),
             done=jnp.zeros((A,), bool),
             windows=jnp.zeros((A,), jnp.int32),
@@ -150,11 +201,42 @@ class Engine:
         exec_slots, exec_safe = sync.exec_selection(safe, exec_idx)
         cand = ev.gather(pool, exec_idx)
 
-        # 4. execute the window: sequential fold over the exec_cap gathered
-        # slots; safe events beyond exec_cap spill to the next window
-        ecap = spec.emit_cap
+        # 4. execute the window: grouped vectorized dispatch (default) or the
+        # sequential fold — byte-identical results either way; safe events
+        # beyond exec_cap spill to the next window
+        execute = (self._execute_batched if spec.batched_dispatch
+                   else self._execute_scan)
+        world, counters, emits, trace, trace_n = execute(
+            world, counters, cand, exec_safe, st.trace, st.trace_n)
+
+        n_processed = jnp.sum(exec_safe.astype(jnp.int32))
+        n_spill = jnp.sum(safe.astype(jnp.int32)) - n_processed
+        counters = mon.bump(counters, mon.C_EVENTS, n_processed)
+        counters = mon.bump(counters, mon.C_EXEC_SPILL, n_spill)
+        counters = mon.bump(counters, mon.C_WINDOWS, 1)
+        pool = ev.pop_mask(pool, exec_slots)
+
+        # processed LPs drop back to WAITING at window end (thread states -> data)
+        world = world._replace(
+            lp_state=jnp.where(world.lp_state == 2, 3, world.lp_state))
+
+        # 5-6. route + insert
+        pool, counters = self._route_and_insert(world, pool, counters, emits, axis)
+
+        # 7. replicated-state sync (C4)
+        world = sync_world(world, self.own, axis)
+
+        return EngineState(world=world, pool=pool, counters=counters,
+                           t_now=jnp.max(horizon), done=done,
+                           windows=st.windows + 1, trace=trace, trace_n=trace_n)
+
+    # ------------------------------------------------- step 4: sequential fold
+    def _execute_scan(self, world, counters, cand: ev.EventBatch,
+                      exec_safe: jax.Array, trace, trace_n):
+        """PR 1 path: lax.scan over the gathered slots in (time, seq) order."""
+        ecap = self.spec.emit_cap
         emit0 = ev.empty_batch(ecap)
-        trace0, trace_n0 = st.trace, st.trace_n
+        trace0, trace_n0 = trace, trace_n
 
         def body(carry, x):
             world, counters, emits, emit_n, trace, trace_n = carry
@@ -207,27 +289,114 @@ class Engine:
         carry0 = (world, counters, emit0, jnp.int32(0), trace0, trace_n0)
         (world, counters, emits, _, trace, trace_n), _ = jax.lax.scan(
             body, carry0, (cand, exec_safe))
+        return world, counters, emits, trace, trace_n
 
-        n_processed = jnp.sum(exec_safe.astype(jnp.int32))
-        n_spill = jnp.sum(safe.astype(jnp.int32)) - n_processed
-        counters = mon.bump(counters, mon.C_EVENTS, n_processed)
-        counters = mon.bump(counters, mon.C_EXEC_SPILL, n_spill)
-        counters = mon.bump(counters, mon.C_WINDOWS, 1)
-        pool = ev.pop_mask(pool, exec_slots)
+    # -------------------------------------------- step 4: vectorized dispatch
+    def _execute_batched(self, world, counters, cand: ev.EventBatch,
+                         exec_safe: jax.Array, trace, trace_n):
+        """Grouped vectorized dispatch (see module docstring).
 
-        # processed LPs drop back to WAITING at window end (thread states -> data)
-        world = world._replace(
-            lp_state=jnp.where(world.lp_state == 2, 3, world.lp_state))
+        Conflict-free slots run in one vmapped handler call per window; slots
+        whose writes could overlap (duplicate dst LP / shared component row)
+        fall back to a sequential fold compacted to just those slots. Emits
+        land in a per-slot (exec_cap, MAX_EMIT) matrix and the trace is
+        written in (time, seq) window order, so the results are byte-identical
+        to ``_execute_scan``.
+        """
+        spec = self.spec
+        xcap = cand.time.shape[0]
 
-        # 5-6. route + insert
-        pool, counters = self._route_and_insert(world, pool, counters, emits, axis)
+        # conflict detection: duplicate dst LPs or shared component rows
+        table_id = jnp.asarray(ev.KIND_TABLE, jnp.int32)[
+            jnp.clip(cand.kind, 0, ev.N_KINDS - 1)]
+        res = world.lp_res[jnp.clip(cand.dst, 0, spec.n_lp - 1)]
+        dirty = sync.conflict_mask(exec_safe, cand.dst, table_id, res,
+                                   n_lp=spec.n_lp, n_res=self._n_res)
+        clean = exec_safe & ~dirty
 
-        # 7. replicated-state sync (C4)
-        world = sync_world(world, self.own, axis)
+        # batched phase: group the clean rows by kind, dispatch once. The
+        # grouped order keeps same-kind lanes contiguous (coherent segments on
+        # wide-vector backends); the merge itself is order-independent under
+        # the disjoint-write contract, and a vmapped switch traces every
+        # handler per lane either way — on CPU the permutation costs a few
+        # percent of the window and buys layout, not fewer handler evals.
+        order, _rank, _counts = self.group_fn(cand.kind, clean)
+        rows_g = jax.tree.map(lambda x: x[order], cand)
+        clean_g = clean[order]
+        world, cdelta, emits_g = apply_handler_batch(self.table, world,
+                                                     rows_g, clean_g)
+        counters = counters + cdelta
+        counters = mon.bump(counters, mon.C_BATCH_EXEC,
+                            jnp.sum(clean.astype(jnp.int32)))
 
-        return EngineState(world=world, pool=pool, counters=counters,
-                           t_now=jnp.max(horizon), done=done,
-                           windows=st.windows + 1, trace=trace, trace_n=trace_n)
+        # per-slot emit matrix in window order (grouped lanes scattered back)
+        emit_mat = jax.tree.map(lambda x: jnp.zeros_like(x).at[order].set(x),
+                                emits_g)
+
+        # conflict fallback: sequential fold compacted to the dirty slots
+        # (zero while_loop iterations on a conflict-free window)
+        n_dirty = jnp.sum(dirty.astype(jnp.int32))
+        counters = mon.bump(counters, mon.C_BATCH_FALLBACK, n_dirty)
+        pos = jnp.arange(xcap, dtype=jnp.int32)
+        dpos = jnp.sort(jnp.where(dirty, pos, xcap))
+
+        def cond(carry):
+            return carry[0] < n_dirty
+
+        def body(carry):
+            k, world, counters, emit_mat = carry
+            p = dpos[jnp.minimum(k, xcap - 1)]
+            row = jax.tree.map(lambda x: x[jnp.minimum(p, xcap - 1)], cand)
+            e = Ev(time=row.time, seq=row.seq, kind=row.kind,
+                   src=row.src, dst=row.dst, ctx=row.ctx,
+                   payload=row.payload)
+            active = k < n_dirty
+
+            def run(w, c):
+                w2, c2, out = apply_handler(self.table, w, c, e)
+                w2 = w2._replace(
+                    lp_lvt=w2.lp_lvt.at[e.dst].max(e.time),
+                    lp_state=w2.lp_state.at[e.dst].set(2),  # RUNNING
+                )
+                return w2, c2, out
+
+            def skip(w, c):
+                return w, c, ev.empty_batch(ev.MAX_EMIT)
+
+            world, counters, out = jax.lax.cond(active, run, skip,
+                                                world, counters)
+            emit_mat = ev.EventBatch(
+                time=emit_mat.time.at[p].set(out.time, mode="drop"),
+                seq=emit_mat.seq.at[p].set(out.seq, mode="drop"),
+                kind=emit_mat.kind.at[p].set(out.kind, mode="drop"),
+                src=emit_mat.src.at[p].set(out.src, mode="drop"),
+                dst=emit_mat.dst.at[p].set(out.dst, mode="drop"),
+                ctx=emit_mat.ctx.at[p].set(out.ctx, mode="drop"),
+                payload=emit_mat.payload.at[p].set(out.payload, mode="drop"),
+                valid=emit_mat.valid.at[p].set(out.valid & active,
+                                               mode="drop"),
+            )
+            return k + 1, world, counters, emit_mat
+
+        _, world, counters, emit_mat = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), world, counters, emit_mat))
+
+        # trace in (time, seq) window order — independent of execution order
+        tcap = trace.shape[0]
+        offs = jnp.cumsum(exec_safe.astype(jnp.int32)) - 1
+        tpos = trace_n + offs
+        tidx = jnp.where(exec_safe & (tpos < tcap), tpos, tcap)
+        rows4 = jnp.stack([cand.time, cand.seq, cand.kind, cand.dst], axis=1)
+        trace = trace.at[tidx].set(rows4, mode="drop")
+        trace_n = trace_n + jnp.sum(exec_safe.astype(jnp.int32))
+
+        # segmented emit merge: flatten the per-slot matrix row-major (== the
+        # sequential append order) and compact into the window emit buffer
+        flat = jax.tree.map(
+            lambda x: x.reshape((xcap * ev.MAX_EMIT,) + x.shape[2:]), emit_mat)
+        emits, _n_emit, dropped = ev.compact_batch(flat, spec.emit_cap)
+        counters = mon.bump(counters, mon.C_DROP_POOL, dropped)
+        return world, counters, emits, trace, trace_n
 
     # ---------------------------------------------------------------- routing
     def _route_and_insert(self, world: World, pool: ev.EventPool, counters,
@@ -310,10 +479,14 @@ class Engine:
     def run_local(self, max_windows: int = 10_000, jit: bool = True) -> EngineState:
         """Single-device multi-agent execution (vmap over the agents axis)."""
         st = self.init_state()
-        fn = jax.vmap(self._run_fn(AXIS if self.spec.n_agents > 1 else None,
-                                   max_windows), axis_name=AXIS)
-        if jit:
-            fn = jax.jit(fn)
+        key = ("run_local", max_windows, jit)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            fn = jax.vmap(self._run_fn(AXIS if self.spec.n_agents > 1 else None,
+                                       max_windows), axis_name=AXIS)
+            if jit:
+                fn = jax.jit(fn)
+            self._jit_cache[key] = fn
         return fn(st)
 
     def run_distributed(self, mesh: Mesh, max_windows: int = 10_000) -> EngineState:
@@ -363,7 +536,11 @@ class Engine:
 
     def step_local(self, st: EngineState) -> EngineState:
         """One conservative window (vmap driver) — used by tests and benchmarks."""
-        fn = jax.vmap(
-            lambda s: self._superstep(s, AXIS if self.spec.n_agents > 1 else None),
-            axis_name=AXIS)
-        return jax.jit(fn)(st)
+        fn = self._jit_cache.get("step_local")
+        if fn is None:
+            fn = jax.jit(jax.vmap(
+                lambda s: self._superstep(s, AXIS if self.spec.n_agents > 1
+                                          else None),
+                axis_name=AXIS))
+            self._jit_cache["step_local"] = fn
+        return fn(st)

@@ -38,6 +38,19 @@ K_MIGRATE = 6
 K_GEN_TICK = 7
 N_KINDS = 8
 
+# Component table each kind's handler reads/writes (replicated-write conflict
+# detection for batched dispatch): 0 = none, 1 = farm, 2 = net region,
+# 3 = storage, 4 = generator. Indexed by kind; must stay in sync with the
+# handler bodies in handlers.py.
+TBL_NONE = 0
+TBL_FARM = 1
+TBL_NET = 2
+TBL_STORAGE = 3
+TBL_GEN = 4
+N_TABLES = 5
+KIND_TABLE = (TBL_NONE, TBL_NET, TBL_NET, TBL_FARM, TBL_FARM,
+              TBL_STORAGE, TBL_STORAGE, TBL_GEN)
+
 SEQ_MASK = 2**31 - 1
 
 
@@ -188,6 +201,33 @@ def gather(pool: EventPool, idx: jax.Array) -> EventBatch:
         payload=pool.payload[idx],
         valid=pool.valid[idx],
     )
+
+
+def compact_batch(batch: EventBatch, cap: int):
+    """Segmented append: compact ``batch``'s valid rows, in order, into a fresh
+    ``cap``-row batch.
+
+    The batched dispatcher collects every executed slot's emits into a
+    (exec_cap, MAX_EMIT) matrix; flattened row-major it is exactly the
+    sequential fold's append order, so this compaction keeps the same rows in
+    the same order as the scan's per-event appends — including which
+    overflowing rows are dropped. Implemented as one stable argsort on the
+    valid flag plus a ``cap``-row gather (XLA scatters are far slower than a
+    sort at pool widths). Returns (batch', n_valid, n_dropped).
+    """
+    n = batch.size
+    val = batch.valid
+    take = min(cap, n)
+    order = jnp.argsort(~val, stable=True).astype(jnp.int32)[:take]
+    out = jax.tree.map(lambda x: x[order], batch)
+    if take < cap:
+        pad = empty_batch(cap - take)
+        out = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), out, pad)
+    # keep the dead-slot convention: invalid rows carry T_INF
+    out = out._replace(time=jnp.where(out.valid, out.time, T_INF))
+    n_valid = jnp.sum(val.astype(jnp.int32))
+    n_kept = jnp.sum(out.valid.astype(jnp.int32))
+    return out, n_valid, n_valid - n_kept
 
 
 def pop_mask(pool: EventPool, mask: jax.Array) -> EventPool:

@@ -344,3 +344,70 @@ def apply_handler(table, world: World, counters, e: Ev):
     """Dispatch one event through the handler table (lax.switch over kind)."""
     kind = jnp.clip(e.kind, 0, len(table) - 1)
     return jax.lax.switch(kind, table, world, counters, e)
+
+
+# World fields a handler may write — everything else (topology, capacities,
+# placement, LP columns) is immutable inside a window or owned by the engine
+# wrapper. Mirrors the owner-wins field list in components.sync_world minus
+# lp_state/lp_lvt, which the engine applies as segment scatters over the
+# event batch. Restricting the vectorized merge to these fields keeps the
+# batched dispatch O(lanes x component tables) instead of O(lanes x world).
+MUTABLE_FIELDS = ("cpu_busy", "cpu_mem", "jobq", "jobq_n",
+                  "flow_active", "flow_rem", "flow_rate", "flow_tlast",
+                  "flow_links", "flow_notify", "net_gen",
+                  "sto_used", "sto_flag", "gen_left")
+
+
+def apply_handler_batch(table, world: World, rows: ev.EventBatch,
+                        active: jax.Array):
+    """Dispatch a window's candidate rows through one vectorized handler call.
+
+    Batch-safety contract: every handler is a pure ``world``-indexed function —
+    it reads and writes only the component row owned by its destination LP
+    (``lp_res[e.dst]``) plus write-only commutative counters. The caller
+    guarantees ``active`` rows have pairwise-distinct destination LPs and
+    component rows (sync.conflict_mask), so each world element is written by
+    at most one active lane and the element-wise segment scatter below ("take
+    the one lane that changed it") is exact — no arithmetic on state values,
+    hence byte-identical to folding the same rows sequentially in any order.
+    The per-LP LVT/lifecycle columns are likewise disjoint across lanes and
+    are applied as two direct segment scatters (max commutes; the RUNNING
+    mark is idempotent).
+
+    Returns ``(world', counter_delta, emits)`` with emits shaped
+    (B, MAX_EMIT) per field, lane-aligned with ``rows`` and masked by
+    ``active``.
+    """
+    n_lanes = rows.time.shape[0]
+
+    def lane(row):
+        e = Ev(time=row.time, seq=row.seq, kind=row.kind, src=row.src,
+               dst=row.dst, ctx=row.ctx, payload=row.payload)
+        w2, c2, out = apply_handler(table, world, mon.zero_counters(), e)
+        return {f: getattr(w2, f) for f in MUTABLE_FIELDS}, c2, out
+
+    lanes_mut, lanes_counters, lanes_out = jax.vmap(lane)(rows)
+
+    # counters: write-only int adds commute, so summing the active lanes'
+    # deltas equals bumping them one by one in window order.
+    cdelta = jnp.sum(jnp.where(active[:, None], lanes_counters, 0), axis=0)
+
+    def merge(lane_field, base):
+        m = active.reshape((n_lanes,) + (1,) * base.ndim)
+        changed = m & (lane_field != base[None])
+        pick = jnp.argmax(changed, axis=0)
+        picked = jnp.take_along_axis(lane_field, pick[None], axis=0)[0]
+        return jnp.where(jnp.any(changed, axis=0), picked, base)
+
+    world = world._replace(**{
+        f: merge(lanes_mut[f], getattr(world, f)) for f in MUTABLE_FIELDS})
+
+    # per-LP columns: disjoint dst across active lanes -> one scatter each
+    dst = jnp.where(active, rows.dst, world.lp_lvt.shape[0])  # OOB -> drop
+    world = world._replace(
+        lp_lvt=world.lp_lvt.at[dst].max(rows.time, mode="drop"),
+        lp_state=world.lp_state.at[dst].set(2, mode="drop"),  # RUNNING
+    )
+
+    out_valid = lanes_out.valid & active[:, None]
+    return world, cdelta, lanes_out._replace(valid=out_valid)

@@ -34,9 +34,16 @@ C_WRITES = 15         # storage writes
 C_MB_WRITTEN = 16
 C_LP_LOCAL = 17       # events destined to locally-owned LPs (scheduler locality signal)
 C_EXEC_SPILL = 18     # safe events deferred past exec_cap to the next window
-N_COUNTERS = 19
+C_BATCH_EXEC = 19     # events executed through the grouped vectorized dispatch
+C_BATCH_FALLBACK = 20  # conflicted events executed via the sequential fallback
+N_COUNTERS = 21
 
 DROP_COUNTERS = (C_DROP_POOL, C_DROP_ROUTE, C_DROP_FLOW, C_DROP_QUEUE)
+
+# Dispatch-path diagnostics: the only counters allowed to differ between the
+# batched and the sequential execution of the same scenario (everything else
+# is byte-identical by the batched-dispatch equivalence contract).
+BATCH_DIAG_COUNTERS = (C_BATCH_EXEC, C_BATCH_FALLBACK)
 
 
 def zero_counters() -> jax.Array:

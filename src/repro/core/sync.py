@@ -54,6 +54,46 @@ def safe_mask(pool: ev.EventPool, horizon_per_ctx: jax.Array) -> jax.Array:
     return pool.valid & (pool.time < horizon_per_ctx[pool.ctx])
 
 
+def _dup_mask(key: jax.Array, active: jax.Array, n_keys: int) -> jax.Array:
+    """True where ``key`` occurs more than once among ``active`` rows.
+
+    Inactive rows are rewritten to per-row unique sentinels (>= n_keys) so they
+    can never collide; a sort + equal-neighbour compare then marks every member
+    of a duplicated group, scattered back to input order.
+    """
+    n = key.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    k = jnp.where(active, key, jnp.int32(n_keys) + pos)
+    order = jnp.argsort(k)
+    ks = k[order]
+    eq = ks[1:] == ks[:-1]
+    pad = jnp.zeros((1,), bool)
+    dup_sorted = jnp.concatenate([pad, eq]) | jnp.concatenate([eq, pad])
+    return jnp.zeros((n,), bool).at[order].set(dup_sorted)
+
+
+def conflict_mask(safe: jax.Array, dst: jax.Array, table_id: jax.Array,
+                  res: jax.Array, *, n_lp: int, n_res: int) -> jax.Array:
+    """Rows of a window whose handler writes may overlap another safe row's.
+
+    A row conflicts when (a) its destination LP also appears on another safe
+    row (duplicate ``dst``), or (b) another safe row addresses the same
+    replicated-component row — same component table (``events.KIND_TABLE``)
+    and same resource row ``lp_res[dst]``. Conflict-free rows touch pairwise
+    disjoint world state (handlers read/write only their own LP columns and
+    their own ``lp_res`` row; counters are write-only commutative adds), so
+    they may execute in one vectorized batch with a disjoint-write merge and
+    stay byte-identical to the sequential fold. Conflicted rows take the
+    engine's sequential fallback. ``table_id == 0`` (kinds with no component
+    writes, e.g. NOOP) never conflicts via (b).
+    """
+    dup_dst = _dup_mask(dst, safe, n_lp)
+    rkey = table_id * jnp.int32(n_res) + res
+    comp = safe & (table_id > 0)
+    dup_res = _dup_mask(rkey, comp, ev.N_TABLES * n_res)
+    return safe & (dup_dst | dup_res)
+
+
 def exec_selection(safe: jax.Array, exec_idx: jax.Array):
     """Compacted-window execution masks (engine step 4).
 

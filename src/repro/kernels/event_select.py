@@ -104,3 +104,94 @@ def select_events(time_key: jax.Array, seq: jax.Array, exec_cap: int, *,
     """
     return _run_sort(time_key, seq, min(exec_cap, time_key.shape[0]),
                      interpret=interpret)
+
+
+def _group_kernel(kind_ref, act_ref, order_ref, rank_ref, counts_ref, *,
+                  n: int, n_kinds: int):
+    """Segment-rank grouping: bitonic sort by (kind, index) + in-VMEM ranks.
+
+    Active rows get key = kind, inactive rows key = n_kinds (grouping them
+    after every real kind), zero-padding beyond the caller's cap sorts last
+    (its index exceeds every real row's). After the sort the grouped index
+    vector IS the permutation; segment ranks fall out of a static loop over
+    the n_kinds+1 possible keys (position minus the segment's exclusive
+    prefix count), so no dynamic gather is needed on the VPU.
+    """
+    kd = kind_ref[0]                       # (n,)
+    act = act_ref[0] != 0
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)[0]
+    key = jnp.where(act, jnp.clip(kd, 0, n_kinds - 1), jnp.int32(n_kinds))
+
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            def pairs(x):
+                return x.reshape(n // (2 * j), 2, j)
+
+            kp, ip = pairs(key), pairs(idx)
+            lo_i = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * j), 1, j), 0)
+            lo_r = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * j), 1, j), 2)
+            lo_index = lo_i * (2 * j) + lo_r
+            ascend = (lo_index & k) == 0
+
+            k_lo, k_hi = kp[:, :1], kp[:, 1:]
+            i_lo, i_hi = ip[:, :1], ip[:, 1:]
+            le = (k_lo < k_hi) | ((k_lo == k_hi) & (i_lo < i_hi))
+            swap = jnp.where(ascend, ~le, le)
+
+            def mix(lo, hi):
+                nlo = jnp.where(swap, hi, lo)
+                nhi = jnp.where(swap, lo, hi)
+                return jnp.concatenate([nlo, nhi], axis=1).reshape(n)
+
+            key, idx = mix(k_lo, k_hi), mix(i_lo, i_hi)
+            j //= 2
+        k *= 2
+
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)[0]
+    rank = pos
+    total = jnp.int32(0)
+    counts = []
+    for g in range(n_kinds + 1):
+        in_g = key == g
+        cnt = jnp.sum(in_g.astype(jnp.int32))
+        rank = rank - jnp.where(in_g, total, 0)
+        if g < n_kinds:
+            counts.append(cnt)
+        total = total + cnt
+
+    order_ref[0] = idx
+    rank_ref[0] = rank
+    counts_ref[0] = jnp.stack(counts)
+
+
+def group_by_kind(kind: jax.Array, active: jax.Array, n_kinds: int, *,
+                  interpret=False):
+    """Same-kind grouping for the engine's batched dispatch (step 4).
+
+    Returns ``(order, rank, counts)`` matching ref.group_by_kind_ref: active
+    rows first, grouped by ascending kind and stable in original position;
+    ``rank`` gives each grouped row's index within its kind segment; ``counts``
+    is the (n_kinds,) active population per kind.
+    """
+    cap = kind.shape[0]
+    n = 1 << max((cap - 1).bit_length(), 1)
+    kpad = jnp.zeros((n,), jnp.int32).at[:cap].set(kind)[None]
+    apad = jnp.zeros((n,), jnp.int32).at[:cap].set(
+        active.astype(jnp.int32))[None]
+    kernel = functools.partial(_group_kernel, n=n, n_kinds=n_kinds)
+    order, rank, counts = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (0, 0)),
+                  pl.BlockSpec((1, n), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((1, n), lambda i: (0, 0)),
+                   pl.BlockSpec((1, n), lambda i: (0, 0)),
+                   pl.BlockSpec((1, n_kinds), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, n), jnp.int32),
+                   jax.ShapeDtypeStruct((1, n), jnp.int32),
+                   jax.ShapeDtypeStruct((1, n_kinds), jnp.int32)],
+        interpret=interpret,
+    )(kpad, apad)
+    return order[0, :cap], rank[0, :cap], counts[0]

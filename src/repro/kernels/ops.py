@@ -58,6 +58,13 @@ def select_events(time_key, seq, exec_cap):
     return _es.select_events(time_key, seq, exec_cap, interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("n_kinds",))
+def group_by_kind(kind, active, n_kinds=8):
+    """(CAP,) kinds + active mask -> (order, rank, counts). Engine group_fn
+    hook for batched same-kind dispatch (segment-rank Pallas kernel)."""
+    return _es.group_by_kind(kind, active, n_kinds, interpret=_interpret())
+
+
 @jax.jit
 def maxmin_rates(inc, bw, active):
     """(F, L), (L,), (F,) -> (F,) max-min fair rates."""

@@ -44,3 +44,15 @@ def select_events_ref(time_key: jax.Array, seq: jax.Array,
     """Compacted gather indices: first ``exec_cap`` of the stable (time, seq)
     sort — the XLA reference for kernels.event_select.select_events."""
     return sort_events_ref(time_key, seq)[: min(exec_cap, time_key.shape[0])]
+
+
+def group_by_kind_ref(kind: jax.Array, active: jax.Array, n_kinds: int):
+    """Same-kind grouping (order, rank, counts) — XLA reference for
+    kernels.event_select.group_by_kind; mirror of engine.group_by_kind_xla."""
+    key = jnp.where(active, jnp.clip(kind, 0, n_kinds - 1), jnp.int32(n_kinds))
+    order = jnp.argsort(key, stable=True).astype(jnp.int32)
+    ks = key[order]
+    start = jnp.searchsorted(ks, ks, side="left").astype(jnp.int32)
+    rank = jnp.arange(ks.shape[0], dtype=jnp.int32) - start
+    counts = jnp.zeros((n_kinds,), jnp.int32).at[key].add(1, mode="drop")
+    return order, rank, counts

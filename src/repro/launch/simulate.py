@@ -35,7 +35,8 @@ def run_t0t1(args):
                         interval=15, count=args.flows)
         world, own, init_ev, spec = b.build(
             n_agents=args.agents, lookahead=2, t_end=100_000, pool_cap=1024,
-            exec_cap=args.exec_cap, work_per_mb=2.0)
+            exec_cap=args.exec_cap, work_per_mb=2.0,
+            batched_dispatch=args.batched_dispatch)
         eng = Engine(world, own, init_ev, spec)
         st = eng.run_local(max_windows=200_000)
         c = np.asarray(st.counters).sum(axis=0)
@@ -85,7 +86,8 @@ def run_distributed(args):
     world, own, init_ev, spec = b.build(n_agents=n, lookahead=2,
                                         t_end=100_000, pool_cap=512,
                                         exec_cap=args.exec_cap,
-                                        work_per_mb=2.0)
+                                        work_per_mb=2.0,
+                                        batched_dispatch=args.batched_dispatch)
     eng = Engine(world, own, init_ev, spec)
     mesh = Mesh(np.array(jax.devices()[:n]), ("agents",))
     st = eng.run_distributed(mesh, max_windows=200_000)
@@ -106,6 +108,10 @@ def main():
     p1.add_argument("--exec-cap", type=int, default=None,
                     help="per-window compacted execution cap "
                          "(default min(pool_cap, 256))")
+    p1.add_argument("--batched-dispatch", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="grouped vectorized handler dispatch (engine step 4); "
+                         "--no-batched-dispatch restores the sequential fold")
     p2 = sub.add_parser("workload")
     p2.add_argument("--results", default="results/dryrun")
     p2.add_argument("--cell", default="")
@@ -114,6 +120,10 @@ def main():
     p3.add_argument("--exec-cap", type=int, default=None,
                     help="per-window compacted execution cap "
                          "(default min(pool_cap, 256))")
+    p3.add_argument("--batched-dispatch", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="grouped vectorized handler dispatch (engine step 4); "
+                         "--no-batched-dispatch restores the sequential fold")
     args = ap.parse_args()
     dict(t0t1=run_t0t1, workload=run_workload,
          distributed=run_distributed)[args.mode](args)

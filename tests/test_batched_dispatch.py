@@ -1,0 +1,287 @@
+"""Batched same-kind handler dispatch (engine step 4).
+
+The grouped vectorized dispatcher must be byte-identical to the PR 1
+sequential fold — same traces, same counters (modulo the two batch-path
+diagnostics), same world and pool state — on mixed-kind windows, under
+duplicate-dst conflict fallback, and when safe events spill past exec_cap.
+These tests pin that contract against the sequential oracle and against the
+sequential engine path, plus unit coverage for the new conflict mask, the
+segmented emit compaction, and the init-state drop accounting.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import t0t1_builder
+from repro.core import (
+    Engine,
+    ScenarioBuilder,
+    events as ev,
+    merged_engine_trace,
+    run_sequential,
+    sync,
+)
+from repro.core import monitoring as mon
+
+NON_DIAG = [i for i in range(mon.N_COUNTERS) if i not in mon.BATCH_DIAG_COUNTERS]
+
+
+def run_pair(world, own, init_ev, spec, max_windows=20000):
+    """Run one scenario under batched and under sequential dispatch."""
+    eng_b = Engine(world, own, init_ev, spec, trace_cap=4096)
+    st_b = eng_b.run_local(max_windows=max_windows)
+    spec_s = dataclasses.replace(spec, batched_dispatch=False)
+    eng_s = Engine(world, own, init_ev, spec_s, trace_cap=4096)
+    st_s = eng_s.run_local(max_windows=max_windows)
+    return st_b, st_s
+
+
+def engine_trace(st):
+    return merged_engine_trace(np.asarray(st.trace), np.asarray(st.trace_n))
+
+
+def assert_states_identical(st_b, st_s):
+    """Batched and sequential dispatch agree byte-for-byte."""
+    cb = np.asarray(st_b.counters)
+    cs = np.asarray(st_s.counters)
+    np.testing.assert_array_equal(cb[:, NON_DIAG], cs[:, NON_DIAG])
+    assert engine_trace(st_b) == engine_trace(st_s)
+    np.testing.assert_array_equal(np.asarray(st_b.windows), np.asarray(st_s.windows))
+    for name, a, b in zip(st_b.world._fields, st_b.world, st_s.world):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+    for name, a, b in zip(st_b.pool._fields, st_b.pool, st_s.pool):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+
+@pytest.mark.parametrize("n_agents", [1, 2])
+def test_mixed_kind_windows_match_oracle(n_agents, t0t1_oracle):
+    """The T0/T1 study mixes flow, job, write, and tick kinds per window."""
+    ow, _oc, otrace = t0t1_oracle
+    b, kw = t0t1_builder()
+    world, own, init_ev, spec = b.build(n_agents=n_agents, **kw)
+    st_b, st_s = run_pair(world, own, init_ev, spec)
+    assert engine_trace(st_b) == otrace
+    c = np.asarray(st_b.counters).sum(axis=0)
+    assert c[mon.C_BATCH_EXEC] + c[mon.C_BATCH_FALLBACK] == c[mon.C_EVENTS]
+    w = jax.tree.map(lambda x: np.asarray(x[0]), st_b.world)
+    np.testing.assert_allclose(np.asarray(ow.sto_used), w.sto_used, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ow.lp_lvt), w.lp_lvt)
+    assert_states_identical(st_b, st_s)
+
+
+def test_clean_mixed_kind_window_runs_fully_batched():
+    """Distinct-dst events of four kinds in one window: no fallback at all."""
+    b = ScenarioBuilder(max_cpu=2, queue_cap=8, max_link=2, max_flow=8)
+    farm0 = b.add_farm([4.0])
+    farm1 = b.add_farm([2.0])
+    sto0 = b.add_storage(500.0, 5000.0, 5.0)
+    sto1 = b.add_storage(400.0, 4000.0, 5.0)
+    sinks = [b.add_idle_lp() for _ in range(4)]
+    job = [8.0, 1.0, -1, -1, 0]
+    b.add_event(time=1, kind=ev.K_JOB_SUBMIT, src=farm0, dst=farm0, payload=job)
+    b.add_event(time=1, kind=ev.K_JOB_SUBMIT, src=farm1, dst=farm1, payload=job)
+    b.add_event(time=1, kind=ev.K_DATA_WRITE, src=sto0, dst=sto0, payload=[15.0])
+    b.add_event(time=1, kind=ev.K_DATA_WRITE, src=sto1, dst=sto1, payload=[10.0])
+    for lp in sinks:
+        b.add_event(time=1, kind=ev.K_NOOP, src=lp, dst=lp)
+    built = b.build(n_agents=1, lookahead=4, t_end=200, pool_cap=128)
+    world, own, init_ev, spec = built
+    _ow, _oc, otrace = run_sequential(world, own, init_ev, spec)
+    st_b, st_s = run_pair(world, own, init_ev, spec)
+    c = np.asarray(st_b.counters)[0]
+    assert c[mon.C_BATCH_FALLBACK] == 0
+    assert c[mon.C_BATCH_EXEC] == c[mon.C_EVENTS] > 0
+    assert engine_trace(st_b) == otrace
+    assert_states_identical(st_b, st_s)
+
+
+def test_duplicate_dst_conflicts_fall_back_and_match_oracle():
+    """Same-window same-dst events must take the sequential fallback."""
+    b = ScenarioBuilder(max_cpu=2)
+    farm0 = b.add_farm([5.0])
+    farm1 = b.add_farm([5.0])
+    sinks = [b.add_idle_lp() for _ in range(3)]
+    for _ in range(6):
+        b.add_event(time=1, kind=ev.K_NOOP, src=farm0, dst=farm0)
+        b.add_event(time=1, kind=ev.K_NOOP, src=farm1, dst=farm1)
+    for lp in sinks:
+        b.add_event(time=1, kind=ev.K_NOOP, src=lp, dst=lp)
+    built = b.build(n_agents=1, lookahead=1, t_end=10, pool_cap=64, exec_cap=32)
+    world, own, init_ev, spec = built
+    _ow, _oc, otrace = run_sequential(world, own, init_ev, spec)
+    st_b, st_s = run_pair(world, own, init_ev, spec)
+    c = np.asarray(st_b.counters)[0]
+    assert c[mon.C_BATCH_FALLBACK] == 12
+    assert c[mon.C_BATCH_EXEC] == 3
+    assert c[mon.C_EVENTS] == 15
+    assert engine_trace(st_b) == otrace
+    assert_states_identical(st_b, st_s)
+
+
+@pytest.mark.parametrize("exec_cap", [1, 2])
+def test_spill_interaction_matches_oracle(exec_cap, t0t1_oracle):
+    """exec_cap < n_safe: batched windows spill exactly like sequential ones."""
+    _ow, _oc, otrace = t0t1_oracle
+    b, kw = t0t1_builder()
+    world, own, init_ev, spec = b.build(n_agents=1, exec_cap=exec_cap, **kw)
+    st_b, st_s = run_pair(world, own, init_ev, spec)
+    c = np.asarray(st_b.counters).sum(axis=0)
+    assert c[mon.C_EXEC_SPILL] > 0
+    assert engine_trace(st_b) == otrace
+    assert_states_identical(st_b, st_s)
+
+
+def test_conflict_mask_flags_duplicate_dst():
+    safe = jnp.asarray([True, True, True, False])
+    dst = jnp.asarray([4, 4, 2, 2], jnp.int32)
+    table = jnp.zeros((4,), jnp.int32)
+    res = jnp.zeros((4,), jnp.int32)
+    got = sync.conflict_mask(safe, dst, table, res, n_lp=8, n_res=16)
+    assert np.asarray(got).tolist() == [True, True, False, False]
+
+
+def test_conflict_mask_flags_shared_component_row():
+    """Distinct LPs writing one component row still conflict; table 0 never."""
+    safe = jnp.ones((4,), bool)
+    dst = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    table = jnp.asarray([1, 1, 2, 0], jnp.int32)
+    res = jnp.asarray([5, 5, 5, 5], jnp.int32)
+    got = sync.conflict_mask(safe, dst, table, res, n_lp=8, n_res=16)
+    assert np.asarray(got).tolist() == [True, True, False, False]
+
+
+def test_compact_batch_keeps_order_and_counts_drops():
+    base = ev.empty_batch(6)
+    batch = base._replace(
+        time=jnp.asarray([9, 1, 9, 2, 3, 4], jnp.int32),
+        seq=jnp.asarray([10, 11, 12, 13, 14, 15], jnp.int32),
+        valid=jnp.asarray([False, True, False, True, True, True]),
+    )
+    out, n_valid, dropped = ev.compact_batch(batch, 3)
+    assert int(n_valid) == 4
+    assert int(dropped) == 1
+    assert np.asarray(out.time).tolist() == [1, 2, 3]
+    assert np.asarray(out.seq).tolist() == [11, 13, 14]
+    assert np.asarray(out.valid).all()
+    wide, n_valid, dropped = ev.compact_batch(batch, 8)
+    assert int(n_valid) == 4
+    assert int(dropped) == 0
+    assert np.asarray(wide.valid).tolist() == [True] * 4 + [False] * 4
+    assert np.asarray(wide.time).tolist()[:4] == [1, 2, 3, 4]
+    assert np.asarray(wide.time).tolist()[4:] == [int(ev.T_INF)] * 4
+
+
+def test_init_state_counts_seed_pool_overflow():
+    """ROADMAP bugfix: oversubscribed seeds land in C_DROP_POOL, not silence."""
+    b = ScenarioBuilder(max_cpu=2)
+    farm = b.add_farm([5.0])
+    for i in range(10):
+        b.add_event(time=1 + i, kind=ev.K_NOOP, src=farm, dst=farm)
+    world, own, init_ev, spec = b.build(
+        n_agents=1,
+        lookahead=1,
+        t_end=50,
+        pool_cap=4,
+    )
+    st = Engine(world, own, init_ev, spec).init_state()
+    assert np.asarray(st.counters)[0, mon.C_DROP_POOL] == 6
+
+
+def check_batched_equals_sequential(p):
+    """Shared property body: one scenario, both dispatch paths, identical."""
+    b = ScenarioBuilder(max_cpu=4, queue_cap=8, max_link=4, max_flow=16)
+    t0 = b.add_regional_center(
+        n_cpu=2,
+        cpu_power=p["p0"],
+        disk=400.0,
+        tape=4000.0,
+        tape_rate=5.0,
+    )
+    t1 = b.add_regional_center(
+        n_cpu=2,
+        cpu_power=p["p1"],
+        disk=250.0,
+        tape=2500.0,
+        tape_rate=5.0,
+    )
+    wan = b.add_net_region(link_bws=[p["bw0"], p["bw1"]], link_lats=[5, 5])
+    payload = [
+        p["size"],
+        0,
+        -1,
+        -1,
+        t1["farm"],
+        ev.K_JOB_SUBMIT,
+        t1["storage"],
+        ev.K_DATA_WRITE,
+    ]
+    b.add_generator(
+        target_lp=wan,
+        kind=ev.K_FLOW_START,
+        payload=payload,
+        interval=p["interval"],
+        count=p["count"],
+    )
+    del t0
+    world, own, init_ev, spec = b.build(
+        n_agents=2,
+        lookahead=p["lookahead"],
+        t_end=3000,
+        pool_cap=256,
+        exec_cap=p["exec_cap"],
+        work_per_mb=2.0,
+    )
+    st_b, st_s = run_pair(world, own, init_ev, spec)
+    assert_states_identical(st_b, st_s)
+
+
+def test_batched_equals_sequential_fixed_examples():
+    """Seeded spot-checks of the property (runs without hypothesis)."""
+    rng = np.random.RandomState(0)
+    for _ in range(2):
+        p = dict(
+            p0=float(rng.uniform(1.0, 20.0)),
+            p1=float(rng.uniform(1.0, 20.0)),
+            bw0=float(rng.uniform(0.1, 8.0)),
+            bw1=float(rng.uniform(0.1, 8.0)),
+            size=float(rng.uniform(5.0, 120.0)),
+            interval=int(rng.randint(5, 60)),
+            count=int(rng.randint(2, 10)),
+            lookahead=int(rng.randint(1, 4)),
+            exec_cap=int(rng.choice([1, 3, 17, 256])),
+        )
+        check_batched_equals_sequential(p)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    scenario_params = st.fixed_dictionaries(
+        dict(
+            p0=st.floats(1.0, 20.0),
+            p1=st.floats(1.0, 20.0),
+            bw0=st.floats(0.1, 8.0),
+            bw1=st.floats(0.1, 8.0),
+            size=st.floats(5.0, 120.0),
+            interval=st.integers(5, 60),
+            count=st.integers(2, 10),
+            lookahead=st.integers(1, 4),
+            exec_cap=st.sampled_from([1, 3, 17, 256]),
+        )
+    )
+
+    @settings(max_examples=6, deadline=None)
+    @given(scenario_params)
+    def test_batched_equals_sequential_property(p):
+        """Batched and sequential dispatch produce identical traces and
+        counters (and world/pool state) on randomized scenarios."""
+        check_batched_equals_sequential(p)

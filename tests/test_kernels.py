@@ -99,6 +99,53 @@ def test_event_select_compaction_sweep(n, m, tmax):
     assert len(set(got.tolist())) == got.shape[0]   # distinct gather indices
 
 
+@pytest.mark.parametrize("n,density,seed", [(64, 0.5, 0), (256, 0.9, 1),
+                                            (513, 0.2, 2), (1024, 0.0, 3),
+                                            (37, 1.0, 4), (1, 1.0, 5)])
+def test_group_by_kind_sweep(n, density, seed):
+    """Pallas segment-rank grouping == XLA ref == engine default, exactly."""
+    from repro.core import events as ev
+    from repro.core.engine import group_by_kind_xla
+    from repro.kernels.event_select import group_by_kind as group_raw
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    kind = jax.random.randint(ks[0], (n,), 0, ev.N_KINDS)
+    active = jax.random.bernoulli(ks[1], density, (n,))
+    got = group_raw(kind, active, ev.N_KINDS, interpret=True)
+    want = ref.group_by_kind_ref(kind, active, ev.N_KINDS)
+    engine_default = group_by_kind_xla(kind, active)
+    for g, w, e in zip(got, want, engine_default):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(e))
+    order, rank, counts = (np.asarray(x) for x in got)
+    kind, active = np.asarray(kind), np.asarray(active)
+    assert sorted(order.tolist()) == list(range(n))   # a permutation
+    # active rows grouped first, by ascending kind, stable in position
+    grouped = [(kind[i], i) for i in order if active[i]]
+    assert grouped == sorted(grouped)
+    assert len(grouped) == int(counts.sum())
+    for k in range(ev.N_KINDS):
+        assert counts[k] == int((active & (kind == k)).sum())
+    # rank counts up from 0 within each grouped segment
+    keys = np.where(active[order], kind[order], ev.N_KINDS)
+    expect_rank = np.zeros(n, np.int32)
+    seen: dict = {}
+    for j in range(n):
+        expect_rank[j] = seen.get(keys[j], 0)
+        seen[keys[j]] = expect_rank[j] + 1
+    np.testing.assert_array_equal(rank, expect_rank)
+
+
+def test_group_by_kind_ops_wrapper():
+    from repro.core import events as ev
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    kind = jax.random.randint(ks[0], (128,), 0, ev.N_KINDS)
+    active = jax.random.bernoulli(ks[1], 0.6, (128,))
+    got = ops.group_by_kind(kind, active)
+    want = ref.group_by_kind_ref(kind, active, ev.N_KINDS)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
 @pytest.mark.parametrize("f,l,seed", [(8, 2, 0), (24, 6, 1), (48, 8, 2),
                                       (16, 1, 3)])
 def test_waterfill_sweep(f, l, seed):
