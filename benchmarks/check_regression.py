@@ -3,14 +3,43 @@
 Usage: python benchmarks/check_regression.py RESULTS.json BASELINE.json
 
 Reads the machine-readable output of ``benchmarks/run.py --json`` and fails
-(exit 1) when the dense same-kind dispatch benchmark's events/s regresses more
-than ``tolerance`` below the committed baseline. The gated metric is the
-batched/sequential speedup ratio measured in one process on one host, so the
-gate is insensitive to how fast the CI runner happens to be.
+(exit 1) when any gated benchmark metric regresses more than its ``tolerance``
+below the committed baseline. Every gated metric is a speedup ratio between two
+configurations measured in one process on one host, so the gates are
+insensitive to how fast the CI runner happens to be (see docs/benchmarks.md).
+
+``BASELINE.json`` holds a list of gates under the ``"gates"`` key (a bare
+single-gate object, the pre-PR 3 format, is also accepted):
+
+    {"gates": [{"benchmark": <row name>, "metric": <derived key>,
+                "gate_speedup": <floor>, "tolerance": <fraction>,
+                "reference": {...dev measurement, informational...}}, ...]}
 """
 
 import json
 import sys
+
+
+def check_gate(gate: dict, rows: dict, results_path: str) -> bool:
+    name = gate["benchmark"]
+    metric = gate["metric"]
+    if name not in rows:
+        print(f"FAIL: benchmark row {name!r} missing from {results_path}")
+        return False
+
+    measured = float(rows[name][metric])
+    floor = float(gate["gate_speedup"]) * (1.0 - float(gate["tolerance"]))
+    ref = float(gate["reference"]["speedup"])
+    msg = (
+        f"{name}.{metric}: measured={measured:.2f} floor={floor:.2f} "
+        f"(gate={float(gate['gate_speedup']):.2f} "
+        f"-{float(gate['tolerance']):.0%}, dev reference={ref:.2f})"
+    )
+    print(msg)
+    if measured < floor:
+        print(f"FAIL: {name}.{metric} regressed below the gate floor")
+        return False
+    return True
 
 
 def main() -> int:
@@ -22,27 +51,12 @@ def main() -> int:
     with open(sys.argv[2]) as f:
         baseline = json.load(f)
 
-    name = baseline["benchmark"]
-    metric = baseline["metric"]
+    gates = baseline["gates"] if "gates" in baseline else [baseline]
     rows = {row["name"]: row["derived"] for row in results["rows"]}
-    if name not in rows:
-        print(f"FAIL: benchmark row {name!r} missing from {sys.argv[1]}")
+    ok = all([check_gate(g, rows, sys.argv[1]) for g in gates])
+    if not ok:
         return 1
-
-    measured = float(rows[name][metric])
-    gate = float(baseline["gate_speedup"])
-    tolerance = float(baseline["tolerance"])
-    floor = gate * (1.0 - tolerance)
-    ref = float(baseline["reference"]["speedup"])
-    msg = (
-        f"{name}.{metric}: measured={measured:.2f} floor={floor:.2f} "
-        f"(gate={gate:.2f} -{tolerance:.0%}, dev reference={ref:.2f})"
-    )
-    print(msg)
-    if measured < floor:
-        print(f"FAIL: {metric} regressed below the gate floor")
-        return 1
-    print("OK: no regression")
+    print(f"OK: no regression ({len(gates)} gate(s))")
     return 0
 
 

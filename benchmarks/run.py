@@ -14,15 +14,20 @@
   batched_dispatch — engine step 4: grouped vectorized dispatch vs the PR 1
                      sequential fold on dense same-kind windows (dispatch cost
                      isolated: NOOP handlers, distinct-dst events)
+  wide_component   — engine step 4: per-row delta scatter vs the PR 2
+                     whole-table merge on wide component tables (64-CPU farms;
+                     merge cost isolated: conflict-free JOB_SUBMIT windows)
   kernels          — µs/call for each Pallas kernel's XLA reference path
   workload_sim     — DESIGN.md §2: DES-predicted step time vs analytic roofline
 
 Output: ``name,us_per_call,derived`` CSV rows on stdout. ``--json PATH``
 additionally writes the rows as machine-readable JSON (derived ``k=v`` pairs
 parsed into a dict) — CI uploads this as the BENCH_PR2.json artifact and gates
-on the batched_dispatch speedup (benchmarks/check_regression.py).
-``--quick`` runs only the fast subset (CI smoke): exec_compaction and
-batched_dispatch at pool_cap=4096, scheduler, kernels, workload_sim.
+on the batched_dispatch and wide_component speedups
+(benchmarks/check_regression.py; see docs/benchmarks.md).
+``--quick`` runs only the fast subset (CI smoke): exec_compaction,
+batched_dispatch and wide_component at pool_cap=4096, scheduler, kernels,
+workload_sim.
 """
 from __future__ import annotations
 
@@ -294,6 +299,59 @@ def bench_batched_dispatch(pool_caps=(4096,), width=1024, lookahead=4):
              f"speedup={rates['batched'] / rates['sequential']:.2f}x")
 
 
+def bench_wide_component(pool_caps=(4096,), width=256, n_cpu=64, lookahead=4):
+    """Per-row delta scatter vs the PR 2 whole-table merge on wide tables.
+
+    ``width`` farms of ``n_cpu`` CPUs each (cpu tables are (width, n_cpu) —
+    ≥64 columns), one JOB_SUBMIT per farm per window (conflict-free by
+    construction), alternating with the JOB_END completion windows. Both
+    configurations run the identical grouped vectorized dispatch; only the
+    merge differs — the delta path scatters ``width`` declared rows
+    (O(lanes x row)), the dense path materializes ``width`` full-table copies
+    and picks changed elements (O(lanes x tables), the PR 2 strategy). The
+    events/s ratio therefore isolates the merge cost, which is what the
+    regression gate pins (machine-normalized: both sides measured in this
+    process on this host).
+    """
+    def build(pool_cap, merge_mode):
+        b = ScenarioBuilder(max_cpu=n_cpu, queue_cap=8, max_link=1, max_flow=2)
+        farms = [b.add_farm([1.0] * n_cpu) for _ in range(width)]
+        n_tick = max(pool_cap // (2 * width), 1)
+        # submits at 1 + 8t start a 3-tick job on a free CPU; with
+        # lookahead=4 the JOB_END lands at 5 + 8t — its own window, so
+        # submit and completion windows alternate and never conflict
+        for t in range(n_tick):
+            for lp in farms:
+                b.add_event(time=1 + 2 * lookahead * t, kind=ev.K_JOB_SUBMIT,
+                            src=lp, dst=lp, payload=[3.0, 1.0, -1, -1, 0])
+        built = b.build(n_agents=1, lookahead=lookahead,
+                        t_end=2 * lookahead * (n_tick + 1) + 2,
+                        pool_cap=pool_cap, emit_cap=width + 8, exec_cap=width,
+                        merge_mode=merge_mode)
+        return built, 2 * n_tick * width
+
+    for pool_cap in pool_caps:
+        rates = {}
+        for merge_mode in ("delta", "dense"):
+            (world, own, init_ev, spec), n_ev = build(pool_cap, merge_mode)
+            eng = Engine(world, own, init_ev, spec)
+            jax.block_until_ready(eng.run_local().counters)   # compile
+            t0 = time.perf_counter()
+            st = eng.run_local()                              # cached jit
+            jax.block_until_ready(st.counters)
+            dt = time.perf_counter() - t0
+            c = np.asarray(st.counters)[0]
+            n = int(c[mon.C_EVENTS])
+            assert n == n_ev, (n, n_ev)
+            assert int(c[mon.C_BATCH_FALLBACK]) == 0, "scenario must be clean"
+            rates[merge_mode] = n / dt
+        emit(f"wide_component_p{pool_cap}", 1e6 / rates["delta"],
+             f"events_s_delta={rates['delta']:.0f};"
+             f"events_s_dense={rates['dense']:.0f};"
+             f"width={width};n_cpu={n_cpu};"
+             f"speedup={rates['delta'] / rates['dense']:.2f}x")
+
+
 def bench_kernels():
     from repro.kernels import ops
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
@@ -403,6 +461,7 @@ def main() -> None:
     if args.quick:
         bench_exec_compaction(pool_caps=(4096,))
         bench_batched_dispatch(pool_caps=(4096,))
+        bench_wide_component(pool_caps=(4096,))
         bench_scheduler()
         bench_kernels()
         bench_workload_sim()
@@ -415,6 +474,7 @@ def main() -> None:
         bench_contexts()
         bench_exec_compaction()
         bench_batched_dispatch()
+        bench_wide_component()
         bench_kernels()
         bench_workload_sim()
     if args.json:

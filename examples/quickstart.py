@@ -26,10 +26,12 @@ b.add_generator(
 
 # --- 2. build for a 4-agent fleet and run ----------------------------------
 # Engine step 4 defaults to grouped vectorized dispatch (conflict-free events
-# of one window execute in a single vmapped handler call, byte-identical to
-# the sequential fold); pass batched_dispatch=False here — or
-# --no-batched-dispatch on launch/simulate.py — to force the sequential path.
-# benchmarks/run.py --json PATH dumps machine-readable rows comparing the two.
+# of one window execute in a single vmapped handler call whose per-row deltas
+# merge as segment scatters, byte-identical to the sequential fold); pass
+# batched_dispatch=False here — or --no-batched-dispatch on launch/simulate.py
+# — to force the sequential path, and merge_mode="dense" to force the
+# whole-table reference merge. docs/architecture.md walks the whole pipeline;
+# benchmarks/run.py --json PATH dumps machine-readable rows comparing paths.
 world, own, init_events, spec = b.build(n_agents=4, lookahead=2, t_end=20_000,
                                         pool_cap=512, work_per_mb=2.0)
 engine = Engine(world, own, init_events, spec)

@@ -1,21 +1,25 @@
 """repro.core — the paper's distributed discrete-event simulation framework.
 
-Public surface:
+Public surface (see docs/architecture.md for the full map):
   ScenarioBuilder / World / ScenarioSpec   — model construction (components, C5)
   Engine / EngineState                      — conservative-window engine (C1, C2)
+  handlers / WorldDelta                     — per-row event kernels + delta schema
   scheduler                                 — monitoring-driven placement (C3)
   oracle                                    — sequential reference DES
 """
-from repro.core import events, monitoring, network, oracle, scheduler, sync
+from repro.core import (events, handlers, monitoring, network, oracle,
+                        scheduler, sync)
 from repro.core.components import (LPK_FARM, LPK_GEN, LPK_NET, LPK_STORAGE,
                                    ScenarioBuilder, ScenarioSpec, World,
                                    WorldOwnership, sync_world)
 from repro.core.engine import AXIS, Engine, EngineState, lexsort_time_seq
+from repro.core.handlers import WorldDelta
 from repro.core.oracle import merged_engine_trace, run_sequential
 
 __all__ = [
     "AXIS", "Engine", "EngineState", "LPK_FARM", "LPK_GEN", "LPK_NET",
-    "LPK_STORAGE", "ScenarioBuilder", "ScenarioSpec", "World", "WorldOwnership",
-    "events", "lexsort_time_seq", "merged_engine_trace", "monitoring", "network",
-    "oracle", "run_sequential", "scheduler", "sync", "sync_world",
+    "LPK_STORAGE", "ScenarioBuilder", "ScenarioSpec", "World", "WorldDelta",
+    "WorldOwnership", "events", "handlers", "lexsort_time_seq",
+    "merged_engine_trace", "monitoring", "network", "oracle", "run_sequential",
+    "scheduler", "sync", "sync_world",
 ]

@@ -103,6 +103,12 @@ class ScenarioSpec:
                             # safe events beyond it spill to the next window
     batched_dispatch: bool = True  # engine step 4: grouped vectorized dispatch
                                    # (False = PR 1 sequential compacted fold)
+    merge_mode: str = "delta"      # batched-dispatch merge strategy:
+                                   # "delta" = per-row segment scatters of the
+                                   # handlers' declared rows, O(lanes x row);
+                                   # "dense" = the PR 2 reference merge over
+                                   # whole component tables, O(lanes x tables)
+                                   # — kept for equivalence tests + benchmarks
 
 
 def _owner_mask_rows(res_lp: jax.Array, lp_agent: jax.Array, me) -> jax.Array:
@@ -258,7 +264,7 @@ class ScenarioBuilder:
               t_end: int, pool_cap: int = 1024, emit_cap: int | None = None,
               route_cap: int | None = None, exec_cap: int | None = None,
               placement=None, work_per_mb: float = 1.0,
-              batched_dispatch: bool = True):
+              batched_dispatch: bool = True, merge_mode: str = "delta"):
         nlp = max(len(self._lps), 1)
         nfarm = max(len(self._farms), 1)
         nnet = max(len(self._nets), 1)
@@ -367,6 +373,7 @@ class ScenarioBuilder:
             n_lp=nlp,
             work_per_mb=work_per_mb,
             batched_dispatch=batched_dispatch,
+            merge_mode=merge_mode,
         )
         init_events = ev.batch_from_rows(self._events)
         return world, own, init_events, spec

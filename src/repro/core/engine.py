@@ -10,11 +10,14 @@ Per window (one "simulation step" in the paper's event-scheduler terms):
      indices (the earliest safe slots).
   4. Execute (grouped vectorized dispatch, the default): the ``exec_cap``
      gathered slots are partitioned by ``kind`` (``group_by_kind``) and checked
-     for write conflicts (``sync.conflict_mask``: duplicate dst LPs or two
-     events addressing the same replicated-component row). Conflict-free slots
-     — by construction touching pairwise-disjoint world state — execute in ONE
-     vmapped handler call whose per-lane writes are merged with an exact
-     element-wise segment scatter (``handlers.apply_handler_batch``); the few
+     for write conflicts (``sync.conflict_mask``: two events declaring the same
+     component row — the exact ``(KIND_TABLE[kind], lp_res[dst])`` row of the
+     handlers' delta contract). Conflict-free slots — by construction touching
+     pairwise-disjoint world state — execute in ONE vmapped handler call that
+     returns per-row ``WorldDelta``s, merged with one O(lanes x row) segment
+     scatter per mutable field (``handlers.apply_handler_batch``;
+     ``spec.merge_mode="dense"`` selects the PR 2 whole-table reference merge
+     instead, kept for equivalence tests and benchmarks). The few
      conflicted slots fall back to a sequential fold compacted to just those
      slots (a while_loop that runs zero iterations on clean windows). Each
      slot's emits land in a per-slot row of an (exec_cap, MAX_EMIT) matrix, so
@@ -60,7 +63,7 @@ from repro.core import monitoring as mon
 from repro.core import sync
 from repro.core.components import ScenarioSpec, World, WorldOwnership, sync_world
 from repro.core.handlers import (Ev, apply_handler, apply_handler_batch,
-                                 make_handlers)
+                                 apply_handler_batch_dense, make_handlers)
 
 AXIS = "agents"
 
@@ -139,6 +142,10 @@ class Engine:
         # for the batched dispatch. Hook point for the Pallas segment-rank
         # kernel (kernels.ops.group_by_kind); default is the XLA argsort.
         self.group_fn = group_fn or group_by_kind_xla
+        if spec.merge_mode not in ("delta", "dense"):
+            raise ValueError(
+                f"spec.merge_mode must be 'delta' or 'dense', got "
+                f"{spec.merge_mode!r}")
         self.table = make_handlers(spec.lookahead, spec.work_per_mb)
         # widest resource table: bound for the conflict-detection key space
         self._n_res = max(world.cpu_power.shape[0], world.link_bw.shape[0],
@@ -297,21 +304,20 @@ class Engine:
         """Grouped vectorized dispatch (see module docstring).
 
         Conflict-free slots run in one vmapped handler call per window; slots
-        whose writes could overlap (duplicate dst LP / shared component row)
-        fall back to a sequential fold compacted to just those slots. Emits
-        land in a per-slot (exec_cap, MAX_EMIT) matrix and the trace is
-        written in (time, seq) window order, so the results are byte-identical
-        to ``_execute_scan``.
+        whose declared component rows collide fall back to a sequential fold
+        compacted to just those slots. Emits land in a per-slot
+        (exec_cap, MAX_EMIT) matrix and the trace is written in (time, seq)
+        window order, so the results are byte-identical to ``_execute_scan``.
         """
         spec = self.spec
         xcap = cand.time.shape[0]
 
-        # conflict detection: duplicate dst LPs or shared component rows
+        # conflict detection on the delta contract's declared rows: two safe
+        # slots collide iff they address the same (component table, lp_res row)
         table_id = jnp.asarray(ev.KIND_TABLE, jnp.int32)[
             jnp.clip(cand.kind, 0, ev.N_KINDS - 1)]
         res = world.lp_res[jnp.clip(cand.dst, 0, spec.n_lp - 1)]
-        dirty = sync.conflict_mask(exec_safe, cand.dst, table_id, res,
-                                   n_lp=spec.n_lp, n_res=self._n_res)
+        dirty = sync.conflict_mask(exec_safe, table_id, res, n_res=self._n_res)
         clean = exec_safe & ~dirty
 
         # batched phase: group the clean rows by kind, dispatch once. The
@@ -323,8 +329,9 @@ class Engine:
         order, _rank, _counts = self.group_fn(cand.kind, clean)
         rows_g = jax.tree.map(lambda x: x[order], cand)
         clean_g = clean[order]
-        world, cdelta, emits_g = apply_handler_batch(self.table, world,
-                                                     rows_g, clean_g)
+        batch_fn = (apply_handler_batch if spec.merge_mode == "delta"
+                    else apply_handler_batch_dense)
+        world, cdelta, emits_g = batch_fn(self.table, world, rows_g, clean_g)
         counters = counters + cdelta
         counters = mon.bump(counters, mon.C_BATCH_EXEC,
                             jnp.sum(clean.astype(jnp.int32)))

@@ -38,10 +38,12 @@ K_MIGRATE = 6
 K_GEN_TICK = 7
 N_KINDS = 8
 
-# Component table each kind's handler reads/writes (replicated-write conflict
-# detection for batched dispatch): 0 = none, 1 = farm, 2 = net region,
-# 3 = storage, 4 = generator. Indexed by kind; must stay in sync with the
-# handler bodies in handlers.py.
+# Component table each kind's handler reads/writes: 0 = none, 1 = farm,
+# 2 = net region, 3 = storage, 4 = generator. Indexed by kind. This is the
+# table half of the delta contract's declared row (handlers.py): kind k's
+# handler touches exactly row lp_res[dst] of table KIND_TABLE[k], which is
+# what sync.conflict_mask keys on for the batched dispatch — so this map must
+# stay in sync with the WorldDelta each handler body returns.
 TBL_NONE = 0
 TBL_FARM = 1
 TBL_NET = 2

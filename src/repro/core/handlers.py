@@ -1,13 +1,33 @@
 """Event handlers: the behavior of each simulation component (paper §4.2).
 
 ``make_handlers(lookahead, work_per_mb)`` builds the ``lax.switch`` dispatch table.
-Every handler is a pure function ``(world, counters, event) -> (world, counters,
-EventBatch[MAX_EMIT])`` operating on scalar event fields and component tables.
+Every handler is a *per-row segment-scatter kernel*: it gathers only the component
+row owned by its destination LP (``lp_res[e.dst]``), computes the row-local update,
+and returns a compact :class:`WorldDelta` — a typed ``(table row index, new row)``
+write set — instead of a whole mutated :class:`World`. Deltas are applied by
+:func:`apply_delta` (one ``.at[row].set`` scatter per field), which serves both the
+sequential paths (one event at a time) and the engine's batched dispatch (all
+lanes' deltas in one segment scatter, see :func:`apply_handler_batch`). This keeps
+the vectorized merge O(lanes x row) instead of O(lanes x pool-wide tables).
 
-Lookahead contract (the conservative-sync invariant, see DESIGN.md §5): every emitted
-event carries a delay of at least ``lookahead`` ticks. Handlers therefore clamp all
-delays with ``_delay``. The sequential oracle implements byte-identical semantics, so
-trace equality is exact.
+Invariants the engine and the conflict mask rely on (the **delta contract**):
+
+1. **Row locality** — the handler for kind ``k`` reads and writes exactly one row
+   of one component table: row ``lp_res[e.dst]`` of table ``events.KIND_TABLE[k]``
+   (plus immutable topology/capacity columns, which are never written, and
+   write-only commutative counters). A handler never touches another LP's row.
+2. **Whole-row writes** — a handler that writes a table writes *every* mutable
+   field of that table's row (unchanged fields carry their old bytes), so a delta
+   applies with plain ``.at[row].set`` scatters and needs no per-element masks.
+3. **Disjoint-write guarantee** — ``sync.conflict_mask`` keys on exactly the
+   ``(KIND_TABLE[kind], lp_res[dst])`` row each handler declares, so the batched
+   dispatcher only ever scatters pairwise-distinct rows in one call; combined
+   with (1) this makes the batched execution byte-identical to folding the same
+   events sequentially in any order.
+4. **Lookahead contract** (the conservative-sync invariant, see
+   docs/architecture.md): every emitted event carries a delay of at least
+   ``lookahead`` ticks; handlers clamp all delays with ``_delay``. The sequential
+   oracle reuses these same kernels, so trace equality is exact.
 """
 from __future__ import annotations
 
@@ -21,6 +41,10 @@ from repro.core import monitoring as mon
 from repro.core import network as net
 from repro.core.components import MAXHOP, World
 
+# Sentinel row index meaning "this handler writes no row of that table".
+# Out of bounds for every component table, so ``mode="drop"`` scatters skip it.
+NO_ROW = jnp.int32(2**31 - 1)
+
 
 class Ev(NamedTuple):
     """Scalar view of one event."""
@@ -32,6 +56,89 @@ class Ev(NamedTuple):
     dst: jax.Array
     ctx: jax.Array
     payload: jax.Array  # (PAYLOAD,)
+
+
+class WorldDelta(NamedTuple):
+    """Typed per-row write set of one handler invocation (the delta schema).
+
+    One row index per component table (``NO_ROW`` == table untouched) plus the
+    new row value for every mutable field of that table. ``DELTA_SCHEMA`` maps
+    each field to its row-index column; everything not listed there (topology,
+    capacities, placement, per-LP columns) is immutable inside a window or owned
+    by the engine wrapper. Shapes below are per-row (no leading table dim); the
+    batched dispatcher stacks a ``(lanes,)`` axis in front of every field.
+    """
+
+    farm_row: jax.Array     # i32 — compute-farm row, or NO_ROW
+    cpu_busy: jax.Array     # i32 (MAXCPU,)
+    cpu_mem: jax.Array      # f32 (MAXCPU,)
+    jobq: jax.Array         # f32 (QCAP, 6)
+    jobq_n: jax.Array       # i32 scalar
+    net_row: jax.Array      # i32 — network-region row, or NO_ROW
+    flow_active: jax.Array  # bool (MAXFLOW,)
+    flow_rem: jax.Array     # f32 (MAXFLOW,)
+    flow_rate: jax.Array    # f32 (MAXFLOW,)
+    flow_tlast: jax.Array   # i32 (MAXFLOW,)
+    flow_links: jax.Array   # i32 (MAXFLOW, MAXHOP)
+    flow_notify: jax.Array  # f32 (MAXFLOW, 6)
+    net_gen: jax.Array      # i32 scalar
+    sto_row: jax.Array      # i32 — storage row, or NO_ROW
+    sto_used: jax.Array     # f32 (2,)
+    sto_flag: jax.Array     # i32 scalar
+    gen_row: jax.Array      # i32 — generator row, or NO_ROW
+    gen_left: jax.Array     # i32 scalar
+
+
+# The typed delta schema: mutable World field -> the WorldDelta row-index column
+# that addresses it. Replaces the PR 2 MUTABLE_FIELDS whole-table merge list:
+# restricting writes to declared rows is what drops the batched merge from
+# O(lanes x component tables) to O(lanes x row). Mirrors the owner-wins field
+# list in components.sync_world minus lp_state/lp_lvt, which the engine applies
+# as segment scatters over the event batch (max / idempotent-set, so they
+# commute even across duplicate-dst lanes).
+DELTA_SCHEMA: dict[str, str] = {
+    "cpu_busy": "farm_row", "cpu_mem": "farm_row",
+    "jobq": "farm_row", "jobq_n": "farm_row",
+    "flow_active": "net_row", "flow_rem": "net_row", "flow_rate": "net_row",
+    "flow_tlast": "net_row", "flow_links": "net_row", "flow_notify": "net_row",
+    "net_gen": "net_row",
+    "sto_used": "sto_row", "sto_flag": "sto_row",
+    "gen_left": "gen_row",
+}
+MUTABLE_FIELDS = tuple(DELTA_SCHEMA)
+ROW_FIELDS = ("farm_row", "net_row", "sto_row", "gen_row")
+
+
+def empty_delta(world: World) -> WorldDelta:
+    """The identity delta: no rows declared, zero-filled row payloads."""
+    def z(f: str) -> jax.Array:
+        return jnp.zeros_like(getattr(world, f)[0])
+    return WorldDelta(
+        farm_row=NO_ROW, cpu_busy=z("cpu_busy"), cpu_mem=z("cpu_mem"),
+        jobq=z("jobq"), jobq_n=z("jobq_n"),
+        net_row=NO_ROW, flow_active=z("flow_active"), flow_rem=z("flow_rem"),
+        flow_rate=z("flow_rate"), flow_tlast=z("flow_tlast"),
+        flow_links=z("flow_links"), flow_notify=z("flow_notify"),
+        net_gen=z("net_gen"),
+        sto_row=NO_ROW, sto_used=z("sto_used"), sto_flag=z("sto_flag"),
+        gen_row=NO_ROW, gen_left=z("gen_left"),
+    )
+
+
+def apply_delta(world: World, delta: WorldDelta) -> World:
+    """Scatter a delta's declared rows into the world.
+
+    Polymorphic over the lane axis: with scalar row indices this applies one
+    handler's delta (the sequential paths); with ``(lanes,)`` row indices and
+    ``(lanes, ...)`` row payloads it applies a whole window's deltas in one
+    segment scatter per field. ``NO_ROW`` (and any masked-out lane) is out of
+    bounds and dropped. Exact under the disjoint-write guarantee: every
+    scattered row index appears at most once, so ``.set`` has a unique winner.
+    """
+    return world._replace(**{
+        f: getattr(world, f).at[getattr(delta, rf)].set(
+            getattr(delta, f), mode="drop")
+        for f, rf in DELTA_SCHEMA.items()})
 
 
 def _no_emits() -> ev.EventBatch:
@@ -61,7 +168,11 @@ def _pad_payload(vals) -> jax.Array:
 
 
 def make_handlers(lookahead: int, work_per_mb: float = 1.0):
-    """Build the handler dispatch table (list indexed by event kind)."""
+    """Build the handler dispatch table (list indexed by event kind).
+
+    Each entry is a row kernel ``(world, counters, e) -> (delta, counters,
+    EventBatch[MAX_EMIT])`` honoring the delta contract in the module docstring.
+    """
 
     LA = jnp.int32(lookahead)
 
@@ -70,15 +181,14 @@ def make_handlers(lookahead: int, work_per_mb: float = 1.0):
 
     # -- 0: NOOP ------------------------------------------------------------
     def h_noop(world: World, counters, e: Ev):
-        return world, counters, _no_emits()
+        return empty_delta(world), counters, _no_emits()
 
     # -- 7: GEN_TICK — activity generator ------------------------------------
     def h_gen_tick(world: World, counters, e: Ev):
         g = world.lp_res[e.dst]
         left = world.gen_left[g]
         fire = left > 0
-        world = world._replace(gen_left=world.gen_left.at[g].add(
-            jnp.where(fire, -1, 0)))
+        new_left = left + jnp.where(fire, -1, 0)
         out = _no_emits()
         # slot 0: the generated activity event
         out = _set_emit(out, 0, valid=fire,
@@ -92,41 +202,42 @@ def make_handlers(lookahead: int, work_per_mb: float = 1.0):
                         kind=ev.K_GEN_TICK, src=e.dst, dst=e.dst, ctx=e.ctx,
                         payload=jnp.zeros((ev.PAYLOAD,), jnp.float32),
                         parent_seq=e.seq)
-        return world, counters, out
+        delta = empty_delta(world)._replace(gen_row=g, gen_left=new_left)
+        return delta, counters, out
 
     # -- 3: JOB_SUBMIT — compute farm ----------------------------------------
     # payload: [work, mem, notify_lp, notify_kind, size, _, _, _]
     def h_job_submit(world: World, counters, e: Ev):
         f = world.lp_res[e.dst]
+        busy = world.cpu_busy[f]       # (MAXCPU,) row gathers
+        memr = world.cpu_mem[f]
+        jq = world.jobq[f]
+        qn0 = world.jobq_n[f]
+        power_row = world.cpu_power[f]
         work, mem = e.payload[0], e.payload[1]
         counters = mon.bump(counters, mon.C_JOBS_SUBMITTED)
 
-        free = (world.cpu_busy[f] == 0) & (world.cpu_power[f] > 0)
+        free = (busy == 0) & (power_row > 0)
         has_free = jnp.any(free)
         slot = jnp.argmax(free).astype(jnp.int32)
 
         # start immediately on a free CPU
-        power = world.cpu_power[f, slot]
+        power = power_row[slot]
         dur = jnp.ceil(work / jnp.maximum(power, 1e-6)).astype(jnp.int32)
         finish = e.time + _delay(dur)
-        world = world._replace(
-            cpu_busy=world.cpu_busy.at[f, slot].add(jnp.where(has_free, 1, 0)),
-            cpu_mem=world.cpu_mem.at[f, slot].add(jnp.where(has_free, mem, 0.0)),
-        )
+        busy = busy.at[slot].add(jnp.where(has_free, 1, 0))
+        memr = memr.at[slot].add(jnp.where(has_free, mem, 0.0))
 
         # or queue (FIFO) when all CPUs are busy
-        qn = world.jobq_n[f]
-        qcap = world.jobq.shape[1]
-        can_q = (~has_free) & (qn < qcap)
+        qcap = jq.shape[0]
+        can_q = (~has_free) & (qn0 < qcap)
         qrow = jnp.stack([e.payload[0], e.payload[1], e.payload[2], e.payload[3],
                           e.payload[4], 0.0])
-        world = world._replace(
-            jobq=world.jobq.at[f, jnp.where(can_q, qn, 0)].set(
-                jnp.where(can_q, qrow, world.jobq[f, jnp.where(can_q, qn, 0)])),
-            jobq_n=world.jobq_n.at[f].add(jnp.where(can_q, 1, 0)),
-        )
+        qi = jnp.where(can_q, qn0, 0)
+        jq = jq.at[qi].set(jnp.where(can_q, qrow, jq[qi]))
+        new_qn = qn0 + jnp.where(can_q, 1, 0)
         counters = mon.bump(counters, mon.C_DROP_QUEUE,
-                            jnp.where((~has_free) & (qn >= qcap), 1, 0))
+                            jnp.where((~has_free) & (qn0 >= qcap), 1, 0))
 
         out = _no_emits()
         out = _set_emit(out, 0, valid=has_free, time=finish, kind=ev.K_JOB_END,
@@ -134,7 +245,9 @@ def make_handlers(lookahead: int, work_per_mb: float = 1.0):
                         payload=_pad_payload([slot, work, mem, e.payload[2],
                                               e.payload[3], e.payload[4]]),
                         parent_seq=e.seq)
-        return world, counters, out
+        delta = empty_delta(world)._replace(
+            farm_row=f, cpu_busy=busy, cpu_mem=memr, jobq=jq, jobq_n=new_qn)
+        return delta, counters, out
 
     # -- 4: JOB_END — compute farm -------------------------------------------
     # payload: [slot, work, mem, notify_lp, notify_kind, size, _, _]
@@ -142,23 +255,19 @@ def make_handlers(lookahead: int, work_per_mb: float = 1.0):
         f = world.lp_res[e.dst]
         slot = e.payload[0].astype(jnp.int32)
         counters = mon.bump(counters, mon.C_JOBS_DONE)
-        world = world._replace(
-            cpu_busy=world.cpu_busy.at[f, slot].set(0),
-            cpu_mem=world.cpu_mem.at[f, slot].set(0.0),
-        )
+        busy = world.cpu_busy[f].at[slot].set(0)
+        memr = world.cpu_mem[f].at[slot].set(0.0)
 
         # pop FIFO head into the freed CPU
-        qn = world.jobq_n[f]
-        has_q = qn > 0
-        head = world.jobq[f, 0]
-        qcap = world.jobq.shape[1]
-        shifted = jnp.concatenate([world.jobq[f, 1:], jnp.zeros((1, 6), jnp.float32)])
-        world = world._replace(
-            jobq=world.jobq.at[f].set(jnp.where(has_q, shifted, world.jobq[f])),
-            jobq_n=world.jobq_n.at[f].add(jnp.where(has_q, -1, 0)),
-            cpu_busy=world.cpu_busy.at[f, slot].set(jnp.where(has_q, 1, 0)),
-            cpu_mem=world.cpu_mem.at[f, slot].set(jnp.where(has_q, head[1], 0.0)),
-        )
+        jq = world.jobq[f]
+        qn0 = world.jobq_n[f]
+        has_q = qn0 > 0
+        head = jq[0]
+        shifted = jnp.concatenate([jq[1:], jnp.zeros((1, 6), jnp.float32)])
+        new_jq = jnp.where(has_q, shifted, jq)
+        new_qn = qn0 + jnp.where(has_q, -1, 0)
+        busy = busy.at[slot].set(jnp.where(has_q, 1, 0))
+        memr = memr.at[slot].set(jnp.where(has_q, head[1], 0.0))
         power = world.cpu_power[f, slot]
         dur = jnp.ceil(head[0] / jnp.maximum(power, 1e-6)).astype(jnp.int32)
 
@@ -176,66 +285,64 @@ def make_handlers(lookahead: int, work_per_mb: float = 1.0):
                         kind=nkind, src=e.dst, dst=jnp.maximum(nlp, 0), ctx=e.ctx,
                         payload=_pad_payload([e.payload[5]]),
                         parent_seq=e.seq)
-        return world, counters, out
+        delta = empty_delta(world)._replace(
+            farm_row=f, cpu_busy=busy, cpu_mem=memr, jobq=new_jq, jobq_n=new_qn)
+        return delta, counters, out
 
     # -- network helpers ------------------------------------------------------
-    def _reshare_and_schedule(world: World, counters, e: Ev, r):
-        """Recompute fair shares for region r and schedule the next completion."""
-        inc = net.incidence(world.flow_links[r], world.link_bw.shape[1])
-        rates = net.maxmin_rates(inc, world.link_bw[r], world.flow_active[r])
-        world = world._replace(flow_rate=world.flow_rate.at[r].set(rates))
+    def _reshare_and_schedule(counters, e: Ev, links_row, bw_row, active_row,
+                              rem_row, tlast_row, gen0):
+        """Recompute fair shares for one region row, schedule the next completion."""
+        inc = net.incidence(links_row, bw_row.shape[0])
+        rates = net.maxmin_rates(inc, bw_row, active_row)
         counters = mon.bump(counters, mon.C_INTERRUPTS)
-        gen = world.net_gen[r] + 1
-        world = world._replace(net_gen=world.net_gen.at[r].set(gen))
-        t_fin = net.completion_times(world.flow_rem[r], rates,
-                                     world.flow_tlast[r], world.flow_active[r])
+        gen = gen0 + 1
+        t_fin = net.completion_times(rem_row, rates, tlast_row, active_row)
         tmin = jnp.min(t_fin)
-        any_active = jnp.any(world.flow_active[r])
+        any_active = jnp.any(active_row)
         t_next = jnp.maximum(tmin, e.time + LA)
-        return world, counters, gen, any_active, t_next
+        return rates, gen, counters, any_active, t_next
 
     # -- 1: FLOW_START — network region ---------------------------------------
     # payload: [size, l0, l1, l2, notify_lp, notify_kind, notify2_lp, notify2_kind]
     def h_flow_start(world: World, counters, e: Ev):
         r = world.lp_res[e.dst]
+        active = world.flow_active[r]  # (MAXFLOW,) row gathers
+        rate = world.flow_rate[r]
+        links = world.flow_links[r]
+        notif = world.flow_notify[r]
         size = e.payload[0]
         counters = mon.bump(counters, mon.C_FLOWS_STARTED)
 
         # progress flows to now (the paper's interrupt scheme: shares change now)
-        rem2, tlast2 = net.progress_flows(world.flow_rem[r], world.flow_rate[r],
-                                          world.flow_tlast[r],
-                                          world.flow_active[r], e.time)
-        world = world._replace(flow_rem=world.flow_rem.at[r].set(rem2),
-                               flow_tlast=world.flow_tlast.at[r].set(tlast2))
+        rem, tlast = net.progress_flows(world.flow_rem[r], rate,
+                                        world.flow_tlast[r], active, e.time)
 
-        free = ~world.flow_active[r]
+        free = ~active
         has_free = jnp.any(free)
         s = jnp.argmax(free).astype(jnp.int32)
         counters = mon.bump(counters, mon.C_DROP_FLOW, jnp.where(has_free, 0, 1))
 
         route = e.payload[1:4].astype(jnp.int32)  # -1 padded
-        notify = jnp.stack([e.payload[4], e.payload[5], size * work_per_mb, size,
-                            e.payload[6], e.payload[7]])
-        world = world._replace(
-            flow_active=world.flow_active.at[r, s].set(
-                jnp.where(has_free, True, world.flow_active[r, s])),
-            flow_rem=world.flow_rem.at[r, s].set(
-                jnp.where(has_free, size, world.flow_rem[r, s])),
-            flow_tlast=world.flow_tlast.at[r, s].set(
-                jnp.where(has_free, e.time, world.flow_tlast[r, s])),
-            flow_links=world.flow_links.at[r, s].set(
-                jnp.where(has_free, route, world.flow_links[r, s])),
-            flow_notify=world.flow_notify.at[r, s].set(
-                jnp.where(has_free, notify, world.flow_notify[r, s])),
-        )
+        nrow = jnp.stack([e.payload[4], e.payload[5], size * work_per_mb, size,
+                          e.payload[6], e.payload[7]])
+        active = active.at[s].set(jnp.where(has_free, True, active[s]))
+        rem = rem.at[s].set(jnp.where(has_free, size, rem[s]))
+        tlast = tlast.at[s].set(jnp.where(has_free, e.time, tlast[s]))
+        links = links.at[s].set(jnp.where(has_free, route, links[s]))
+        notif = notif.at[s].set(jnp.where(has_free, nrow, notif[s]))
 
-        world, counters, gen, any_active, t_next = _reshare_and_schedule(
-            world, counters, e, r)
+        rates, gen, counters, any_active, t_next = _reshare_and_schedule(
+            counters, e, links, world.link_bw[r], active, rem, tlast,
+            world.net_gen[r])
         out = _no_emits()
         out = _set_emit(out, 2, valid=any_active, time=t_next, kind=ev.K_FLOW_END,
                         src=e.dst, dst=e.dst, ctx=e.ctx,
                         payload=_pad_payload([gen]), parent_seq=e.seq)
-        return world, counters, out
+        delta = empty_delta(world)._replace(
+            net_row=r, flow_active=active, flow_rem=rem, flow_rate=rates,
+            flow_tlast=tlast, flow_links=links, flow_notify=notif, net_gen=gen)
+        return delta, counters, out
 
     # -- 2: FLOW_END — network region ------------------------------------------
     # payload: [gen]
@@ -244,40 +351,36 @@ def make_handlers(lookahead: int, work_per_mb: float = 1.0):
         gen_ok = e.payload[0].astype(jnp.int32) == world.net_gen[r]
         counters = mon.bump(counters, mon.C_STALE, jnp.where(gen_ok, 0, 1))
 
-        def stale(world, counters):
-            return world, counters, _no_emits()
+        def stale(counters):
+            return empty_delta(world), counters, _no_emits()
 
-        def live(world, counters):
-            rem2, tlast2 = net.progress_flows(world.flow_rem[r], world.flow_rate[r],
-                                              world.flow_tlast[r],
-                                              world.flow_active[r], e.time)
-            world = world._replace(flow_rem=world.flow_rem.at[r].set(rem2),
-                                   flow_tlast=world.flow_tlast.at[r].set(tlast2))
-            done = world.flow_active[r] & (world.flow_rem[r] <= 1e-3)
+        def live(counters):
+            active = world.flow_active[r]
+            rem, tlast = net.progress_flows(world.flow_rem[r], world.flow_rate[r],
+                                            world.flow_tlast[r], active, e.time)
+            done = active & (rem <= 1e-3)
             # complete up to 2 flows this event; a follow-up FLOW_END drains the rest
             order = jnp.argsort(jnp.where(done, jnp.arange(done.shape[0]), 1 << 20))
             d0, d1 = order[0], order[1]
             c0 = done[d0]
             c1 = done[d1]
-            world = world._replace(
-                flow_active=world.flow_active.at[r, d0].set(
-                    jnp.where(c0, False, world.flow_active[r, d0])))
-            world = world._replace(
-                flow_active=world.flow_active.at[r, d1].set(
-                    jnp.where(c1, False, world.flow_active[r, d1])))
+            active = active.at[d0].set(jnp.where(c0, False, active[d0]))
+            active = active.at[d1].set(jnp.where(c1, False, active[d1]))
             n_done = c0.astype(jnp.int32) + c1.astype(jnp.int32)
             counters2 = mon.bump(counters, mon.C_FLOWS_DONE, n_done)
-            mb = (jnp.where(c0, world.flow_notify[r, d0, 3], 0.0)
-                  + jnp.where(c1, world.flow_notify[r, d1, 3], 0.0))
+            notif = world.flow_notify[r]
+            mb = (jnp.where(c0, notif[d0, 3], 0.0)
+                  + jnp.where(c1, notif[d1, 3], 0.0))
             counters2 = mon.bump(counters2, mon.C_MB_TRANSFERRED,
                                  jnp.round(mb).astype(jnp.int32))
 
-            world, counters2, gen, any_active, t_next = _reshare_and_schedule(
-                world, counters2, e, r)
+            rates, gen, counters2, any_active, t_next = _reshare_and_schedule(
+                counters2, e, world.flow_links[r], world.link_bw[r], active,
+                rem, tlast, world.net_gen[r])
 
             out = _no_emits()
             for slot, (di, ci) in enumerate([(d0, c0), (d1, c1)]):
-                note = world.flow_notify[r, di]
+                note = notif[di]
                 nlp = note[0].astype(jnp.int32)
                 # notification payload: [work, mem(=size), notify2_lp, notify2_kind, size]
                 out = _set_emit(out, slot, valid=ci & (nlp >= 0),
@@ -290,9 +393,13 @@ def make_handlers(lookahead: int, work_per_mb: float = 1.0):
             out = _set_emit(out, 2, valid=any_active, time=t_next,
                             kind=ev.K_FLOW_END, src=e.dst, dst=e.dst, ctx=e.ctx,
                             payload=_pad_payload([gen]), parent_seq=e.seq)
-            return world, counters2, out
+            delta = empty_delta(world)._replace(
+                net_row=r, flow_active=active, flow_rem=rem, flow_rate=rates,
+                flow_tlast=tlast, flow_links=world.flow_links[r],
+                flow_notify=notif, net_gen=gen)
+            return delta, counters2, out
 
-        return jax.lax.cond(gen_ok, live, stale, world, counters)
+        return jax.lax.cond(gen_ok, live, stale, counters)
 
     # -- 5: DATA_WRITE — storage ------------------------------------------------
     # payload: [size]
@@ -302,31 +409,33 @@ def make_handlers(lookahead: int, work_per_mb: float = 1.0):
         counters = mon.bump(counters, mon.C_WRITES)
         counters = mon.bump(counters, mon.C_MB_WRITTEN,
                             jnp.round(size).astype(jnp.int32))
-        used = world.sto_used[s, 0] + size
-        world = world._replace(sto_used=world.sto_used.at[s, 0].set(used))
+        used_row = world.sto_used[s]   # (2,) [disk, tape]
+        used = used_row[0] + size
+        used_row = used_row.at[0].set(used)
 
-        over = (used > 0.9 * world.sto_cap[s, 0]) & (world.sto_flag[s] == 0)
+        flag0 = world.sto_flag[s]
+        over = (used > 0.9 * world.sto_cap[s, 0]) & (flag0 == 0)
         amount = jnp.maximum(used - 0.7 * world.sto_cap[s, 0], 0.0)
         dur = jnp.ceil(amount / jnp.maximum(world.sto_rate[s], 1e-6)).astype(jnp.int32)
-        world = world._replace(
-            sto_flag=world.sto_flag.at[s].set(jnp.where(over, 1, world.sto_flag[s])))
+        new_flag = jnp.where(over, 1, flag0)
         out = _no_emits()
         out = _set_emit(out, 0, valid=over, time=e.time + _delay(dur),
                         kind=ev.K_MIGRATE, src=e.dst, dst=e.dst, ctx=e.ctx,
                         payload=_pad_payload([amount]), parent_seq=e.seq)
-        return world, counters, out
+        delta = empty_delta(world)._replace(
+            sto_row=s, sto_used=used_row, sto_flag=new_flag)
+        return delta, counters, out
 
     # -- 6: MIGRATE — storage (db server -> mass storage, paper §4.2) -----------
     def h_migrate(world: World, counters, e: Ev):
         s = world.lp_res[e.dst]
-        amount = jnp.minimum(e.payload[0], world.sto_used[s, 0])
-        world = world._replace(
-            sto_used=world.sto_used.at[s, 0].add(-amount)
-                                 .at[s, 1].add(amount),
-            sto_flag=world.sto_flag.at[s].set(0),
-        )
+        used_row = world.sto_used[s]
+        amount = jnp.minimum(e.payload[0], used_row[0])
+        used_row = used_row.at[0].add(-amount).at[1].add(amount)
         counters = mon.bump(counters, mon.C_MIGRATIONS)
-        return world, counters, _no_emits()
+        delta = empty_delta(world)._replace(
+            sto_row=s, sto_used=used_row, sto_flag=jnp.int32(0))
+        return delta, counters, _no_emits()
 
     table = [None] * ev.N_KINDS
     table[ev.K_NOOP] = h_noop
@@ -340,57 +449,120 @@ def make_handlers(lookahead: int, work_per_mb: float = 1.0):
     return table
 
 
-def apply_handler(table, world: World, counters, e: Ev):
-    """Dispatch one event through the handler table (lax.switch over kind)."""
+def dispatch_delta(table, world: World, counters, e: Ev):
+    """Dispatch one event to its kind's row kernel (lax.switch over kind).
+
+    Returns ``(delta, counters, emits)`` without applying the delta — the
+    building block shared by the sequential wrapper and the batched dispatcher.
+    """
     kind = jnp.clip(e.kind, 0, len(table) - 1)
     return jax.lax.switch(kind, table, world, counters, e)
 
 
-# World fields a handler may write — everything else (topology, capacities,
-# placement, LP columns) is immutable inside a window or owned by the engine
-# wrapper. Mirrors the owner-wins field list in components.sync_world minus
-# lp_state/lp_lvt, which the engine applies as segment scatters over the
-# event batch. Restricting the vectorized merge to these fields keeps the
-# batched dispatch O(lanes x component tables) instead of O(lanes x world).
-MUTABLE_FIELDS = ("cpu_busy", "cpu_mem", "jobq", "jobq_n",
-                  "flow_active", "flow_rem", "flow_rate", "flow_tlast",
-                  "flow_links", "flow_notify", "net_gen",
-                  "sto_used", "sto_flag", "gen_left")
+def apply_handler(table, world: World, counters, e: Ev):
+    """Dispatch one event and apply its delta (the sequential contract).
+
+    Byte-identical to the pre-delta in-place handlers: a row kernel computes its
+    new row from the same gathered values the old whole-world handler read, and
+    writing the full row stores unchanged elements back with their old bytes.
+    Used by the sequential oracle, the engine's scan path, and the conflict
+    fallback.
+    """
+    delta, counters, out = dispatch_delta(table, world, counters, e)
+    return apply_delta(world, delta), counters, out
+
+
+def _dispatch_lanes(table, world: World, rows: ev.EventBatch):
+    """vmap the row kernels over a window's candidate rows (no apply)."""
+    def lane(row):
+        e = Ev(time=row.time, seq=row.seq, kind=row.kind, src=row.src,
+               dst=row.dst, ctx=row.ctx, payload=row.payload)
+        return dispatch_delta(table, world, mon.zero_counters(), e)
+    return jax.vmap(lane)(rows)
+
+
+def _mask_lanes(lanes_delta: WorldDelta, active: jax.Array) -> WorldDelta:
+    """OOB the row declarations of inactive lanes so their scatters drop."""
+    return lanes_delta._replace(**{
+        rf: jnp.where(active, getattr(lanes_delta, rf), NO_ROW)
+        for rf in ROW_FIELDS})
+
+
+def _count_rows(masked: WorldDelta) -> jax.Array:
+    """Component-table rows this window's batched phase will scatter."""
+    counts = [jnp.sum((getattr(masked, rf) != NO_ROW).astype(jnp.int32))
+              for rf in ROW_FIELDS]
+    return sum(counts[1:], counts[0])
+
+
+def _finalize_batch(world: World, rows: ev.EventBatch, active: jax.Array,
+                    lanes_counters, lanes_out: ev.EventBatch, n_rows):
+    """Shared batched-dispatch tail: counters, per-LP columns, emit masking.
+
+    Counters are write-only int adds, so summing the active lanes' deltas
+    equals bumping them one by one in window order. The per-LP LVT/lifecycle
+    columns commute even across duplicate-dst lanes (max is commutative; the
+    RUNNING mark is an idempotent constant set), so two direct segment
+    scatters are exact.
+    """
+    cdelta = jnp.sum(jnp.where(active[:, None], lanes_counters, 0), axis=0)
+    cdelta = cdelta.at[mon.C_BATCH_ROWS].add(n_rows)
+    dst = jnp.where(active, rows.dst, world.lp_lvt.shape[0])  # OOB -> drop
+    world = world._replace(
+        lp_lvt=world.lp_lvt.at[dst].max(rows.time, mode="drop"),
+        lp_state=world.lp_state.at[dst].set(2, mode="drop"),  # RUNNING
+    )
+    out_valid = lanes_out.valid & active[:, None]
+    return world, cdelta, lanes_out._replace(valid=out_valid)
 
 
 def apply_handler_batch(table, world: World, rows: ev.EventBatch,
                         active: jax.Array):
-    """Dispatch a window's candidate rows through one vectorized handler call.
+    """Dispatch a window's candidate rows through one vectorized handler call
+    and merge the results with per-row segment scatters (the delta path).
 
-    Batch-safety contract: every handler is a pure ``world``-indexed function —
-    it reads and writes only the component row owned by its destination LP
-    (``lp_res[e.dst]``) plus write-only commutative counters. The caller
-    guarantees ``active`` rows have pairwise-distinct destination LPs and
-    component rows (sync.conflict_mask), so each world element is written by
-    at most one active lane and the element-wise segment scatter below ("take
-    the one lane that changed it") is exact — no arithmetic on state values,
-    hence byte-identical to folding the same rows sequentially in any order.
-    The per-LP LVT/lifecycle columns are likewise disjoint across lanes and
-    are applied as two direct segment scatters (max commutes; the RUNNING
-    mark is idempotent).
+    Batch-safety contract: the caller guarantees ``active`` rows declare
+    pairwise-distinct component rows (sync.conflict_mask keys on the exact
+    ``(KIND_TABLE[kind], lp_res[dst])`` row of the delta contract), so every
+    scattered row is written by at most one lane and ``apply_delta``'s
+    ``.at[rows].set`` merge is exact — no arithmetic on state values, hence
+    byte-identical to folding the same rows sequentially in any order. Cost is
+    O(lanes x row) per mutable field, independent of component-table width or
+    count — the point of the delta rewrite.
 
-    Returns ``(world', counter_delta, emits)`` with emits shaped
-    (B, MAX_EMIT) per field, lane-aligned with ``rows`` and masked by
-    ``active``.
+    Returns ``(world', counter_delta, emits)`` with emits shaped (B, MAX_EMIT)
+    per field, lane-aligned with ``rows`` and masked by ``active``. The
+    counter delta includes C_BATCH_ROWS (rows scattered this window).
     """
+    lanes_delta, lanes_counters, lanes_out = _dispatch_lanes(table, world, rows)
+    masked = _mask_lanes(lanes_delta, active)
+    n_rows = _count_rows(masked)
+    world = apply_delta(world, masked)
+    return _finalize_batch(world, rows, active, lanes_counters, lanes_out,
+                           n_rows)
+
+
+def apply_handler_batch_dense(table, world: World, rows: ev.EventBatch,
+                              active: jax.Array):
+    """PR 2 reference merge: per-lane whole tables + element-wise pick.
+
+    Materializes each lane's delta into a full copy of every mutable table and
+    merges element-wise ("take the one lane that changed it") — the
+    O(lanes x pool-wide tables) strategy the delta path replaces. Kept as the
+    ``spec.merge_mode="dense"`` engine option so equivalence tests can pin
+    delta == dense == sequential and the wide-component benchmark can measure
+    the delta win as a machine-normalized in-process ratio.
+    """
+    lanes_delta, lanes_counters, lanes_out = _dispatch_lanes(table, world, rows)
+    masked = _mask_lanes(lanes_delta, active)
+    n_rows = _count_rows(masked)
     n_lanes = rows.time.shape[0]
 
-    def lane(row):
-        e = Ev(time=row.time, seq=row.seq, kind=row.kind, src=row.src,
-               dst=row.dst, ctx=row.ctx, payload=row.payload)
-        w2, c2, out = apply_handler(table, world, mon.zero_counters(), e)
-        return {f: getattr(w2, f) for f in MUTABLE_FIELDS}, c2, out
+    def lane_tables(d):
+        w2 = apply_delta(world, d)
+        return {f: getattr(w2, f) for f in MUTABLE_FIELDS}
 
-    lanes_mut, lanes_counters, lanes_out = jax.vmap(lane)(rows)
-
-    # counters: write-only int adds commute, so summing the active lanes'
-    # deltas equals bumping them one by one in window order.
-    cdelta = jnp.sum(jnp.where(active[:, None], lanes_counters, 0), axis=0)
+    lanes_mut = jax.vmap(lane_tables)(masked)
 
     def merge(lane_field, base):
         m = active.reshape((n_lanes,) + (1,) * base.ndim)
@@ -401,13 +573,5 @@ def apply_handler_batch(table, world: World, rows: ev.EventBatch,
 
     world = world._replace(**{
         f: merge(lanes_mut[f], getattr(world, f)) for f in MUTABLE_FIELDS})
-
-    # per-LP columns: disjoint dst across active lanes -> one scatter each
-    dst = jnp.where(active, rows.dst, world.lp_lvt.shape[0])  # OOB -> drop
-    world = world._replace(
-        lp_lvt=world.lp_lvt.at[dst].max(rows.time, mode="drop"),
-        lp_state=world.lp_state.at[dst].set(2, mode="drop"),  # RUNNING
-    )
-
-    out_valid = lanes_out.valid & active[:, None]
-    return world, cdelta, lanes_out._replace(valid=out_valid)
+    return _finalize_batch(world, rows, active, lanes_counters, lanes_out,
+                           n_rows)

@@ -36,14 +36,18 @@ C_LP_LOCAL = 17       # events destined to locally-owned LPs (scheduler locality
 C_EXEC_SPILL = 18     # safe events deferred past exec_cap to the next window
 C_BATCH_EXEC = 19     # events executed through the grouped vectorized dispatch
 C_BATCH_FALLBACK = 20  # conflicted events executed via the sequential fallback
-N_COUNTERS = 21
+C_BATCH_ROWS = 21     # component-table rows scattered by the batched merge
+N_COUNTERS = 22
 
 DROP_COUNTERS = (C_DROP_POOL, C_DROP_ROUTE, C_DROP_FLOW, C_DROP_QUEUE)
 
 # Dispatch-path diagnostics: the only counters allowed to differ between the
 # batched and the sequential execution of the same scenario (everything else
 # is byte-identical by the batched-dispatch equivalence contract).
-BATCH_DIAG_COUNTERS = (C_BATCH_EXEC, C_BATCH_FALLBACK)
+# C_BATCH_ROWS measures the per-window scatter volume of the delta merge —
+# the load signal the adaptive-exec_cap ROADMAP item keys on (a window that
+# scatters few rows relative to exec_cap has headroom to grow the window).
+BATCH_DIAG_COUNTERS = (C_BATCH_EXEC, C_BATCH_FALLBACK, C_BATCH_ROWS)
 
 
 def zero_counters() -> jax.Array:

@@ -13,6 +13,15 @@ the same bound in O(log A) hops. The paper's own observation — "instead of
 synchronizing logical processes we are synchronizing the distributed simulation
 agents altogether" — is what makes the collective formulation legal. Per-context
 GVTs (C6) fall out of a segmented min before the collective.
+
+This module also hosts the *intra-window* safety analysis for the engine's
+batched dispatch: ``conflict_mask`` decides which safe events may execute in one
+vectorized handler call. Its soundness rests on the delta contract stated in
+``handlers.py`` — every handler reads and writes exactly the component row it
+declares (``(events.KIND_TABLE[kind], lp_res[dst])``), so pairwise-distinct
+declared rows imply pairwise-disjoint world reads/writes, and batched execution
+is byte-identical to any sequential order of the same events (see
+docs/architecture.md for the full argument).
 """
 from __future__ import annotations
 
@@ -72,26 +81,30 @@ def _dup_mask(key: jax.Array, active: jax.Array, n_keys: int) -> jax.Array:
     return jnp.zeros((n,), bool).at[order].set(dup_sorted)
 
 
-def conflict_mask(safe: jax.Array, dst: jax.Array, table_id: jax.Array,
-                  res: jax.Array, *, n_lp: int, n_res: int) -> jax.Array:
+def conflict_mask(safe: jax.Array, table_id: jax.Array, res: jax.Array, *,
+                  n_res: int) -> jax.Array:
     """Rows of a window whose handler writes may overlap another safe row's.
 
-    A row conflicts when (a) its destination LP also appears on another safe
-    row (duplicate ``dst``), or (b) another safe row addresses the same
-    replicated-component row — same component table (``events.KIND_TABLE``)
-    and same resource row ``lp_res[dst]``. Conflict-free rows touch pairwise
-    disjoint world state (handlers read/write only their own LP columns and
-    their own ``lp_res`` row; counters are write-only commutative adds), so
-    they may execute in one vectorized batch with a disjoint-write merge and
-    stay byte-identical to the sequential fold. Conflicted rows take the
-    engine's sequential fallback. ``table_id == 0`` (kinds with no component
-    writes, e.g. NOOP) never conflicts via (b).
+    Keys on *exactly the rows the delta contract declares* (handlers.py): the
+    handler for kind ``k`` reads and writes one row of one component table —
+    row ``lp_res[dst]`` of table ``events.KIND_TABLE[k]`` — so two safe rows
+    conflict iff they address the same ``(table, resource-row)`` pair. Rows
+    with ``table_id == 0`` (kinds that declare no component row, e.g. NOOP)
+    never conflict — including duplicate-destination NOOPs, because the only
+    state they share are the engine-owned per-LP columns, whose segment
+    scatters commute (``lp_lvt`` is a max, the RUNNING mark is an idempotent
+    constant set). This is strictly tighter than the PR 2 mask, which also
+    flagged every duplicate destination LP regardless of what its handler
+    writes.
+
+    Conflict-free rows touch pairwise-disjoint component rows (the
+    disjoint-write guarantee), so they execute in one vectorized batch whose
+    per-row segment-scatter merge is byte-identical to the sequential fold.
+    Conflicted rows take the engine's compacted sequential fallback.
     """
-    dup_dst = _dup_mask(dst, safe, n_lp)
     rkey = table_id * jnp.int32(n_res) + res
     comp = safe & (table_id > 0)
-    dup_res = _dup_mask(rkey, comp, ev.N_TABLES * n_res)
-    return safe & (dup_dst | dup_res)
+    return safe & _dup_mask(rkey, comp, ev.N_TABLES * n_res)
 
 
 def exec_selection(safe: jax.Array, exec_idx: jax.Array):

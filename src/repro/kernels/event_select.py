@@ -14,6 +14,21 @@ index participates as the final tie-break, and input indices are distinct).
 ``select_events`` is the compacted variant for the engine's windowed execution:
 sort + safe-prefix in one pass — only the first ``exec_cap`` indices leave VMEM,
 so the engine can gather exactly the slots it will execute.
+
+Invariants the engine's batched dispatch relies on (docs/architecture.md):
+
+* **Stable (time, seq) prefix** — the ``select_events`` output is byte-identical
+  to ``lexsort_time_seq(...)[:exec_cap]``; the engine's trace is written in this
+  window order, so any kernel deviation breaks oracle trace equality, not just
+  performance.
+* **Segment-rank ordering** — ``group_by_kind`` returns active rows first,
+  grouped by ascending kind, *stable in original window position within each
+  kind*; ``rank`` is each row's index inside its kind segment and ``counts`` the
+  per-kind populations. The dispatcher scatters handler emits back through this
+  permutation, so stability is what keeps the flattened emit matrix equal to the
+  sequential fold's append order. Both kernels must stay interchangeable with
+  their XLA references (engine.group_by_kind_xla / select_events_xla) — the
+  tests sweep kernel vs reference over random inputs.
 """
 from __future__ import annotations
 

@@ -36,7 +36,8 @@ def run_t0t1(args):
         world, own, init_ev, spec = b.build(
             n_agents=args.agents, lookahead=2, t_end=100_000, pool_cap=1024,
             exec_cap=args.exec_cap, work_per_mb=2.0,
-            batched_dispatch=args.batched_dispatch)
+            batched_dispatch=args.batched_dispatch,
+            merge_mode=args.merge_mode)
         eng = Engine(world, own, init_ev, spec)
         st = eng.run_local(max_windows=200_000)
         c = np.asarray(st.counters).sum(axis=0)
@@ -87,7 +88,8 @@ def run_distributed(args):
                                         t_end=100_000, pool_cap=512,
                                         exec_cap=args.exec_cap,
                                         work_per_mb=2.0,
-                                        batched_dispatch=args.batched_dispatch)
+                                        batched_dispatch=args.batched_dispatch,
+                                        merge_mode=args.merge_mode)
     eng = Engine(world, own, init_ev, spec)
     mesh = Mesh(np.array(jax.devices()[:n]), ("agents",))
     st = eng.run_distributed(mesh, max_windows=200_000)
@@ -112,6 +114,10 @@ def main():
                     action=argparse.BooleanOptionalAction,
                     help="grouped vectorized handler dispatch (engine step 4); "
                          "--no-batched-dispatch restores the sequential fold")
+    p1.add_argument("--merge-mode", choices=("delta", "dense"),
+                    default="delta",
+                    help="batched-merge strategy: per-row delta scatters "
+                         "(default) or the PR 2 whole-table reference merge")
     p2 = sub.add_parser("workload")
     p2.add_argument("--results", default="results/dryrun")
     p2.add_argument("--cell", default="")
@@ -124,6 +130,10 @@ def main():
                     action=argparse.BooleanOptionalAction,
                     help="grouped vectorized handler dispatch (engine step 4); "
                          "--no-batched-dispatch restores the sequential fold")
+    p3.add_argument("--merge-mode", choices=("delta", "dense"),
+                    default="delta",
+                    help="batched-merge strategy: per-row delta scatters "
+                         "(default) or the PR 2 whole-table reference merge")
     args = ap.parse_args()
     dict(t0t1=run_t0t1, workload=run_workload,
          distributed=run_distributed)[args.mode](args)

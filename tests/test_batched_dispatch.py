@@ -99,15 +99,20 @@ def test_clean_mixed_kind_window_runs_fully_batched():
     assert_states_identical(st_b, st_s)
 
 
-def test_duplicate_dst_conflicts_fall_back_and_match_oracle():
-    """Same-window same-dst events must take the sequential fallback."""
+def test_shared_row_conflicts_fall_back_and_match_oracle():
+    """Same-window events declaring one component row take the fallback.
+
+    Repeated DATA_WRITEs to one storage LP all address the same storage row
+    (a genuine read-modify-write collision), so the rows-keyed conflict mask
+    must serialize them; the interleaved NOOPs stay batched.
+    """
     b = ScenarioBuilder(max_cpu=2)
-    farm0 = b.add_farm([5.0])
-    farm1 = b.add_farm([5.0])
+    sto0 = b.add_storage(500.0, 5000.0, 5.0)
+    sto1 = b.add_storage(400.0, 4000.0, 5.0)
     sinks = [b.add_idle_lp() for _ in range(3)]
     for _ in range(6):
-        b.add_event(time=1, kind=ev.K_NOOP, src=farm0, dst=farm0)
-        b.add_event(time=1, kind=ev.K_NOOP, src=farm1, dst=farm1)
+        b.add_event(time=1, kind=ev.K_DATA_WRITE, src=sto0, dst=sto0, payload=[1.0])
+        b.add_event(time=1, kind=ev.K_DATA_WRITE, src=sto1, dst=sto1, payload=[1.0])
     for lp in sinks:
         b.add_event(time=1, kind=ev.K_NOOP, src=lp, dst=lp)
     built = b.build(n_agents=1, lookahead=1, t_end=10, pool_cap=64, exec_cap=32)
@@ -135,23 +140,33 @@ def test_spill_interaction_matches_oracle(exec_cap, t0t1_oracle):
     assert_states_identical(st_b, st_s)
 
 
-def test_conflict_mask_flags_duplicate_dst():
-    safe = jnp.asarray([True, True, True, False])
-    dst = jnp.asarray([4, 4, 2, 2], jnp.int32)
-    table = jnp.zeros((4,), jnp.int32)
-    res = jnp.zeros((4,), jnp.int32)
-    got = sync.conflict_mask(safe, dst, table, res, n_lp=8, n_res=16)
-    assert np.asarray(got).tolist() == [True, True, False, False]
-
-
 def test_conflict_mask_flags_shared_component_row():
     """Distinct LPs writing one component row still conflict; table 0 never."""
     safe = jnp.ones((4,), bool)
-    dst = jnp.asarray([0, 1, 2, 3], jnp.int32)
     table = jnp.asarray([1, 1, 2, 0], jnp.int32)
     res = jnp.asarray([5, 5, 5, 5], jnp.int32)
-    got = sync.conflict_mask(safe, dst, table, res, n_lp=8, n_res=16)
+    got = sync.conflict_mask(safe, table, res, n_res=16)
     assert np.asarray(got).tolist() == [True, True, False, False]
+
+
+def test_conflict_mask_ignores_rows_without_component_writes():
+    """table 0 rows (no declared component row) never conflict — even many of
+    them: their only shared state are the engine-owned per-LP columns, whose
+    segment scatters commute (max / idempotent set)."""
+    safe = jnp.asarray([True, True, True, False])
+    table = jnp.zeros((4,), jnp.int32)
+    res = jnp.zeros((4,), jnp.int32)
+    got = sync.conflict_mask(safe, table, res, n_res=16)
+    assert np.asarray(got).tolist() == [False, False, False, False]
+
+
+def test_conflict_mask_respects_safe_mask():
+    """An unsafe row sharing a component row with a safe one is no conflict."""
+    safe = jnp.asarray([True, False])
+    table = jnp.asarray([3, 3], jnp.int32)
+    res = jnp.asarray([1, 1], jnp.int32)
+    got = sync.conflict_mask(safe, table, res, n_res=16)
+    assert np.asarray(got).tolist() == [False, False]
 
 
 def test_compact_batch_keeps_order_and_counts_drops():

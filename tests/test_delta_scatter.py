@@ -1,0 +1,270 @@
+"""Per-row segment-scatter handler contract (the PR 3 delta rewrite).
+
+Handlers return typed ``WorldDelta``s — one declared component row per table
+plus new row values — and the batched dispatcher merges them with per-field
+row scatters (``spec.merge_mode="delta"``) instead of the PR 2 whole-table
+element-wise merge (kept as ``merge_mode="dense"``). These tests pin:
+
+* the delta primitives (``empty_delta`` identity, ``apply_delta`` row scope),
+* delta == dense == sequential on fixed and hypothesis-random scenarios,
+* the rows-keyed conflict mask batching strictly more slots than the PR 2
+  conservative duplicate-dst mask while staying oracle-exact,
+* the C_BATCH_ROWS scatter-volume counter (the adaptive-exec_cap signal).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import t0t1_builder
+from repro.core import Engine, ScenarioBuilder, events as ev, run_sequential
+from repro.core import handlers as hd
+from repro.core import monitoring as mon
+from test_batched_dispatch import assert_states_identical, engine_trace, run_pair
+
+
+def run_mode(world, own, init_ev, spec, merge_mode, max_windows=20000):
+    spec_m = dataclasses.replace(spec, merge_mode=merge_mode)
+    eng = Engine(world, own, init_ev, spec_m, trace_cap=4096)
+    return eng.run_local(max_windows=max_windows)
+
+
+# --------------------------------------------------------------- primitives
+def small_world():
+    b = ScenarioBuilder(max_cpu=3, queue_cap=4, max_link=2, max_flow=4)
+    b.add_farm([2.0, 3.0])
+    b.add_farm([4.0])
+    b.add_storage(100.0, 1000.0, 5.0)
+    world, _own, _init, _spec = b.build(n_agents=1, lookahead=1, t_end=10)
+    return world
+
+
+def test_empty_delta_is_identity():
+    world = small_world()
+    out = hd.apply_delta(world, hd.empty_delta(world))
+    for name, a, b in zip(world._fields, world, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+
+def test_apply_delta_writes_only_the_declared_row():
+    world = small_world()
+    delta = hd.empty_delta(world)._replace(
+        farm_row=jnp.int32(1),
+        cpu_busy=jnp.ones_like(world.cpu_busy[1]),
+        cpu_mem=world.cpu_mem[1] + 2.5,
+        jobq=world.jobq[1],
+        jobq_n=jnp.int32(3),
+    )
+    out = hd.apply_delta(world, delta)
+    np.testing.assert_array_equal(
+        np.asarray(out.cpu_busy[0]), np.asarray(world.cpu_busy[0])
+    )
+    np.testing.assert_array_equal(np.asarray(out.cpu_busy[1]), 1)
+    assert int(out.jobq_n[1]) == 3
+    assert int(out.jobq_n[0]) == 0
+    # undeclared tables are untouched
+    np.testing.assert_array_equal(np.asarray(out.sto_used), np.asarray(world.sto_used))
+
+
+def test_delta_schema_covers_every_replicated_mutable_field():
+    """The typed schema must stay in sync with the owner-wins sync list:
+    every field a handler may write is either in DELTA_SCHEMA or one of the
+    engine-owned per-LP columns."""
+    engine_owned = {"lp_state", "lp_lvt"}
+    immutable = {
+        "lp_kind",
+        "lp_agent",
+        "lp_res",
+        "lp_ctx",
+        "cpu_power",
+        "link_bw",
+        "link_lat",
+        "sto_cap",
+        "sto_rate",
+        "gen_interval",
+        "gen_target",
+        "gen_kind",
+        "gen_payload",
+    }
+    from repro.core.components import World
+    assert set(World._fields) == set(hd.DELTA_SCHEMA) | engine_owned | immutable
+    assert set(hd.DELTA_SCHEMA.values()) == set(hd.ROW_FIELDS)
+
+
+# ------------------------------------------------- merge-mode equivalence
+@pytest.mark.parametrize("merge_mode", ["delta", "dense"])
+def test_merge_modes_match_oracle_and_sequential(merge_mode, t0t1_oracle):
+    """Both batched merges are byte-identical to the sequential fold and the
+    heapq oracle on the mixed-kind T0/T1 study."""
+    _ow, _oc, otrace = t0t1_oracle
+    b, kw = t0t1_builder()
+    world, own, init_ev, spec = b.build(n_agents=1, **kw)
+    st_m = run_mode(world, own, init_ev, spec, merge_mode)
+    spec_s = dataclasses.replace(spec, batched_dispatch=False)
+    st_s = run_mode(world, own, init_ev, spec_s, "delta")
+    assert engine_trace(st_m) == otrace
+    assert_states_identical(st_m, st_s)
+
+
+def check_delta_equals_dense(p):
+    """Property body: per-row scatter results == whole-table merge results."""
+    b = ScenarioBuilder(max_cpu=4, queue_cap=8, max_link=4, max_flow=16)
+    t1 = b.add_regional_center(
+        n_cpu=2, cpu_power=p["p1"], disk=250.0, tape=2500.0, tape_rate=5.0
+    )
+    wan = b.add_net_region(link_bws=[p["bw0"], p["bw1"]], link_lats=[5, 5])
+    payload = [
+        p["size"],
+        0,
+        -1,
+        -1,
+        t1["farm"],
+        ev.K_JOB_SUBMIT,
+        t1["storage"],
+        ev.K_DATA_WRITE,
+    ]
+    b.add_generator(
+        target_lp=wan,
+        kind=ev.K_FLOW_START,
+        payload=payload,
+        interval=p["interval"],
+        count=p["count"],
+    )
+    world, own, init_ev, spec = b.build(
+        n_agents=2,
+        lookahead=p["lookahead"],
+        t_end=3000,
+        pool_cap=256,
+        exec_cap=p["exec_cap"],
+        work_per_mb=2.0,
+    )
+    st_delta = run_mode(world, own, init_ev, spec, "delta")
+    st_dense = run_mode(world, own, init_ev, spec, "dense")
+    assert_states_identical(st_delta, st_dense)
+    cd = np.asarray(st_delta.counters).sum(axis=0)
+    cx = np.asarray(st_dense.counters).sum(axis=0)
+    # even the batch diagnostics agree between the two batched merges (only
+    # the sequential path is allowed to differ on those)
+    np.testing.assert_array_equal(cd, cx)
+
+
+def test_delta_equals_dense_fixed_examples():
+    """Seeded spot-checks of the property (runs without hypothesis)."""
+    rng = np.random.RandomState(1)
+    for _ in range(2):
+        p = dict(
+            p1=float(rng.uniform(1.0, 20.0)),
+            bw0=float(rng.uniform(0.1, 8.0)),
+            bw1=float(rng.uniform(0.1, 8.0)),
+            size=float(rng.uniform(5.0, 120.0)),
+            interval=int(rng.randint(5, 60)),
+            count=int(rng.randint(2, 10)),
+            lookahead=int(rng.randint(1, 4)),
+            exec_cap=int(rng.choice([1, 3, 17, 256])),
+        )
+        check_delta_equals_dense(p)
+
+
+# --------------------------------------------------- conflict-mask tightening
+def _pr2_conservative_mask(safe: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    """The retired PR 2 duplicate-dst component of the conflict mask."""
+    out = np.zeros_like(safe)
+    for i, (s, d) in enumerate(zip(safe, dst)):
+        if s and np.sum(safe & (dst == d)) > 1:
+            out[i] = True
+    return out
+
+
+def test_rows_keyed_mask_batches_strictly_more_than_dup_dst():
+    """Duplicate-dst NOOPs share no component row, so the rows-keyed mask runs
+    the whole window batched where the PR 2 mask serialized most of it — and
+    the result stays byte-identical to the oracle."""
+    b = ScenarioBuilder(max_cpu=2)
+    farm0 = b.add_farm([5.0])
+    farm1 = b.add_farm([5.0])
+    sinks = [b.add_idle_lp() for _ in range(3)]
+    for _ in range(6):
+        b.add_event(time=1, kind=ev.K_NOOP, src=farm0, dst=farm0)
+        b.add_event(time=1, kind=ev.K_NOOP, src=farm1, dst=farm1)
+    for lp in sinks:
+        b.add_event(time=1, kind=ev.K_NOOP, src=lp, dst=lp)
+    world, own, init_ev, spec = b.build(
+        n_agents=1, lookahead=1, t_end=10, pool_cap=64, exec_cap=32
+    )
+    _ow, _oc, otrace = run_sequential(world, own, init_ev, spec)
+    st_b, st_s = run_pair(world, own, init_ev, spec)
+    c = np.asarray(st_b.counters)[0]
+    # new mask: the whole window executes in the one vmapped call
+    assert c[mon.C_BATCH_FALLBACK] == 0
+    assert c[mon.C_BATCH_EXEC] == c[mon.C_EVENTS] == 15
+    # the PR 2 mask would have serialized the 12 duplicate-dst slots
+    safe = np.asarray(init_ev.valid)
+    dst = np.asarray(init_ev.dst)
+    old_batched = int(np.sum(safe & ~_pr2_conservative_mask(safe, dst)))
+    assert old_batched == 3
+    assert int(c[mon.C_BATCH_EXEC]) > old_batched  # strictly more slots batched
+    # ... and exactness is untouched
+    assert engine_trace(st_b) == otrace
+    assert_states_identical(st_b, st_s)
+
+
+# --------------------------------------------------------- C_BATCH_ROWS
+def test_batch_rows_counts_scattered_component_rows():
+    """One window: 2 DATA_WRITEs declare 2 storage rows; 3 NOOPs declare none."""
+    b = ScenarioBuilder(max_cpu=2)
+    sto0 = b.add_storage(500.0, 5000.0, 5.0)
+    sto1 = b.add_storage(400.0, 4000.0, 5.0)
+    sinks = [b.add_idle_lp() for _ in range(3)]
+    b.add_event(time=1, kind=ev.K_DATA_WRITE, src=sto0, dst=sto0, payload=[1.0])
+    b.add_event(time=1, kind=ev.K_DATA_WRITE, src=sto1, dst=sto1, payload=[2.0])
+    for lp in sinks:
+        b.add_event(time=1, kind=ev.K_NOOP, src=lp, dst=lp)
+    world, own, init_ev, spec = b.build(n_agents=1, lookahead=1, t_end=10, pool_cap=64)
+    st = Engine(world, own, init_ev, spec).run_local()
+    c = np.asarray(st.counters)[0]
+    assert c[mon.C_BATCH_EXEC] == 5
+    assert c[mon.C_BATCH_ROWS] == 2
+
+
+def test_batch_rows_bounded_by_batched_events(t0t1_oracle):
+    """Across a mixed-kind run: every batched event scatters at most one row,
+    and the sequential path never bumps the counter."""
+    b, kw = t0t1_builder()
+    world, own, init_ev, spec = b.build(n_agents=1, **kw)
+    st_b, st_s = run_pair(world, own, init_ev, spec)
+    cb = np.asarray(st_b.counters).sum(axis=0)
+    assert 0 < cb[mon.C_BATCH_ROWS] <= cb[mon.C_BATCH_EXEC]
+    cs = np.asarray(st_s.counters).sum(axis=0)
+    assert cs[mon.C_BATCH_ROWS] == 0
+
+
+# ------------------------------------------------------ hypothesis property
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    scenario_params = st.fixed_dictionaries(
+        dict(
+            p1=st.floats(1.0, 20.0),
+            bw0=st.floats(0.1, 8.0),
+            bw1=st.floats(0.1, 8.0),
+            size=st.floats(5.0, 120.0),
+            interval=st.integers(5, 60),
+            count=st.integers(2, 10),
+            lookahead=st.integers(1, 4),
+            exec_cap=st.sampled_from([1, 3, 17, 256]),
+        )
+    )
+
+    @settings(max_examples=6, deadline=None)
+    @given(scenario_params)
+    def test_delta_equals_dense_property(p):
+        """Per-row scatter results == whole-table merge results (traces,
+        counters, world, pool) on randomized scenarios."""
+        check_delta_equals_dense(p)

@@ -1,0 +1,62 @@
+"""Docs link checker (CI `docs` job; also run by tests/test_docs.py).
+
+Scans README.md and docs/*.md for markdown links and verifies every relative
+target resolves to an existing file or directory (anchors stripped; http(s)/
+mailto targets skipped). Keeps the documented surface from rotting: a renamed
+file or a typo'd path fails CI instead of shipping a dead link.
+
+Usage: python tools/check_docs.py [repo_root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — target without closing parens; images share the syntax.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def iter_doc_files(root: pathlib.Path):
+    readme = root / "README.md"
+    if readme.exists():
+        yield readme
+    yield from sorted((root / "docs").glob("*.md"))
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    """Return a list of human-readable errors for dead relative links."""
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        for m in _LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(_SKIP_PREFIXES) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                errors.append(f"{path}:{lineno}: dead link -> {target}")
+    return errors
+
+
+def main(root: str = ".") -> int:
+    rootp = pathlib.Path(root).resolve()
+    files = list(iter_doc_files(rootp))
+    if not files:
+        print(f"FAIL: no docs found under {rootp}")
+        return 1
+    errors = [e for f in files for e in check_file(f)]
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"FAIL: {len(errors)} dead link(s) across {len(files)} file(s)")
+        return 1
+    print(f"OK: {len(files)} file(s), all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else "."))
