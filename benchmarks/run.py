@@ -17,6 +17,10 @@
   wide_component   — engine step 4: per-row delta scatter vs the PR 2
                      whole-table merge on wide component tables (64-CPU farms;
                      merge cost isolated: conflict-free JOB_SUBMIT windows)
+  cache_churn      — PR 4 registry seam: the replica-cache component defined
+                     entirely outside core (repro/scenarios/cache.py) running
+                     through the registry-generated batched dispatch
+                     (trajectory record, no regression gate yet)
   kernels          — µs/call for each Pallas kernel's XLA reference path
   workload_sim     — DESIGN.md §2: DES-predicted step time vs analytic roofline
 
@@ -352,6 +356,49 @@ def bench_wide_component(pool_caps=(4096,), width=256, n_cpu=64, lookahead=4):
              f"speedup={rates['delta'] / rates['dense']:.2f}x")
 
 
+def bench_cache_churn(pool_caps=(4096,), width=256, n_keys=4, lookahead=4):
+    """The outside-core replica-cache component under batched dispatch.
+
+    ``width`` cache LPs, one lookup per cache per round (distinct rows —
+    conflict-free batch), keys cycling mod ``n_keys`` so the run mixes cold
+    misses (which emit CACHE_FILLs into their own window) with warm hits.
+    Registry-generated handlers must keep batched-dispatch throughput: the
+    events/s ratio vs the sequential fold is recorded as a trajectory (no
+    regression gate yet — see benchmarks/baseline.json "trajectory").
+    """
+    import dataclasses
+
+    from repro.scenarios.cache import build_churn_scenario
+
+    for pool_cap in pool_caps:
+        n_rounds = max(pool_cap // (2 * width), 2)
+        built, _caches = build_churn_scenario(
+            n_caches=width, n_keys=n_keys, n_rounds=n_rounds,
+            cache_ways=n_keys, miss_lat=lookahead, lookahead=lookahead,
+            pool_cap=pool_cap, emit_cap=2 * width + 8, exec_cap=width)
+        world, own, init_ev, spec = built
+        rates = {}
+        for label, batched in (("batched", True), ("sequential", False)):
+            spec_b = dataclasses.replace(spec, batched_dispatch=batched)
+            eng = Engine(world, own, init_ev, spec_b)
+            jax.block_until_ready(eng.run_local().counters)   # compile
+            t0 = time.perf_counter()
+            st = eng.run_local()                              # cached jit
+            jax.block_until_ready(st.counters)
+            dt = time.perf_counter() - t0
+            c = np.asarray(st.counters)[0]
+            n = int(c[mon.C_EVENTS])
+            assert int(c[mon.C_BATCH_FALLBACK]) == 0, "scenario must be clean"
+            rates[label] = n / dt
+        w = jax.tree.map(lambda x: np.asarray(x[0]), st.world)
+        hits, miss = int(w.cache_hits.sum()), int(w.cache_miss.sum())
+        emit(f"cache_churn_p{pool_cap}", 1e6 / rates["batched"],
+             f"events_s_batched={rates['batched']:.0f};"
+             f"events_s_sequential={rates['sequential']:.0f};"
+             f"width={width};hits={hits};misses={miss};"
+             f"speedup={rates['batched'] / rates['sequential']:.2f}x")
+
+
 def bench_kernels():
     from repro.kernels import ops
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
@@ -462,6 +509,7 @@ def main() -> None:
         bench_exec_compaction(pool_caps=(4096,))
         bench_batched_dispatch(pool_caps=(4096,))
         bench_wide_component(pool_caps=(4096,))
+        bench_cache_churn(pool_caps=(4096,))
         bench_scheduler()
         bench_kernels()
         bench_workload_sim()
@@ -475,6 +523,7 @@ def main() -> None:
         bench_exec_compaction()
         bench_batched_dispatch()
         bench_wide_component()
+        bench_cache_churn()
         bench_kernels()
         bench_workload_sim()
     if args.json:

@@ -5,8 +5,9 @@ Run: PYTHONPATH=src python examples/quickstart.py
 import jax
 import numpy as np
 
-from repro.core import Engine, ScenarioBuilder, events as ev
+from repro.core import Engine, ScenarioBuilder
 from repro.core import monitoring as mon
+from repro.core.components import DATA_WRITE, FLOW_START, JOB_SUBMIT
 
 # --- 1. describe the system (paper fig 1: regional centers) ---------------
 b = ScenarioBuilder(max_cpu=4, queue_cap=16, max_link=4, max_flow=32)
@@ -17,11 +18,16 @@ tier1 = b.add_regional_center(n_cpu=2, cpu_power=8.0, disk=500.0,
 wan = b.add_net_region(link_bws=[1.0, 1.0], link_lats=[5, 5])
 
 # production at tier-0 replicates 40 MB datasets to tier-1; each arrival
-# triggers an analysis job whose output lands in tier-1 storage
+# triggers an analysis job whose output lands in tier-1 storage. Payloads are
+# packed by field name through the kind's PayloadSpec (the declarative model
+# in repro/core/components.py; see docs/scenario_api.md) — no index lists.
 b.add_generator(
-    target_lp=wan, kind=ev.K_FLOW_START,
-    payload=[40.0, 0, -1, -1, tier1["farm"], ev.K_JOB_SUBMIT,
-             tier1["storage"], ev.K_DATA_WRITE],
+    target_lp=wan, kind=FLOW_START,
+    payload=FLOW_START.pack(size=40.0, l0=0,
+                            notify_lp=tier1["farm"],
+                            notify_kind=JOB_SUBMIT.id,
+                            notify2_lp=tier1["storage"],
+                            notify2_kind=DATA_WRITE.id),
     interval=20, count=16)
 
 # --- 2. build for a 4-agent fleet and run ----------------------------------

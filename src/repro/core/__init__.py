@@ -1,25 +1,36 @@
 """repro.core — the paper's distributed discrete-event simulation framework.
 
-Public surface (see docs/architecture.md for the full map):
-  ScenarioBuilder / World / ScenarioSpec   — model construction (components, C5)
-  Engine / EngineState                      — conservative-window engine (C1, C2)
-  handlers / WorldDelta                     — per-row event kernels + delta schema
-  scheduler                                 — monitoring-driven placement (C3)
-  oracle                                    — sequential reference DES
+Public surface (see docs/architecture.md for the full map, and
+docs/scenario_api.md for the authoring guide):
+  registry / Registry / FieldSpec / PayloadSpec — declarative model authoring;
+                                              every engine table is generated
+  BUILTIN (components.py)                    — the builtin four-component model
+  ScenarioBuilder / World / ScenarioSpec     — model construction (components, C5)
+  Engine / EngineState                       — conservative-window engine (C1, C2)
+  handlers / WorldDelta                      — per-row event kernels + delta schema
+  scheduler                                  — monitoring-driven placement (C3)
+  oracle                                     — sequential reference DES
+
+``__all__`` below *is* the supported public surface; ``tools/check_api.py``
+gates it (and the generated schema exports) against registry drift in CI.
 """
 from repro.core import (events, handlers, monitoring, network, oracle,
-                        scheduler, sync)
-from repro.core.components import (LPK_FARM, LPK_GEN, LPK_NET, LPK_STORAGE,
-                                   ScenarioBuilder, ScenarioSpec, World,
-                                   WorldOwnership, sync_world)
+                        registry, scheduler, sync)
+from repro.core.components import (BUILTIN, LPK_FARM, LPK_GEN, LPK_IDLE,
+                                   LPK_NET, LPK_STORAGE, ScenarioBuilder,
+                                   ScenarioSpec, World, WorldOwnership,
+                                   sync_world)
 from repro.core.engine import AXIS, Engine, EngineState, lexsort_time_seq
 from repro.core.handlers import WorldDelta
 from repro.core.oracle import merged_engine_trace, run_sequential
+from repro.core.registry import (FieldSpec, PayloadSpec, Registry,
+                                 RegistryError, registry_of)
 
 __all__ = [
-    "AXIS", "Engine", "EngineState", "LPK_FARM", "LPK_GEN", "LPK_NET",
-    "LPK_STORAGE", "ScenarioBuilder", "ScenarioSpec", "World", "WorldDelta",
-    "WorldOwnership", "events", "handlers", "lexsort_time_seq",
-    "merged_engine_trace", "monitoring", "network", "oracle", "run_sequential",
-    "scheduler", "sync", "sync_world",
+    "AXIS", "BUILTIN", "Engine", "EngineState", "FieldSpec", "LPK_FARM",
+    "LPK_GEN", "LPK_IDLE", "LPK_NET", "LPK_STORAGE", "PayloadSpec",
+    "Registry", "RegistryError", "ScenarioBuilder", "ScenarioSpec", "World",
+    "WorldDelta", "WorldOwnership", "events", "handlers", "lexsort_time_seq",
+    "merged_engine_trace", "monitoring", "network", "oracle", "registry",
+    "registry_of", "run_sequential", "scheduler", "sync", "sync_world",
 ]

@@ -1,4 +1,4 @@
-"""Simulation components (paper §4.2) as replicated, vectorized state tables.
+"""Simulation components (paper §4.2), declared through the registry.
 
 The paper models Grid systems from basic components — CPU units, network links,
 database servers + mass-storage centers, regional centers — implemented as Java
@@ -7,6 +7,16 @@ component class is a structure-of-arrays table inside ``World``; replication is
 literal (every agent holds the full table) and synchronization is owner-wins /
 commutative-delta all-reduce at conservative-window boundaries (see ``sync_world``).
 
+Since PR 4 the four built-in component tables, the event kinds, and every
+engine table derived from them (``World``, ``WorldDelta`` + ``DELTA_SCHEMA``,
+``KIND_TABLE``, the owner-wins sync lists, ``WorldOwnership``, the builder's
+``add_*`` methods) are **generated** by :mod:`repro.core.registry` from the
+declarations in :func:`register_builtin_model` below — the hand-written
+structs of PR 3 are now the generated output, pinned byte-identical by
+``tests/test_registry.py`` and the ``tools/check_api.py`` drift gate. New
+component types register the same way on ``BUILTIN.extend()`` with zero edits
+here (see ``repro/scenarios/cache.py`` and ``docs/scenario_api.md``).
+
 Logical processes (C1) own component rows: ``lp_res`` maps an LP to its resource row
 (farm / network region / storage / generator). The paper's five LP lifecycle states
 (§4.3: created, ready, running, waiting, finished) are kept as a data column — under
@@ -14,173 +24,140 @@ SPMD they are window-granular annotations, not thread states (see DESIGN.md §3)
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple
-
-import jax
 import jax.numpy as jnp
 
-from repro.core import events as ev
-
-# LP kinds.
-LPK_IDLE = 0      # placeholder / finished LP slot
-LPK_FARM = 1      # compute farm: CPU units + job queue
-LPK_NET = 2       # network region: links + flows (interrupt-based traffic model)
-LPK_STORAGE = 3   # database server (disk) + mass storage (tape)
-LPK_GEN = 4       # activity generator ("production / analysis" job sources)
-
-# LP lifecycle states (paper §4.3).
-LPS_CREATED = 0
-LPS_READY = 1
-LPS_RUNNING = 2
-LPS_WAITING = 3
-LPS_FINISHED = 4
+from repro.core.registry import (  # noqa: F401  (re-exported public surface)
+    LPS_CREATED, LPS_FINISHED, LPS_READY, LPS_RUNNING, LPS_WAITING, PAYLOAD,
+    FieldSpec, PayloadSpec, Registry, ScenarioBuilderBase, ScenarioSpec,
+    registry_of)
 
 MAXHOP = 3  # max links on a flow route
 
 
-class World(NamedTuple):
-    """All mutable simulation state. Replicated on every agent; synced per window."""
+def register_builtin_model(reg: Registry) -> dict:
+    """Declare the paper's four basic components and eight event kinds.
 
-    # --- logical processes (C1) ---
-    lp_kind: jax.Array    # i32 (NLP,)
-    lp_agent: jax.Array   # i32 (NLP,)  placement map — the scheduler (C3) rewrites it
-    lp_res: jax.Array     # i32 (NLP,)  resource row owned by this LP
-    lp_state: jax.Array   # i32 (NLP,)  lifecycle state
-    lp_lvt: jax.Array     # i32 (NLP,)  per-LP local virtual time
-    lp_ctx: jax.Array     # i32 (NLP,)  simulation context (C6)
+    This is the *entire* hand-maintained model description: everything the
+    engine consumes (World/WorldDelta structs, KIND_TABLE, sync lists,
+    builder methods, dispatch table slots) is generated from it. Handlers
+    attach in ``handlers.register_builtin_handlers``. ``tools/check_api.py``
+    re-runs this against a fresh registry to catch drift in core's exports.
+    """
+    reg.dim("max_cpu", 16)
+    reg.dim("queue_cap", 32)
+    reg.dim("max_link", 8)
+    reg.dim("max_flow", 64)
 
-    # --- compute farms (CPU units + FIFO job queue) ---
-    cpu_power: jax.Array  # f32 (NFARM, MAXCPU)  ops/tick; 0 => slot absent
-    cpu_busy: jax.Array   # i32 (NFARM, MAXCPU)  1 while a job runs
-    cpu_mem: jax.Array    # f32 (NFARM, MAXCPU)  memory used by the running job
-    jobq: jax.Array       # f32 (NFARM, QCAP, 6) queued [work, mem, nlp, nkind, size, _]
-    jobq_n: jax.Array     # i32 (NFARM,) queue occupancy
+    farm = reg.component("farm", doc="compute farm: CPU units + FIFO job queue", fields=dict(
+        cpu_power=FieldSpec(("max_cpu",), jnp.float32, doc="ops/tick; 0 => slot absent"),
+        cpu_busy=FieldSpec(("max_cpu",), jnp.int32, mutable=True, doc="1 while a job runs"),
+        cpu_mem=FieldSpec(("max_cpu",), jnp.float32, mutable=True, doc="memory used by the running job"),
+        jobq=FieldSpec(("queue_cap", 6), jnp.float32, mutable=True, doc="queued [work, mem, nlp, nkind, size, _]"),
+        jobq_n=FieldSpec((), jnp.int32, mutable=True, doc="queue occupancy"),
+    ))
+    net = reg.component("net", doc="network region: links + flows (interrupt-based traffic model, C5)", fields=dict(
+        link_bw=FieldSpec(("max_link",), jnp.float32, doc="MB/tick; 0 => absent"),
+        link_lat=FieldSpec(("max_link",), jnp.int32, doc="ticks"),
+        flow_active=FieldSpec(("max_flow",), jnp.bool_, mutable=True),
+        flow_rem=FieldSpec(("max_flow",), jnp.float32, mutable=True, doc="MB remaining"),
+        flow_rate=FieldSpec(("max_flow",), jnp.float32, mutable=True, doc="MB/tick (current fair share)"),
+        flow_tlast=FieldSpec(("max_flow",), jnp.int32, mutable=True, doc="last progress timestamp"),
+        flow_links=FieldSpec(("max_flow", MAXHOP), jnp.int32, mutable=True, fill=-1, doc="route; -1 pads"),
+        flow_notify=FieldSpec(("max_flow", 6), jnp.float32, mutable=True, doc="[nlp, nkind, work, size, n2lp, n2kind]"),
+        net_gen=FieldSpec((), jnp.int32, mutable=True, doc="interrupt generation counter"),
+    ))
+    sto = reg.component("sto", doc="storage: db server disk + mass-storage tape", fields=dict(
+        sto_cap=FieldSpec((2,), jnp.float32, doc="[disk, tape] capacity MB"),
+        sto_used=FieldSpec((2,), jnp.float32, mutable=True, doc="[disk, tape] used MB"),
+        sto_rate=FieldSpec((), jnp.float32, doc="tape migration MB/tick"),
+        sto_flag=FieldSpec((), jnp.int32, mutable=True, doc="1 while a disk->tape migration is scheduled"),
+    ))
+    gen = reg.component("gen", doc='activity generator ("production / analysis" job sources)', fields=dict(
+        gen_interval=FieldSpec((), jnp.int32, fill=1, doc="ticks between emissions"),
+        gen_left=FieldSpec((), jnp.int32, mutable=True, doc="remaining emissions"),
+        gen_target=FieldSpec((), jnp.int32, doc="destination LP for generated events"),
+        gen_kind=FieldSpec((), jnp.int32, doc="kind of generated event"),
+        gen_payload=FieldSpec((PAYLOAD,), jnp.float32, doc="template payload"),
+    ))
 
-    # --- network regions (interrupt-based traffic model, C5) ---
-    link_bw: jax.Array    # f32 (NNET, MAXLINK)  MB/tick; 0 => absent
-    link_lat: jax.Array   # i32 (NNET, MAXLINK)  ticks
-    flow_active: jax.Array  # bool (NNET, MAXFLOW)
-    flow_rem: jax.Array     # f32 (NNET, MAXFLOW)  MB remaining
-    flow_rate: jax.Array    # f32 (NNET, MAXFLOW)  MB/tick (current fair share)
-    flow_tlast: jax.Array   # i32 (NNET, MAXFLOW)  last progress timestamp
-    flow_links: jax.Array   # i32 (NNET, MAXFLOW, MAXHOP)  route; -1 pads
-    flow_notify: jax.Array  # f32 (NNET, MAXFLOW, 6) [nlp, nkind, work, size, n2lp, n2kind]
-    net_gen: jax.Array      # i32 (NNET,) interrupt generation counter
-
-    # --- storage (db server disk + mass-storage tape) ---
-    sto_cap: jax.Array    # f32 (NSTO, 2)  [disk, tape] capacity MB
-    sto_used: jax.Array   # f32 (NSTO, 2)  [disk, tape] used MB
-    sto_rate: jax.Array   # f32 (NSTO,)    tape migration MB/tick
-    sto_flag: jax.Array   # i32 (NSTO,)    1 while a disk->tape migration is scheduled
-
-    # --- activity generators ---
-    gen_interval: jax.Array  # i32 (NGEN,) ticks between emissions
-    gen_left: jax.Array      # i32 (NGEN,) remaining emissions
-    gen_target: jax.Array    # i32 (NGEN,) destination LP for generated events
-    gen_kind: jax.Array      # i32 (NGEN,) kind of generated event
-    gen_payload: jax.Array   # f32 (NGEN, ev.PAYLOAD) template payload
-
-    @property
-    def n_lp(self) -> int:
-        return self.lp_kind.shape[-1]
-
-
-@dataclasses.dataclass(frozen=True)
-class ScenarioSpec:
-    """Static (trace-time constant) facts about a built scenario."""
-
-    n_agents: int
-    n_ctx: int
-    lookahead: int          # ticks; min event-generation delay (conservative window)
-    t_end: int              # ticks; horizon after which the run stops
-    pool_cap: int           # per-agent event-pool capacity
-    emit_cap: int           # per-window emit-buffer capacity
-    route_cap: int          # per-(src,dst)-agent routing-buffer capacity
-    n_lp: int
-    work_per_mb: float = 1.0  # CPU ops per transferred MB (job sizing)
-    exec_cap: int = 256     # per-window execution-buffer capacity (compacted scan);
-                            # safe events beyond it spill to the next window
-    batched_dispatch: bool = True  # engine step 4: grouped vectorized dispatch
-                                   # (False = PR 1 sequential compacted fold)
-    merge_mode: str = "delta"      # batched-dispatch merge strategy:
-                                   # "delta" = per-row segment scatters of the
-                                   # handlers' declared rows, O(lanes x row);
-                                   # "dense" = the PR 2 reference merge over
-                                   # whole component tables, O(lanes x tables)
-                                   # — kept for equivalence tests + benchmarks
+    kinds = dict(
+        NOOP=reg.kind("NOOP"),
+        FLOW_START=reg.kind("FLOW_START", table="net", payload=PayloadSpec(
+            "size", ("l0", -1), ("l1", -1), ("l2", -1),
+            ("notify_lp", -1), "notify_kind", ("notify2_lp", -1),
+            "notify2_kind")),
+        FLOW_END=reg.kind("FLOW_END", table="net", payload=PayloadSpec("gen")),
+        JOB_SUBMIT=reg.kind("JOB_SUBMIT", table="farm", payload=PayloadSpec(
+            "work", "mem", ("notify_lp", -1), "notify_kind", "size")),
+        JOB_END=reg.kind("JOB_END", table="farm", payload=PayloadSpec(
+            "slot", "work", "mem", ("notify_lp", -1), "notify_kind", "size")),
+        DATA_WRITE=reg.kind("DATA_WRITE", table="sto",
+                            payload=PayloadSpec("size")),
+        MIGRATE=reg.kind("MIGRATE", table="sto", payload=PayloadSpec("amount")),
+        GEN_TICK=reg.kind("GEN_TICK", table="gen"),
+    )
+    return dict(farm=farm, net=net, sto=sto, gen=gen, **kinds)
 
 
-def _owner_mask_rows(res_lp: jax.Array, lp_agent: jax.Array, me) -> jax.Array:
-    """(N,) bool: rows whose owning LP is placed on this agent."""
-    return lp_agent[res_lp] == me
+# The builtin registry: the model every ``repro.core`` export derives from.
+# Handler bodies live in handlers.py and attach lazily (deferred import), so
+# this module stays importable without pulling the numeric kernels in.
+BUILTIN = Registry()
+BUILTIN.deferred_handler_modules.append("repro.core.handlers")
+_DEFS = register_builtin_model(BUILTIN)
+
+FARM, NET, STO, GEN = _DEFS["farm"], _DEFS["net"], _DEFS["sto"], _DEFS["gen"]
+NOOP, FLOW_START, FLOW_END = (_DEFS["NOOP"], _DEFS["FLOW_START"],
+                              _DEFS["FLOW_END"])
+JOB_SUBMIT, JOB_END = _DEFS["JOB_SUBMIT"], _DEFS["JOB_END"]
+DATA_WRITE, MIGRATE, GEN_TICK = (_DEFS["DATA_WRITE"], _DEFS["MIGRATE"],
+                                 _DEFS["GEN_TICK"])
+
+# LP kinds (generated: a component's lp_kind is its table id; 0 = idle).
+LPK_IDLE = 0      # placeholder / finished LP slot
+LPK_FARM = FARM.lp_kind
+LPK_NET = NET.lp_kind
+LPK_STORAGE = STO.lp_kind
+LPK_GEN = GEN.lp_kind
+
+# Event-kind ids + the kind -> table map (generated; events.py re-exports
+# these under the historical ``events.K_*`` spellings).
+K_NOOP = NOOP.id
+K_FLOW_START = FLOW_START.id
+K_FLOW_END = FLOW_END.id
+K_JOB_SUBMIT = JOB_SUBMIT.id
+K_JOB_END = JOB_END.id
+K_DATA_WRITE = DATA_WRITE.id
+K_MIGRATE = MIGRATE.id
+K_GEN_TICK = GEN_TICK.id
+N_KINDS = BUILTIN.n_kinds
+KIND_TABLE = BUILTIN.kind_table
+TBL_NONE = 0
+TBL_FARM = FARM.table_id
+TBL_NET = NET.table_id
+TBL_STORAGE = STO.table_id
+TBL_GEN = GEN.table_id
+N_TABLES = BUILTIN.n_tables
+
+# The generated structs (identical, field for field, to the PR 3 hand-written
+# NamedTuples — pinned by tests/test_registry.py).
+World = BUILTIN.world_struct()
+WorldOwnership = BUILTIN.ownership_struct()
 
 
-class WorldOwnership(NamedTuple):
-    """res -> LP inverse maps, built once per scenario (static shapes)."""
-
-    farm_lp: jax.Array  # i32 (NFARM,)
-    net_lp: jax.Array   # i32 (NNET,)
-    sto_lp: jax.Array   # i32 (NSTO,)
-    gen_lp: jax.Array   # i32 (NGEN,)
-
-
-def sync_world(world: World, own: WorldOwnership, axis: str | None) -> World:
+def sync_world(world, own, axis: str | None):
     """Owner-wins replication sync (C4: the JavaSpaces adaptation).
 
     Every row of every component table has exactly one owning agent (the agent of the
     LP that owns the resource). After a conservative window, only the owner holds the
     fresh row; an all-reduce of ``where(mine, row, 0)`` rebuilds the full table on all
     agents. Exact: one nonzero contribution + zeros per row. When ``axis`` is None the
-    engine is single-agent and sync is the identity.
+    engine is single-agent and sync is the identity. The field lists are generated
+    from the registry's ``FieldSpec.mutable`` declarations (``Registry.sync_world``),
+    and the world's own registry is used — extended models sync their tables with
+    zero edits here.
     """
-    if axis is None:
-        return world
-    me = jax.lax.axis_index(axis)
-    lp_mine = world.lp_agent == me
-    farm_mine = _owner_mask_rows(own.farm_lp, world.lp_agent, me)
-    net_mine = _owner_mask_rows(own.net_lp, world.lp_agent, me)
-    sto_mine = _owner_mask_rows(own.sto_lp, world.lp_agent, me)
-    gen_mine = _owner_mask_rows(own.gen_lp, world.lp_agent, me)
-
-    def owner_wins(x, mask):
-        m = mask.reshape(mask.shape + (1,) * (x.ndim - 1))
-        if x.dtype == jnp.bool_:
-            y = jax.lax.psum(jnp.where(m, x.astype(jnp.int32), 0), axis)
-            return y > 0
-        return jax.lax.psum(jnp.where(m, x, jnp.zeros((), x.dtype)), axis)
-
-    return World(
-        lp_kind=world.lp_kind,          # immutable after build
-        lp_agent=world.lp_agent,        # rewritten only by the scheduler (replicated input)
-        lp_res=world.lp_res,            # immutable after build
-        lp_state=owner_wins(world.lp_state, lp_mine),
-        lp_lvt=owner_wins(world.lp_lvt, lp_mine),
-        lp_ctx=world.lp_ctx,            # immutable after build
-        cpu_power=world.cpu_power,      # immutable after build
-        cpu_busy=owner_wins(world.cpu_busy, farm_mine),
-        cpu_mem=owner_wins(world.cpu_mem, farm_mine),
-        jobq=owner_wins(world.jobq, farm_mine),
-        jobq_n=owner_wins(world.jobq_n, farm_mine),
-        sto_flag=owner_wins(world.sto_flag, sto_mine),
-        link_bw=world.link_bw,          # immutable after build
-        link_lat=world.link_lat,        # immutable after build
-        flow_active=owner_wins(world.flow_active, net_mine),
-        flow_rem=owner_wins(world.flow_rem, net_mine),
-        flow_rate=owner_wins(world.flow_rate, net_mine),
-        flow_tlast=owner_wins(world.flow_tlast, net_mine),
-        flow_links=owner_wins(world.flow_links + 1, net_mine) - 1,  # -1 pad survives
-        flow_notify=owner_wins(world.flow_notify, net_mine),
-        net_gen=owner_wins(world.net_gen, net_mine),
-        sto_cap=world.sto_cap,          # immutable after build
-        sto_used=owner_wins(world.sto_used, sto_mine),
-        sto_rate=world.sto_rate,        # immutable after build
-        gen_interval=world.gen_interval,
-        gen_left=owner_wins(world.gen_left, gen_mine),
-        gen_target=world.gen_target,
-        gen_kind=world.gen_kind,
-        gen_payload=world.gen_payload,
-    )
+    return registry_of(world).sync_world(world, own, axis)
 
 
 # ---------------------------------------------------------------------------
@@ -188,69 +165,46 @@ def sync_world(world: World, own: WorldOwnership, axis: str | None) -> World:
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class ScenarioBuilder:
+class ScenarioBuilder(ScenarioBuilderBase):
     """Imperative builder mirroring the paper's "regional center" modeling style.
 
-    Regional centers (fig 1) are groupings of a farm + storage + a link to the WAN;
-    the builder exposes them as convenience wrappers over the basic components.
+    The generic machinery (``add_component`` + generated ``add_<component>``
+    methods + ``build``) comes from the registry; this subclass binds the
+    builtin model and keeps the ergonomic wrappers — list-based farm/net
+    signatures, regional centers (fig 1), and the generator's initial
+    GEN_TICK event.
     """
 
-    max_cpu: int = 16
-    queue_cap: int = 32
-    max_link: int = 8
-    max_flow: int = 64
+    _registry = BUILTIN
 
-    def __post_init__(self):
-        self._lps: list[dict] = []       # kind, res, ctx
-        self._farms: list[dict] = []
-        self._nets: list[dict] = []
-        self._stos: list[dict] = []
-        self._gens: list[dict] = []
-        self._events: list[dict] = []
-        self._seq = 0
+    def __init__(self, max_cpu: int = 16, queue_cap: int = 32,
+                 max_link: int = 8, max_flow: int = 64):
+        super().__init__(max_cpu=max_cpu, queue_cap=queue_cap,
+                         max_link=max_link, max_flow=max_flow)
 
     # --- basic components -------------------------------------------------
-    def _new_lp(self, kind: int, res: int, ctx: int) -> int:
-        self._lps.append(dict(kind=kind, res=res, ctx=ctx))
-        return len(self._lps) - 1
-
     def add_farm(self, cpu_powers, ctx: int = 0) -> int:
         assert len(cpu_powers) <= self.max_cpu
-        self._farms.append(dict(powers=list(cpu_powers)))
-        return self._new_lp(LPK_FARM, len(self._farms) - 1, ctx)
+        return self.add_component("farm", cpu_power=list(cpu_powers), ctx=ctx)
 
     def add_net_region(self, link_bws, link_lats, ctx: int = 0) -> int:
         assert len(link_bws) <= self.max_link
-        self._nets.append(dict(bws=list(link_bws), lats=list(link_lats)))
-        return self._new_lp(LPK_NET, len(self._nets) - 1, ctx)
-
-    def add_idle_lp(self, ctx: int = 0) -> int:
-        """A bare LP with no component row (LPK_IDLE): a NOOP event sink.
-
-        Used by dispatch benchmarks/tests that want many distinct destination
-        LPs without growing any component table, and as a placement target.
-        """
-        return self._new_lp(LPK_IDLE, 0, ctx)
+        return self.add_component("net", link_bw=list(link_bws),
+                                  link_lat=list(link_lats), ctx=ctx)
 
     def add_storage(self, disk_cap: float, tape_cap: float, tape_rate: float,
                     ctx: int = 0) -> int:
-        self._stos.append(dict(disk=disk_cap, tape=tape_cap, rate=tape_rate))
-        return self._new_lp(LPK_STORAGE, len(self._stos) - 1, ctx)
+        return self.add_component("sto", sto_cap=[disk_cap, tape_cap],
+                                  sto_rate=tape_rate, ctx=ctx)
 
-    def add_generator(self, target_lp: int, kind: int, payload, interval: int,
+    def add_generator(self, target_lp: int, kind, payload, interval: int,
                       count: int, start: int = 0, ctx: int = 0) -> int:
-        self._gens.append(dict(target=target_lp, kind=kind, payload=list(payload),
-                               interval=interval, count=count))
-        lp = self._new_lp(LPK_GEN, len(self._gens) - 1, ctx)
-        self.add_event(time=start, kind=ev.K_GEN_TICK, src=lp, dst=lp, ctx=ctx)
+        lp = self.add_component(
+            "gen", gen_interval=interval, gen_left=count,
+            gen_target=target_lp, gen_kind=getattr(kind, "id", kind),
+            gen_payload=list(payload), ctx=ctx)
+        self.add_event(time=start, kind=K_GEN_TICK, src=lp, dst=lp, ctx=ctx)
         return lp
-
-    def add_event(self, *, time: int, kind: int, src: int, dst: int, payload=(),
-                  ctx: int = 0):
-        self._events.append(dict(time=time, seq=self._seq, kind=kind, src=src,
-                                 dst=dst, payload=payload, ctx=ctx))
-        self._seq += 1
 
     # --- regional-center convenience (fig 1) -------------------------------
     def add_regional_center(self, n_cpu: int, cpu_power: float, disk: float,
@@ -258,122 +212,3 @@ class ScenarioBuilder:
         farm = self.add_farm([cpu_power] * n_cpu, ctx=ctx)
         sto = self.add_storage(disk, tape, tape_rate, ctx=ctx)
         return dict(farm=farm, storage=sto)
-
-    # --- build -------------------------------------------------------------
-    def build(self, *, n_agents: int = 1, n_ctx: int = 1, lookahead: int,
-              t_end: int, pool_cap: int = 1024, emit_cap: int | None = None,
-              route_cap: int | None = None, exec_cap: int | None = None,
-              placement=None, work_per_mb: float = 1.0,
-              batched_dispatch: bool = True, merge_mode: str = "delta"):
-        nlp = max(len(self._lps), 1)
-        nfarm = max(len(self._farms), 1)
-        nnet = max(len(self._nets), 1)
-        nsto = max(len(self._stos), 1)
-        ngen = max(len(self._gens), 1)
-
-        def arr(shape, dtype, fill=0):
-            return jnp.full(shape, fill, dtype)
-
-        lp_kind = jnp.asarray([l["kind"] for l in self._lps] or [0], jnp.int32)
-        lp_res = jnp.asarray([l["res"] for l in self._lps] or [0], jnp.int32)
-        lp_ctx = jnp.asarray([l["ctx"] for l in self._lps] or [0], jnp.int32)
-        if placement is None:
-            lp_agent = jnp.arange(nlp, dtype=jnp.int32) % n_agents
-        else:
-            lp_agent = jnp.asarray(placement, jnp.int32)
-
-        cpu_power = arr((nfarm, self.max_cpu), jnp.float32)
-        for i, f in enumerate(self._farms):
-            cpu_power = cpu_power.at[i, : len(f["powers"])].set(
-                jnp.asarray(f["powers"], jnp.float32))
-
-        link_bw = arr((nnet, self.max_link), jnp.float32)
-        link_lat = arr((nnet, self.max_link), jnp.int32)
-        for i, nre in enumerate(self._nets):
-            link_bw = link_bw.at[i, : len(nre["bws"])].set(
-                jnp.asarray(nre["bws"], jnp.float32))
-            link_lat = link_lat.at[i, : len(nre["lats"])].set(
-                jnp.asarray(nre["lats"], jnp.int32))
-
-        sto_cap = arr((nsto, 2), jnp.float32)
-        sto_rate = arr((nsto,), jnp.float32)
-        for i, s in enumerate(self._stos):
-            sto_cap = sto_cap.at[i].set(jnp.asarray([s["disk"], s["tape"]], jnp.float32))
-            sto_rate = sto_rate.at[i].set(s["rate"])
-
-        gen_interval = arr((ngen,), jnp.int32, 1)
-        gen_left = arr((ngen,), jnp.int32)
-        gen_target = arr((ngen,), jnp.int32)
-        gen_kind = arr((ngen,), jnp.int32)
-        gen_payload = arr((ngen, ev.PAYLOAD), jnp.float32)
-        for i, g in enumerate(self._gens):
-            gen_interval = gen_interval.at[i].set(g["interval"])
-            gen_left = gen_left.at[i].set(g["count"])
-            gen_target = gen_target.at[i].set(g["target"])
-            gen_kind = gen_kind.at[i].set(g["kind"])
-            pl = jnp.asarray(g["payload"], jnp.float32)
-            gen_payload = gen_payload.at[i, : pl.shape[0]].set(pl)
-
-        world = World(
-            lp_kind=lp_kind,
-            lp_agent=lp_agent,
-            lp_res=lp_res,
-            lp_state=jnp.full((nlp,), LPS_READY, jnp.int32),
-            lp_lvt=jnp.zeros((nlp,), jnp.int32),
-            lp_ctx=lp_ctx,
-            cpu_power=cpu_power,
-            cpu_busy=arr((nfarm, self.max_cpu), jnp.int32),
-            cpu_mem=arr((nfarm, self.max_cpu), jnp.float32),
-            jobq=arr((nfarm, self.queue_cap, 6), jnp.float32),
-            jobq_n=arr((nfarm,), jnp.int32),
-            link_bw=link_bw,
-            link_lat=link_lat,
-            flow_active=jnp.zeros((nnet, self.max_flow), bool),
-            flow_rem=arr((nnet, self.max_flow), jnp.float32),
-            flow_rate=arr((nnet, self.max_flow), jnp.float32),
-            flow_tlast=arr((nnet, self.max_flow), jnp.int32),
-            flow_links=arr((nnet, self.max_flow, MAXHOP), jnp.int32, -1),
-            flow_notify=arr((nnet, self.max_flow, 6), jnp.float32),
-            net_gen=arr((nnet,), jnp.int32),
-            sto_cap=sto_cap,
-            sto_used=arr((nsto, 2), jnp.float32),
-            sto_rate=sto_rate,
-            sto_flag=arr((nsto,), jnp.int32),
-            gen_interval=gen_interval,
-            gen_left=gen_left,
-            gen_target=gen_target,
-            gen_kind=gen_kind,
-            gen_payload=gen_payload,
-        )
-
-        def inverse_map(kind, n):
-            out = [0] * n
-            for lp, l in enumerate(self._lps):
-                if l["kind"] == kind:
-                    out[l["res"]] = lp
-            return jnp.asarray(out, jnp.int32)
-
-        own = WorldOwnership(
-            farm_lp=inverse_map(LPK_FARM, nfarm),
-            net_lp=inverse_map(LPK_NET, nnet),
-            sto_lp=inverse_map(LPK_STORAGE, nsto),
-            gen_lp=inverse_map(LPK_GEN, ngen),
-        )
-
-        spec = ScenarioSpec(
-            n_agents=n_agents,
-            n_ctx=n_ctx,
-            lookahead=lookahead,
-            t_end=t_end,
-            pool_cap=pool_cap,
-            emit_cap=emit_cap or pool_cap,
-            route_cap=route_cap or max(pool_cap // max(n_agents, 1), 16),
-            exec_cap=max(exec_cap if exec_cap is not None
-                         else min(pool_cap, 256), 1),
-            n_lp=nlp,
-            work_per_mb=work_per_mb,
-            batched_dispatch=batched_dispatch,
-            merge_mode=merge_mode,
-        )
-        init_events = ev.batch_from_rows(self._events)
-        return world, own, init_events, spec

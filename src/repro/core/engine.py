@@ -61,9 +61,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import events as ev
 from repro.core import monitoring as mon
 from repro.core import sync
-from repro.core.components import ScenarioSpec, World, WorldOwnership, sync_world
+from repro.core.components import ScenarioSpec, World, WorldOwnership
 from repro.core.handlers import (Ev, apply_handler, apply_handler_batch,
-                                 apply_handler_batch_dense, make_handlers)
+                                 apply_handler_batch_dense)
+from repro.core.registry import registry_of
 
 AXIS = "agents"
 
@@ -134,6 +135,10 @@ class Engine:
         self.init_events = init_events
         self.spec = spec
         self.trace_cap = trace_cap
+        # the registry that generated this world's model: the source of the
+        # dispatch table, the kind->table map, and the sync/delta schemas —
+        # extended models (BUILTIN.extend()) plug in with zero engine edits
+        self.registry = registry_of(world)
         # select_fn(time_key, seq, exec_cap) -> (exec_cap,) distinct pool-slot
         # indices: the prefix of the stable (time, seq) sort. Hook point for the
         # Pallas kernel (kernels.ops.select_events); default is the XLA lexsort.
@@ -141,15 +146,16 @@ class Engine:
         # group_fn(kind, active) -> (order, rank, counts): same-kind grouping
         # for the batched dispatch. Hook point for the Pallas segment-rank
         # kernel (kernels.ops.group_by_kind); default is the XLA argsort.
-        self.group_fn = group_fn or group_by_kind_xla
+        self.group_fn = group_fn or functools.partial(
+            group_by_kind_xla, n_kinds=self.registry.n_kinds)
         if spec.merge_mode not in ("delta", "dense"):
             raise ValueError(
                 f"spec.merge_mode must be 'delta' or 'dense', got "
                 f"{spec.merge_mode!r}")
-        self.table = make_handlers(spec.lookahead, spec.work_per_mb)
+        self.table = self.registry.make_handlers(spec.lookahead,
+                                                 spec.work_per_mb)
         # widest resource table: bound for the conflict-detection key space
-        self._n_res = max(world.cpu_power.shape[0], world.link_bw.shape[0],
-                          world.sto_cap.shape[0], world.gen_interval.shape[0])
+        self._n_res = self.registry.max_rows(world)
         # jitted-driver cache: run_local/step_local build a fresh closure per
         # call, which would otherwise defeat jax.jit's function-identity cache
         # and recompile the whole superstep on every invocation
@@ -230,8 +236,8 @@ class Engine:
         # 5-6. route + insert
         pool, counters = self._route_and_insert(world, pool, counters, emits, axis)
 
-        # 7. replicated-state sync (C4)
-        world = sync_world(world, self.own, axis)
+        # 7. replicated-state sync (C4) — field lists generated by the registry
+        world = self.registry.sync_world(world, self.own, axis)
 
         return EngineState(world=world, pool=pool, counters=counters,
                            t_now=jnp.max(horizon), done=done,
@@ -285,11 +291,16 @@ class Engine:
             counters = mon.bump(counters, mon.C_DROP_POOL,
                                 jnp.sum((val & ~ok).astype(jnp.int32)))
 
-            # trace (fixed cap; for oracle-equivalence tests)
+            # trace (fixed cap; for oracle-equivalence tests). Overflow is
+            # counted (C_TRACE_DROP), never silent — merged_engine_trace
+            # refuses to return a truncated trace.
             tcap = trace.shape[0]
             trow = jnp.stack([e.time, e.seq, e.kind, e.dst])
             tidx = jnp.where(is_safe & (trace_n < tcap), trace_n, tcap)
             trace = trace.at[tidx].set(trow, mode="drop")
+            if self.trace_cap > 0:
+                counters = mon.bump(counters, mon.C_TRACE_DROP,
+                                    jnp.where(is_safe & (trace_n >= tcap), 1, 0))
             trace_n = trace_n + jnp.where(is_safe, 1, 0)
             return (world, counters, emits, emit_n, trace, trace_n), None
 
@@ -314,10 +325,11 @@ class Engine:
 
         # conflict detection on the delta contract's declared rows: two safe
         # slots collide iff they address the same (component table, lp_res row)
-        table_id = jnp.asarray(ev.KIND_TABLE, jnp.int32)[
-            jnp.clip(cand.kind, 0, ev.N_KINDS - 1)]
+        table_id = jnp.asarray(self.registry.kind_table, jnp.int32)[
+            jnp.clip(cand.kind, 0, self.registry.n_kinds - 1)]
         res = world.lp_res[jnp.clip(cand.dst, 0, spec.n_lp - 1)]
-        dirty = sync.conflict_mask(exec_safe, table_id, res, n_res=self._n_res)
+        dirty = sync.conflict_mask(exec_safe, table_id, res, n_res=self._n_res,
+                                   n_tables=self.registry.n_tables)
         clean = exec_safe & ~dirty
 
         # batched phase: group the clean rows by kind, dispatch once. The
@@ -388,13 +400,18 @@ class Engine:
         _, world, counters, emit_mat = jax.lax.while_loop(
             cond, body, (jnp.int32(0), world, counters, emit_mat))
 
-        # trace in (time, seq) window order — independent of execution order
+        # trace in (time, seq) window order — independent of execution order.
+        # Overflow is counted (C_TRACE_DROP), never silent.
         tcap = trace.shape[0]
         offs = jnp.cumsum(exec_safe.astype(jnp.int32)) - 1
         tpos = trace_n + offs
         tidx = jnp.where(exec_safe & (tpos < tcap), tpos, tcap)
         rows4 = jnp.stack([cand.time, cand.seq, cand.kind, cand.dst], axis=1)
         trace = trace.at[tidx].set(rows4, mode="drop")
+        if self.trace_cap > 0:
+            counters = mon.bump(
+                counters, mon.C_TRACE_DROP,
+                jnp.sum((exec_safe & (tpos >= tcap)).astype(jnp.int32)))
         trace_n = trace_n + jnp.sum(exec_safe.astype(jnp.int32))
 
         # segmented emit merge: flatten the per-slot matrix row-major (== the

@@ -17,41 +17,37 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import registry as _registry
+
 # Sentinel timestamp for empty slots: larger than any reachable simulation time.
 T_INF = jnp.int32(2**31 - 1)
 
-# Payload width: enough scalars for the richest handler (flow start: size, route...).
-PAYLOAD = 8
+# Payload width (single source of truth: registry.PAYLOAD).
+PAYLOAD = _registry.PAYLOAD
 
 # Max events a single handler invocation may emit (paper: a job may spawn a new LP
 # *and* schedule follow-up events; 4 covers every component model in this repo).
 MAX_EMIT = 4
 
-# Event kinds (handler dispatch table indices — must match engine.HANDLERS order).
-K_NOOP = 0
-K_FLOW_START = 1
-K_FLOW_END = 2
-K_JOB_SUBMIT = 3
-K_JOB_END = 4
-K_DATA_WRITE = 5
-K_MIGRATE = 6
-K_GEN_TICK = 7
-N_KINDS = 8
+# Event-kind ids (K_*), the kind -> component-table map (KIND_TABLE) the
+# conflict mask keys on, and the table ids (TBL_*) are *generated* by the
+# builtin registry from the declarative model in components.py; this module
+# keeps the historical ``events.K_FLOW_START`` spelling as lazy aliases.
+# Extended registries (e.g. repro/scenarios/cache.py) carry their own kind
+# table — the engine reads it from the registry, never from this module.
+_MODEL_ATTRS = (
+    "K_NOOP", "K_FLOW_START", "K_FLOW_END", "K_JOB_SUBMIT", "K_JOB_END",
+    "K_DATA_WRITE", "K_MIGRATE", "K_GEN_TICK", "N_KINDS", "KIND_TABLE",
+    "TBL_NONE", "TBL_FARM", "TBL_NET", "TBL_STORAGE", "TBL_GEN", "N_TABLES",
+)
 
-# Component table each kind's handler reads/writes: 0 = none, 1 = farm,
-# 2 = net region, 3 = storage, 4 = generator. Indexed by kind. This is the
-# table half of the delta contract's declared row (handlers.py): kind k's
-# handler touches exactly row lp_res[dst] of table KIND_TABLE[k], which is
-# what sync.conflict_mask keys on for the batched dispatch — so this map must
-# stay in sync with the WorldDelta each handler body returns.
-TBL_NONE = 0
-TBL_FARM = 1
-TBL_NET = 2
-TBL_STORAGE = 3
-TBL_GEN = 4
-N_TABLES = 5
-KIND_TABLE = (TBL_NONE, TBL_NET, TBL_NET, TBL_FARM, TBL_FARM,
-              TBL_STORAGE, TBL_STORAGE, TBL_GEN)
+
+def __getattr__(name: str):
+    if name in _MODEL_ATTRS:
+        from repro.core import components as _components
+        return getattr(_components, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 SEQ_MASK = 2**31 - 1
 

@@ -37,7 +37,11 @@ C_EXEC_SPILL = 18     # safe events deferred past exec_cap to the next window
 C_BATCH_EXEC = 19     # events executed through the grouped vectorized dispatch
 C_BATCH_FALLBACK = 20  # conflicted events executed via the sequential fallback
 C_BATCH_ROWS = 21     # component-table rows scattered by the batched merge
-N_COUNTERS = 22
+C_TRACE_DROP = 22     # trace records lost to the fixed-cap trace buffer; any
+                      # nonzero value makes trace-based oracle comparisons
+                      # invalid, so oracle.merged_engine_trace refuses to
+                      # return a truncated trace (fails loudly instead)
+N_COUNTERS = 23
 
 DROP_COUNTERS = (C_DROP_POOL, C_DROP_ROUTE, C_DROP_FLOW, C_DROP_QUEUE)
 

@@ -18,13 +18,18 @@ import numpy as np
 from repro.core import events as ev
 from repro.core import monitoring as mon
 from repro.core.components import ScenarioSpec, World, WorldOwnership
-from repro.core.handlers import Ev, apply_handler, make_handlers
+from repro.core.handlers import Ev, apply_handler
+from repro.core.registry import registry_of
 
 
 def run_sequential(world: World, own: WorldOwnership, init_events: ev.EventBatch,
                    spec: ScenarioSpec, max_events: int = 100_000):
-    """Returns (final_world, counters, trace) with trace = [(time, seq, kind, dst)]."""
-    table = make_handlers(spec.lookahead, spec.work_per_mb)
+    """Returns (final_world, counters, trace) with trace = [(time, seq, kind, dst)].
+
+    The dispatch table comes from the world's own registry, so models defined
+    outside core (``BUILTIN.extend()``) get their sequential reference for free.
+    """
+    table = registry_of(world).make_handlers(spec.lookahead, spec.work_per_mb)
 
     @jax.jit
     def apply(w, c, e):
@@ -84,10 +89,22 @@ def merged_engine_trace(trace: np.ndarray, trace_n: np.ndarray):
     """Merge per-agent engine traces into global (time, seq) order.
 
     trace: (A, cap, 4) int32, trace_n: (A,). Returns [(time, seq, kind, dst)].
+
+    Refuses to return a *truncated* trace: an agent whose ``trace_n`` exceeds
+    the buffer cap overflowed it (counted by ``C_TRACE_DROP``), and comparing
+    the surviving prefix against an oracle would silently pass on divergence
+    beyond the cap. Raise instead — size ``trace_cap`` to the scenario.
     """
     rows = []
     trace = np.asarray(trace)
     trace_n = np.asarray(trace_n)
+    over = [(a, int(trace_n[a])) for a in range(trace.shape[0])
+            if int(trace_n[a]) > trace.shape[1]]
+    if over:
+        raise RuntimeError(
+            f"trace buffer overflowed (cap={trace.shape[1]}): per-agent "
+            f"(agent, events) {over}; C_TRACE_DROP counts the lost records — "
+            "raise Engine(trace_cap=...) to cover the scenario")
     for a in range(trace.shape[0]):
         k = int(trace_n[a])
         for i in range(min(k, trace.shape[1])):

@@ -82,7 +82,7 @@ def _dup_mask(key: jax.Array, active: jax.Array, n_keys: int) -> jax.Array:
 
 
 def conflict_mask(safe: jax.Array, table_id: jax.Array, res: jax.Array, *,
-                  n_res: int) -> jax.Array:
+                  n_res: int, n_tables: int | None = None) -> jax.Array:
     """Rows of a window whose handler writes may overlap another safe row's.
 
     Keys on *exactly the rows the delta contract declares* (handlers.py): the
@@ -102,9 +102,11 @@ def conflict_mask(safe: jax.Array, table_id: jax.Array, res: jax.Array, *,
     per-row segment-scatter merge is byte-identical to the sequential fold.
     Conflicted rows take the engine's compacted sequential fallback.
     """
+    if n_tables is None:
+        n_tables = ev.N_TABLES   # the builtin model's table count
     rkey = table_id * jnp.int32(n_res) + res
     comp = safe & (table_id > 0)
-    return safe & _dup_mask(rkey, comp, ev.N_TABLES * n_res)
+    return safe & _dup_mask(rkey, comp, n_tables * n_res)
 
 
 def exec_selection(safe: jax.Array, exec_idx: jax.Array):

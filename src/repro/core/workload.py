@@ -16,6 +16,10 @@ Scenario per pod p:
           show up as longer simulated step times, exactly the effects the
           scheduler (C3) is meant to absorb.
 
+Payloads are packed through the registry's named ``PayloadSpec`` views
+(``JOB_SUBMIT.pack(work=..., ...)``) instead of positional index lists — the
+field names and defaults live with the kind declarations in ``components.py``.
+
 ``simulate_training`` returns the simulated seconds/step to compare against the
 analytic roofline estimate (EXPERIMENTS.md §Dry-run cross-check).
 """
@@ -26,10 +30,10 @@ import dataclasses
 import jax
 import numpy as np
 
-from repro.core import events as ev
-from repro.core.components import ScenarioBuilder
-from repro.core.engine import Engine
 from repro.core import monitoring as mon
+from repro.core.components import (FLOW_START, JOB_SUBMIT, K_FLOW_START,
+                                   K_JOB_SUBMIT, ScenarioBuilder)
+from repro.core.engine import Engine
 
 TICK = 1e-6            # 1 tick = 1 us simulated
 
@@ -45,35 +49,6 @@ class CellModel:
     slow_pod_factor: float = 1.0   # >1: one pod is a straggler
 
 
-def build_training_scenario(cell: CellModel, *, n_agents: int = 1):
-    b = ScenarioBuilder(max_cpu=4, queue_cap=16, max_link=4,
-                        max_flow=max(16, 2 * cell.n_pods))
-    t_comp_ticks = max(int(cell.t_compute_s / TICK), 10)
-    power = 1.0                      # 1 op/tick; job work = duration
-    farms = []
-    for p in range(cell.n_pods):
-        f = b.add_farm([power])
-        farms.append(f)
-    # DCN: one shared region; one link per pod (bandwidth in MB/tick)
-    mb_per_tick = cell.dcn_gbps * 1e3 * TICK
-    wan = b.add_net_region(link_bws=[mb_per_tick] * cell.n_pods,
-                           link_lats=[50] * cell.n_pods)
-    sink = b.add_storage(disk_cap=1e9, tape_cap=1e9, tape_rate=1e6)
-
-    grad_mb = cell.dcn_bytes_per_pod / 1e6
-    for p, f in enumerate(farms):
-        work = t_comp_ticks * (cell.slow_pod_factor if p == 0 else 1.0)
-        # chain: JOB_SUBMIT -> JOB_END -> (notify) FLOW_START -> (notify)
-        # JOB_SUBMIT(next step). The flow notify re-submits on the same farm.
-        for step in range(cell.n_steps):
-            if step == 0:
-                b.add_event(time=1, kind=ev.K_JOB_SUBMIT, src=f, dst=f,
-                            payload=[work, 1.0, wan, ev.K_FLOW_START, grad_mb])
-        # the flow payload: [size, l0,..] is built by JOB_END's notification,
-        # which forwards only [size]; model one step per generator instead:
-    return b, farms, wan, sink, t_comp_ticks
-
-
 def simulate_training(cell: CellModel, *, n_agents: int = 1,
                       max_windows: int = 200_000) -> dict:
     """Chained step simulation; returns simulated step time + counters."""
@@ -87,14 +62,15 @@ def simulate_training(cell: CellModel, *, n_agents: int = 1,
     wan = b.add_net_region(link_bws=[mb_per_tick] * cell.n_pods,
                            link_lats=[50] * cell.n_pods)
 
-    # per pod: generator drives n_steps jobs; each job's completion starts the
-    # gradient flow; flow completion submits the next job (notify chain).
+    # per pod: the step-0 compute job; its completion notifies the WAN region
+    # (size-only forward — see below). Named packing replaces the old
+    # positional [work, mem, notify_lp, notify_kind, size] list.
     for p, f in enumerate(farms):
         work = t_comp_ticks * (cell.slow_pod_factor if p == 0 else 1.0)
-        # FLOW_START payload: [size, l0, l1, l2, nlp, nkind, n2lp, n2kind]
-        # JOB_SUBMIT payload: [work, mem, notify_lp, notify_kind, size]
-        b.add_event(time=1, kind=ev.K_JOB_SUBMIT, src=f, dst=f,
-                    payload=[work, 1.0, wan, ev.K_FLOW_START, grad_mb])
+        b.add_event(time=1, kind=K_JOB_SUBMIT, src=f, dst=f,
+                    payload=JOB_SUBMIT.pack(work=work, mem=1.0, notify_lp=wan,
+                                            notify_kind=K_FLOW_START,
+                                            size=grad_mb))
     # NOTE: JOB_END forwards [size] only into the notification payload — the
     # WAN handler needs the full route/notify payload, so generators per pod
     # drive the repeating steps instead of a deep notify chain:
@@ -103,9 +79,10 @@ def simulate_training(cell: CellModel, *, n_agents: int = 1,
     for p, f in enumerate(farms):
         work = t_comp_ticks * (cell.slow_pod_factor if p == 0 else 1.0)
         step_ticks = int(work + grad_mb / mb_per_tick + 120)
-        b.add_generator(target_lp=wan, kind=ev.K_FLOW_START,
-                        payload=[grad_mb, p, -1, -1, f, ev.K_JOB_SUBMIT,
-                                 -1, 0],
+        b.add_generator(target_lp=wan, kind=K_FLOW_START,
+                        payload=FLOW_START.pack(size=grad_mb, l0=p,
+                                                notify_lp=f,
+                                                notify_kind=K_JOB_SUBMIT),
                         interval=step_ticks, count=cell.n_steps,
                         start=int(work))
 

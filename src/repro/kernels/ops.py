@@ -59,9 +59,15 @@ def select_events(time_key, seq, exec_cap):
 
 
 @functools.partial(jax.jit, static_argnames=("n_kinds",))
-def group_by_kind(kind, active, n_kinds=8):
+def group_by_kind(kind, active, n_kinds):
     """(CAP,) kinds + active mask -> (order, rank, counts). Engine group_fn
-    hook for batched same-kind dispatch (segment-rank Pallas kernel)."""
+    hook for batched same-kind dispatch (segment-rank Pallas kernel).
+
+    ``n_kinds`` is the model's kind count — registry-dependent since PR 4, so
+    it must come from the scenario: bind it with
+    ``functools.partial(ops.group_by_kind, n_kinds=engine.registry.n_kinds)``
+    when wiring the hook.
+    """
     return _es.group_by_kind(kind, active, n_kinds, interpret=_interpret())
 
 

@@ -17,9 +17,9 @@ import numpy as np
 
 
 def run_t0t1(args):
-    import jax
-    from repro.core import Engine, ScenarioBuilder, events as ev
+    from repro.core import Engine, ScenarioBuilder
     from repro.core import monitoring as mon
+    from repro.core.components import DATA_WRITE, FLOW_START, JOB_SUBMIT
 
     for bw in args.bandwidths:
         b = ScenarioBuilder(max_cpu=4, queue_cap=16, max_link=4, max_flow=32)
@@ -28,10 +28,12 @@ def run_t0t1(args):
         t1 = b.add_regional_center(n_cpu=2, cpu_power=8.0, disk=2000.0,
                                    tape=20000.0, tape_rate=5.0)
         wan = b.add_net_region(link_bws=[bw, bw], link_lats=[5, 5])
-        b.add_generator(target_lp=wan, kind=ev.K_FLOW_START,
-                        payload=[40.0, 0, -1, -1, t1["farm"],
-                                 ev.K_JOB_SUBMIT, t1["storage"],
-                                 ev.K_DATA_WRITE],
+        b.add_generator(target_lp=wan, kind=FLOW_START,
+                        payload=FLOW_START.pack(
+                            size=40.0, l0=0, notify_lp=t1["farm"],
+                            notify_kind=JOB_SUBMIT.id,
+                            notify2_lp=t1["storage"],
+                            notify2_kind=DATA_WRITE.id),
                         interval=15, count=args.flows)
         world, own, init_ev, spec = b.build(
             n_agents=args.agents, lookahead=2, t_end=100_000, pool_cap=1024,
@@ -70,8 +72,9 @@ def run_distributed(args):
                           "--xla_force_host_platform_device_count=8")
     import jax
     from jax.sharding import Mesh
-    from repro.core import Engine, ScenarioBuilder, events as ev
+    from repro.core import Engine, ScenarioBuilder
     from repro.core import monitoring as mon
+    from repro.core.components import DATA_WRITE, FLOW_START, JOB_SUBMIT
 
     n = min(len(jax.devices()), 8)
     b = ScenarioBuilder(max_cpu=4, queue_cap=16, max_link=4, max_flow=32)
@@ -80,9 +83,11 @@ def run_distributed(args):
     t1 = b.add_regional_center(n_cpu=2, cpu_power=8.0, disk=2000.0,
                                tape=20000.0, tape_rate=5.0)
     wan = b.add_net_region(link_bws=[0.5, 0.5], link_lats=[5, 5])
-    b.add_generator(target_lp=wan, kind=ev.K_FLOW_START,
-                    payload=[40.0, 0, -1, -1, t1["farm"], ev.K_JOB_SUBMIT,
-                             t1["storage"], ev.K_DATA_WRITE],
+    b.add_generator(target_lp=wan, kind=FLOW_START,
+                    payload=FLOW_START.pack(
+                        size=40.0, l0=0, notify_lp=t1["farm"],
+                        notify_kind=JOB_SUBMIT.id, notify2_lp=t1["storage"],
+                        notify2_kind=DATA_WRITE.id),
                     interval=15, count=24)
     world, own, init_ev, spec = b.build(n_agents=n, lookahead=2,
                                         t_end=100_000, pool_cap=512,

@@ -1,0 +1,12 @@
+"""repro.scenarios — simulation models defined *outside* the engine core.
+
+Each module here extends the builtin registry (``BUILTIN.extend()``) with new
+components, event kinds, and handlers — the scenario-authoring seam described
+in docs/scenario_api.md. Nothing in this package edits ``repro.core``
+internals; the engine, the conflict mask, the owner-wins sync, and the
+sequential oracle pick the extended model up from the generated ``World``
+type automatically.
+"""
+from repro.scenarios import cache
+
+__all__ = ["cache"]

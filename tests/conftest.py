@@ -1,16 +1,16 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 device; only the
 dry-run (and the subprocess tests that exec it) get placeholder devices."""
-import jax
-import numpy as np
 import pytest
 
-from repro.core import Engine, ScenarioBuilder, events as ev
+from repro.core import ScenarioBuilder
 
 
 def t0t1_builder(*, wan_bw=2.0, n_flows=12, interval=25, flow_mb=40.0,
                  lookahead=2):
     """The paper's T0/T1 replication study, small: production at T0 generates
     WAN transfers; arrival triggers analysis jobs at T1; results hit storage."""
+    from repro.core.components import DATA_WRITE, FLOW_START, JOB_SUBMIT
+
     b = ScenarioBuilder(max_cpu=4, queue_cap=8, max_link=4, max_flow=16)
     t0 = b.add_regional_center(n_cpu=2, cpu_power=10.0, disk=500.0, tape=5000.0,
                                tape_rate=5.0)
@@ -18,9 +18,11 @@ def t0t1_builder(*, wan_bw=2.0, n_flows=12, interval=25, flow_mb=40.0,
                                tape_rate=5.0)
     wan = b.add_net_region(link_bws=[wan_bw, wan_bw], link_lats=[5, 5])
     b.add_generator(
-        target_lp=wan, kind=ev.K_FLOW_START,
-        payload=[flow_mb, 0, -1, -1, t1["farm"], ev.K_JOB_SUBMIT,
-                 t1["storage"], ev.K_DATA_WRITE],
+        target_lp=wan, kind=FLOW_START,
+        payload=FLOW_START.pack(size=flow_mb, l0=0, notify_lp=t1["farm"],
+                                notify_kind=JOB_SUBMIT.id,
+                                notify2_lp=t1["storage"],
+                                notify2_kind=DATA_WRITE.id),
         interval=interval, count=n_flows, start=0)
     return b, dict(lookahead=lookahead, t_end=5000, pool_cap=256,
                    work_per_mb=2.0)

@@ -140,7 +140,7 @@ def test_group_by_kind_ops_wrapper():
     ks = jax.random.split(jax.random.PRNGKey(7), 2)
     kind = jax.random.randint(ks[0], (128,), 0, ev.N_KINDS)
     active = jax.random.bernoulli(ks[1], 0.6, (128,))
-    got = ops.group_by_kind(kind, active)
+    got = ops.group_by_kind(kind, active, n_kinds=ev.N_KINDS)
     want = ref.group_by_kind_ref(kind, active, ev.N_KINDS)
     for g, w in zip(got, want):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))

@@ -1,0 +1,97 @@
+"""API drift gate: the registry must stay the single source of the engine tables.
+
+Usage: PYTHONPATH=src python tools/check_api.py   (exit 1 on drift)
+
+Rebuilds the builtin model on a *fresh* registry (``register_builtin_model`` +
+``register_builtin_handlers`` — the same declarations core itself runs) and
+fails when anything ``repro.core`` exports diverges from the regenerated
+schema: ``DELTA_SCHEMA``, ``KIND_TABLE``, the ``World``/``WorldDelta``/
+``WorldOwnership`` field layouts, the owner-wins sync field lists, the kind
+ids, or handler coverage. Catches hand-edits that bypass the declarative API
+(the pre-PR 4 failure mode: six files to keep in sync by eye). Also checks
+that ``repro.core.__all__`` — the supported public surface — resolves.
+
+Wired into the CI lint and docs jobs; mirrored by ``tests/test_registry.py``.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def check() -> list[str]:
+    import repro.core as core
+    from repro.core import __all__ as public
+    from repro.core import components, events, handlers
+    from repro.core.registry import Registry
+
+    fresh = Registry()
+    components.register_builtin_model(fresh)
+    handlers.register_builtin_handlers(fresh)
+
+    errors: list[str] = []
+
+    def expect(name: str, got, want):
+        if got != want:
+            errors.append(
+                f"{name} drifted:\n  exported: {got}\n  regenerated: {want}"
+            )
+
+    expect("events.KIND_TABLE", tuple(events.KIND_TABLE), fresh.kind_table)
+    expect("events.N_KINDS", events.N_KINDS, fresh.n_kinds)
+    expect("events.N_TABLES", events.N_TABLES, fresh.n_tables)
+    expect("handlers.DELTA_SCHEMA", handlers.DELTA_SCHEMA, fresh.delta_schema)
+    expect("handlers.ROW_FIELDS", tuple(handlers.ROW_FIELDS), fresh.row_fields)
+    expect("World fields", components.World._fields, fresh.world_struct()._fields)
+    expect(
+        "WorldDelta fields",
+        handlers.WorldDelta._fields,
+        fresh.delta_struct()._fields,
+    )
+    expect(
+        "WorldOwnership fields",
+        components.WorldOwnership._fields,
+        fresh.ownership_struct()._fields,
+    )
+    expect(
+        "sync field lists (owner-wins plan)",
+        components.BUILTIN.sync_plan(),
+        fresh.sync_plan(),
+    )
+    kind_ids = {k.name: k.id for k in components.BUILTIN.kinds}
+    expect("kind ids", {k.name: k.id for k in fresh.kinds}, kind_ids)
+    for name, kid in kind_ids.items():
+        exported = getattr(events, f"K_{name}")
+        if exported != kid:
+            errors.append(f"events.K_{name} == {exported}, registry says {kid}")
+
+    # handler coverage: every kind dispatches (raises RegistryError if not)
+    try:
+        fresh.make_handlers(lookahead=1)
+    except Exception as e:  # noqa: BLE001
+        errors.append(f"regenerated dispatch table failed: {e}")
+
+    # the declared public surface must resolve
+    missing = [n for n in public if not hasattr(core, n)]
+    if missing:
+        errors.append(f"repro.core.__all__ names missing attributes: {missing}")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    for e in errors:
+        print(f"FAIL: {e}")
+    if errors:
+        print(
+            f"{len(errors)} API drift error(s); regenerate exports from "
+            "the registry (see docs/scenario_api.md)"
+        )
+        return 1
+    print("OK: registry and core exports agree (no schema drift)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, "src")
+    sys.exit(main())
