@@ -17,10 +17,16 @@
   wide_component   — engine step 4: per-row delta scatter vs the PR 2
                      whole-table merge on wide component tables (64-CPU farms;
                      merge cost isolated: conflict-free JOB_SUBMIT windows)
+  insert_churn     — PR 5 pool lifecycle: free-list ring insert/release vs the
+                     retained insert_ref O(pool_cap) scan (gated subsystem
+                     ratio + informational end-to-end engine ratio)
+  adaptive_exec    — PR 5 monitoring-driven exec width: ladder policy vs the
+                     static exec_cap=256 default on spill-heavy windows
+                     (fewer windows, same events, oracle-exact)
   cache_churn      — PR 4 registry seam: the replica-cache component defined
                      entirely outside core (repro/scenarios/cache.py) running
                      through the registry-generated batched dispatch
-                     (trajectory record, no regression gate yet)
+                     (gated since PR 5)
   kernels          — µs/call for each Pallas kernel's XLA reference path
   workload_sim     — DESIGN.md §2: DES-predicted step time vs analytic roofline
 
@@ -356,6 +362,154 @@ def bench_wide_component(pool_caps=(4096,), width=256, n_cpu=64, lookahead=4):
              f"speedup={rates['delta'] / rates['dense']:.2f}x")
 
 
+def bench_insert_churn(pool_caps=(4096,), burst=256, iters=64, width=256,
+                       n_ticks=8, lookahead=4):
+    """Pool-lifecycle churn: the free-list ring vs the retained insert_ref scan.
+
+    The gated metric isolates the subsystem the ring replaced: a jitted loop
+    of the per-window lifecycle cycle — release the previous burst's slots,
+    insert a dense ``burst``-row emit batch — over a half-resident pool at
+    ``pool_cap``. The ring path does O(burst) work per cycle; the scan path
+    pays the O(pool_cap) free-rank cumsum + rank->slot scatter (insert) and
+    the pool-wide mask (release) every cycle, exactly as the PR 1-4 engine
+    did. events/s ratio, machine-normalized (both sides in one process).
+
+    The same row also reports the *end-to-end* engine ratio on an emit-heavy
+    dense generator scenario (``engine_speedup``, informational): there the
+    common per-window costs — the (time, seq) selection sort above all —
+    dilute the lifecycle win, which is exactly why the gate pins the
+    subsystem, not the whole window.
+    """
+    for pool_cap in pool_caps:
+        resident = pool_cap // 2
+        pool0 = ev.empty_pool(pool_cap)
+        rows = [dict(time=100_000 + i, seq=i, kind=0, src=0, dst=0)
+                for i in range(resident)]
+        pool0, _ = ev.insert(pool0, ev.batch_from_rows(rows))
+        batch = ev.batch_from_rows(
+            [dict(time=50_000 + i, seq=4096 + i, kind=0, src=0, dst=0)
+             for i in range(burst)])
+        ones = jnp.ones((burst,), bool)
+
+        @jax.jit
+        def churn_ring(pool):
+            def body(_, pool):
+                slots = pool.free_ring[
+                    (pool.free_head + jnp.arange(burst, dtype=jnp.int32))
+                    % pool_cap]
+                pool, _ = ev.insert(pool, batch)
+                return ev.release(pool, slots, ones)
+            return jax.lax.fori_loop(0, iters, body, pool)
+
+        @jax.jit
+        def churn_ref(pool):
+            def body(_, pool):
+                before = pool.valid
+                pool, _ = ev.insert_ref(pool, batch)
+                return ev.pop_mask_ref(pool, pool.valid & ~before)
+            return jax.lax.fori_loop(0, iters, body, pool)
+
+        rates = {}
+        for label, fn in (("ring", churn_ring), ("ref", churn_ref)):
+            out = fn(pool0)
+            jax.block_until_ready(out.valid)              # compile
+            assert int(np.asarray(out.free_count)) == pool_cap - resident
+            t0 = time.perf_counter()
+            out = fn(pool0)
+            jax.block_until_ready(out.valid)
+            rates[label] = iters * burst / (time.perf_counter() - t0)
+
+        # end-to-end engine context: width generators, each window inserting
+        # ~2*width emits (activity + next tick) — emit-heavy dense windows
+        def build_engine(insert_mode):
+            b = ScenarioBuilder(max_cpu=1, queue_cap=2, max_link=1, max_flow=2)
+            for _ in range(width):
+                lp = b.add_idle_lp()
+                b.add_generator(target_lp=lp, kind=ev.K_NOOP, payload=[],
+                                interval=lookahead, count=n_ticks)
+            return b.build(n_agents=1, lookahead=lookahead,
+                           t_end=lookahead * (n_ticks + 3) + 2,
+                           pool_cap=pool_cap, emit_cap=2 * width + 8,
+                           exec_cap=2 * width, insert_mode=insert_mode)
+
+        erates = {}
+        for mode in ("ring", "ref"):
+            world, own, init_ev, spec = build_engine(mode)
+            eng = Engine(world, own, init_ev, spec)
+            jax.block_until_ready(eng.run_local().counters)   # compile
+            t0 = time.perf_counter()
+            st = eng.run_local()
+            jax.block_until_ready(st.counters)
+            dt = time.perf_counter() - t0
+            n = int(np.asarray(st.counters)[0, mon.C_EVENTS])
+            assert n == 2 * width * n_ticks, (n, 2 * width * n_ticks)
+            erates[mode] = n / dt
+
+        emit(f"insert_churn_p{pool_cap}", 1e6 / rates["ring"],
+             f"events_s_ring={rates['ring']:.0f};"
+             f"events_s_ref={rates['ref']:.0f};"
+             f"burst={burst};resident={resident};"
+             f"speedup={rates['ring'] / rates['ref']:.2f}x;"
+             f"engine_events_s_ring={erates['ring']:.0f};"
+             f"engine_events_s_ref={erates['ref']:.0f};"
+             f"engine_speedup={erates['ring'] / erates['ref']:.2f}x")
+
+
+def bench_adaptive_exec(width=1024, n_ticks=4, lookahead=4, pool_cap=4096):
+    """Monitoring-driven exec width vs the static exec_cap=256 default.
+
+    Spill-heavy scenario: every conservative window offers ``width`` same-tick
+    events, so the static default executes 256 and spills the rest — paying
+    four windows (four GVT collectives) per tick. The adaptive ladder grows to
+    the window size after one spilled window and finishes in ~width/ladder_top
+    fewer windows, byte-identical to the oracle (spill semantics are exact for
+    any width sequence — tests/test_policy.py pins the trace equality).
+    Reported: window counts, windows saved, and wall rates (informational —
+    the adaptive driver syncs monitoring to the host every window, which the
+    vmap driver avoids, so on CPU the window saving is the honest headline).
+    """
+    from repro.core.policy import ExecPolicy
+
+    def build(**kw):
+        b = ScenarioBuilder(max_cpu=1, queue_cap=2, max_link=1, max_flow=2)
+        sinks = [b.add_idle_lp() for _ in range(width)]
+        for t in range(n_ticks):
+            for lp in sinks:
+                b.add_event(time=1 + lookahead * t, kind=ev.K_NOOP,
+                            src=lp, dst=lp)
+        return b.build(n_agents=1, lookahead=lookahead,
+                       t_end=lookahead * (n_ticks + 1) + 2,
+                       pool_cap=pool_cap, emit_cap=64, **kw)
+
+    world, own, init_ev, spec = build(exec_cap=256)
+    eng_s = Engine(world, own, init_ev, spec)
+    jax.block_until_ready(eng_s.run_local().counters)     # compile
+    t0 = time.perf_counter()
+    st_s = eng_s.run_local()
+    jax.block_until_ready(st_s.counters)
+    dt_s = time.perf_counter() - t0
+
+    ladder = ExecPolicy(ladder=(256, 512, min(width, pool_cap)))
+    world, own, init_ev, spec = build(exec_policy=ladder)
+    eng_a = Engine(world, own, init_ev, spec)
+    eng_a.run_adaptive()                                   # compile rungs
+    t0 = time.perf_counter()
+    st_a = eng_a.run_adaptive()
+    dt_a = time.perf_counter() - t0
+
+    n = int(np.asarray(st_s.counters)[0, mon.C_EVENTS])
+    assert n == int(np.asarray(st_a.counters)[0, mon.C_EVENTS]) == width * n_ticks
+    w_s = int(np.asarray(st_s.windows)[0])
+    w_a = int(np.asarray(st_a.windows)[0])
+    assert w_a < w_s, (w_a, w_s)
+    emit("adaptive_exec", dt_a * 1e6,
+         f"windows_static={w_s};windows_adaptive={w_a};"
+         f"windows_saved={w_s - w_a};"
+         f"events_s_static={n / dt_s:.0f};events_s_adaptive={n / dt_a:.0f};"
+         f"spill_static={int(np.asarray(st_s.counters)[0, mon.C_EXEC_SPILL])};"
+         f"spill_adaptive={int(np.asarray(st_a.counters)[0, mon.C_EXEC_SPILL])}")
+
+
 def bench_cache_churn(pool_caps=(4096,), width=256, n_keys=4, lookahead=4):
     """The outside-core replica-cache component under batched dispatch.
 
@@ -509,6 +663,8 @@ def main() -> None:
         bench_exec_compaction(pool_caps=(4096,))
         bench_batched_dispatch(pool_caps=(4096,))
         bench_wide_component(pool_caps=(4096,))
+        bench_insert_churn(pool_caps=(4096,))
+        bench_adaptive_exec()
         bench_cache_churn(pool_caps=(4096,))
         bench_scheduler()
         bench_kernels()
@@ -523,6 +679,8 @@ def main() -> None:
         bench_exec_compaction()
         bench_batched_dispatch()
         bench_wide_component()
+        bench_insert_churn()
+        bench_adaptive_exec()
         bench_cache_churn()
         bench_kernels()
         bench_workload_sim()

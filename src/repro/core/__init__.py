@@ -15,22 +15,24 @@ docs/scenario_api.md for the authoring guide):
 gates it (and the generated schema exports) against registry drift in CI.
 """
 from repro.core import (events, handlers, monitoring, network, oracle,
-                        registry, scheduler, sync)
+                        policy, registry, scheduler, sync)
 from repro.core.components import (BUILTIN, LPK_FARM, LPK_GEN, LPK_IDLE,
                                    LPK_NET, LPK_STORAGE, ScenarioBuilder,
                                    ScenarioSpec, World, WorldOwnership,
                                    sync_world)
 from repro.core.engine import AXIS, Engine, EngineState, lexsort_time_seq
 from repro.core.handlers import WorldDelta
+from repro.core.policy import ExecPolicy
 from repro.core.oracle import merged_engine_trace, run_sequential
 from repro.core.registry import (FieldSpec, PayloadSpec, Registry,
                                  RegistryError, registry_of)
 
 __all__ = [
-    "AXIS", "BUILTIN", "Engine", "EngineState", "FieldSpec", "LPK_FARM",
-    "LPK_GEN", "LPK_IDLE", "LPK_NET", "LPK_STORAGE", "PayloadSpec",
-    "Registry", "RegistryError", "ScenarioBuilder", "ScenarioSpec", "World",
-    "WorldDelta", "WorldOwnership", "events", "handlers", "lexsort_time_seq",
-    "merged_engine_trace", "monitoring", "network", "oracle", "registry",
-    "registry_of", "run_sequential", "scheduler", "sync", "sync_world",
+    "AXIS", "BUILTIN", "Engine", "EngineState", "ExecPolicy", "FieldSpec",
+    "LPK_FARM", "LPK_GEN", "LPK_IDLE", "LPK_NET", "LPK_STORAGE",
+    "PayloadSpec", "Registry", "RegistryError", "ScenarioBuilder",
+    "ScenarioSpec", "World", "WorldDelta", "WorldOwnership", "events",
+    "handlers", "lexsort_time_seq", "merged_engine_trace", "monitoring",
+    "network", "oracle", "policy", "registry", "registry_of",
+    "run_sequential", "scheduler", "sync", "sync_world",
 ]

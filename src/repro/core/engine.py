@@ -41,8 +41,20 @@ Per window (one "simulation step" in the paper's event-scheduler terms):
      headroom (or raise exec_cap) for emit-heavy dense scenarios.
   5. Route: emits are bucketed by destination agent (``lp_agent``) and exchanged with
      one ``all_to_all`` (the Jini remote-event adaptation); overflow is counted.
-  6. Insert: received events enter pool free slots.
-  7. Sync world: owner-wins all-reduce of replicated component state (C4).
+  6. Insert: received events enter pool free slots. The pool's free-list ring
+     (events.py, PR 5) makes this an O(n_insert) ring pop and the
+     post-execution reclaim an O(exec_cap) ``events.release`` scatter —
+     ``spec.insert_mode="ref"`` restores the PR 1-4 O(pool_cap) rank-scan
+     insert + pool-wide pop mask, byte-identical in everything but slot
+     layout and the C_RING_WRAP diagnostic.
+  7. Sync world: owner-wins all-reduce of replicated component state (C4),
+     then the pool occupancy/headroom gauges (C_POOL_OCC / C_POOL_FREE).
+
+The per-window execution width is ``spec.exec_policy``: a static int (the
+historical ``exec_cap``) under ``run_local`` / ``run_distributed``, or a
+``policy.ExecPolicy`` ladder driven by the per-window monitoring vector under
+``run_adaptive`` — one jitted window program per rung, cached, so adaptation
+never recompiles (docs/architecture.md, "Pool lifecycle").
 
 The same per-agent program runs under ``jax.vmap(axis_name='agents')`` (LocalComm:
 tests, benchmarks, single host) and under ``shard_map`` over a device mesh
@@ -56,10 +68,12 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import events as ev
 from repro.core import monitoring as mon
+from repro.core import policy as pol
 from repro.core import sync
 from repro.core.components import ScenarioSpec, World, WorldOwnership
 from repro.core.handlers import (Ev, apply_handler, apply_handler_batch,
@@ -152,6 +166,10 @@ class Engine:
             raise ValueError(
                 f"spec.merge_mode must be 'delta' or 'dense', got "
                 f"{spec.merge_mode!r}")
+        if spec.insert_mode not in ("ring", "ref"):
+            raise ValueError(
+                f"spec.insert_mode must be 'ring' or 'ref', got "
+                f"{spec.insert_mode!r}")
         self.table = self.registry.make_handlers(spec.lookahead,
                                                  spec.work_per_mb)
         # widest resource table: bound for the conflict-detection key space
@@ -169,10 +187,14 @@ class Engine:
         pools = []
         drops = []
         lp_agent = self.world.lp_agent
+        # the seed insert also seeds the free ring: an empty pool's ring is
+        # the identity permutation, so the ring fast path assigns the same
+        # ascending slots as the reference scan here
+        ins = ev.insert if self.spec.insert_mode == "ring" else ev.insert_ref
         for a in range(A):
             mine = self.init_events.valid & (lp_agent[self.init_events.dst] == a)
             batch = self.init_events._replace(valid=mine)
-            pool, dropped = ev.insert(ev.empty_pool(cap), batch)
+            pool, dropped = ins(ev.empty_pool(cap), batch)
             pools.append(pool)
             drops.append(dropped)
         pool = jax.tree.map(lambda *xs: jnp.stack(xs), *pools)
@@ -180,8 +202,10 @@ class Engine:
         world = jax.tree.map(rep, self.world)
         tc = max(self.trace_cap, 1)
         # oversubscribed seeds (init events beyond pool_cap) are visible, not
-        # silent: the per-agent insert drop count lands in C_DROP_POOL
-        counters = jnp.zeros((A, mon.N_COUNTERS), jnp.int32).at[
+        # silent: the per-agent insert drop count lands in C_DROP_POOL.
+        # Counter width comes from the registry: declared extension counters
+        # ride in the same per-agent vector as the builtins.
+        counters = jnp.zeros((A, self.registry.n_counters), jnp.int32).at[
             :, mon.C_DROP_POOL].set(jnp.stack(drops))
         return EngineState(
             world=world,
@@ -195,7 +219,11 @@ class Engine:
         )
 
     # ------------------------------------------------------------- superstep
-    def _superstep(self, st: EngineState, axis: str | None) -> EngineState:
+    def _superstep(self, st: EngineState, axis: str | None,
+                   exec_cap: int | None = None) -> EngineState:
+        """One conservative window. ``exec_cap`` overrides the spec's static
+        width — the adaptive driver (``run_adaptive``) traces one program per
+        ladder rung through this hook."""
         spec = self.spec
         world, pool, counters = st.world, st.pool, st.counters
 
@@ -209,9 +237,10 @@ class Engine:
         # 3. order (time, seq) + compact: unsafe slots sort to the back, and only
         # the first exec_cap gather indices (the earliest safe slots) are kept
         time_key = jnp.where(safe, pool.time, ev.T_INF)
-        xcap = max(min(spec.exec_cap, spec.pool_cap), 1)
+        xcap = max(min(exec_cap if exec_cap is not None else spec.exec_cap,
+                       spec.pool_cap), 1)
         exec_idx = self.select_fn(time_key, pool.seq, xcap)
-        exec_slots, exec_safe = sync.exec_selection(safe, exec_idx)
+        exec_safe = sync.exec_selection_ring(safe, exec_idx)
         cand = ev.gather(pool, exec_idx)
 
         # 4. execute the window: grouped vectorized dispatch (default) or the
@@ -227,7 +256,16 @@ class Engine:
         counters = mon.bump(counters, mon.C_EVENTS, n_processed)
         counters = mon.bump(counters, mon.C_EXEC_SPILL, n_spill)
         counters = mon.bump(counters, mon.C_WINDOWS, 1)
-        pool = ev.pop_mask(pool, exec_slots)
+        # slot reclaim: ring mode pushes the executed slots onto the free
+        # ring's tail (O(exec_cap)); ref mode keeps the pool-wide pop mask
+        if spec.insert_mode == "ring":
+            counters = mon.bump(
+                counters, mon.C_RING_WRAP,
+                pool.free_tail + n_processed >= jnp.int32(spec.pool_cap))
+            pool = ev.release(pool, exec_idx, exec_safe)
+        else:
+            slot_mask, _ = sync.exec_selection(safe, exec_idx)
+            pool = ev.pop_mask_ref(pool, slot_mask)
 
         # processed LPs drop back to WAITING at window end (thread states -> data)
         world = world._replace(
@@ -238,6 +276,11 @@ class Engine:
 
         # 7. replicated-state sync (C4) — field lists generated by the registry
         world = self.registry.sync_world(world, self.own, axis)
+
+        # pool-lifecycle gauges: the occupancy/headroom signals the adaptive
+        # exec policy reads (O(1) off the ring's free count in either mode)
+        counters = mon.gauge(counters, mon.C_POOL_OCC, ev.occupancy(pool))
+        counters = mon.gauge(counters, mon.C_POOL_FREE, pool.free_count)
 
         return EngineState(world=world, pool=pool, counters=counters,
                            t_now=jnp.max(horizon), done=done,
@@ -423,12 +466,24 @@ class Engine:
         return world, counters, emits, trace, trace_n
 
     # ---------------------------------------------------------------- routing
+    def _insert(self, pool: ev.EventPool, counters, batch: ev.EventBatch):
+        """Pool insert via the spec's lifecycle path (+ wrap accounting)."""
+        if self.spec.insert_mode == "ring":
+            pool2, dropped = ev.insert(pool, batch)
+            n_take = pool.free_count - pool2.free_count
+            counters = mon.bump(
+                counters, mon.C_RING_WRAP,
+                pool.free_head + n_take >= jnp.int32(self.spec.pool_cap))
+            return pool2, counters, dropped
+        pool2, dropped = ev.insert_ref(pool, batch)
+        return pool2, counters, dropped
+
     def _route_and_insert(self, world: World, pool: ev.EventPool, counters,
                           emits: ev.EventBatch, axis: str | None):
         spec = self.spec
         A = spec.n_agents
         if axis is None or A == 1:
-            pool, dropped = ev.insert(pool, emits)
+            pool, counters, dropped = self._insert(pool, counters, emits)
             counters = mon.bump(counters, mon.C_DROP_POOL, dropped)
             counters = mon.bump(counters, mon.C_LP_LOCAL,
                                 jnp.sum(emits.valid.astype(jnp.int32)))
@@ -483,7 +538,7 @@ class Engine:
             payload=a2a(b_payload).reshape(A * rcap, ev.PAYLOAD),
             valid=a2a(b_valid).reshape(A * rcap),
         )
-        pool, dropped = ev.insert(pool, rx)
+        pool, counters, dropped = self._insert(pool, counters, rx)
         counters = mon.bump(counters, mon.C_DROP_POOL, dropped)
         return pool, counters
 
@@ -568,3 +623,53 @@ class Engine:
                 axis_name=AXIS))
             self._jit_cache["step_local"] = fn
         return fn(st)
+
+    # ------------------------------------------------------ adaptive driver
+    def _window_fn(self, width: int):
+        """One jitted window program at a fixed exec width (cached per rung,
+        so the adaptive ladder recompiles nothing after first use)."""
+        key = ("window", width)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            fn = jax.jit(jax.vmap(
+                lambda s: self._superstep(
+                    s, AXIS if self.spec.n_agents > 1 else None,
+                    exec_cap=width),
+                axis_name=AXIS))
+            self._jit_cache[key] = fn
+        return fn
+
+    def run_adaptive(self, max_windows: int = 10_000,
+                     policy: "pol.ExecPolicy | int | None" = None
+                     ) -> EngineState:
+        """Monitoring-driven execution (vmap driver): the per-window LISA
+        loop of core/policy.py.
+
+        Each window runs the jitted program of the current ladder rung, then
+        the host reads the window's monitoring vector (spill rate, scatter
+        volume, pool occupancy/headroom gauges) and picks the next rung —
+        grow under spill pressure or near pool saturation, shrink on sparse
+        windows. Exactness is unconditional: spilling is oracle-exact for any
+        width sequence, so traces/world bytes match the static drivers and
+        the sequential oracle; only the window count (and per-window cost)
+        changes. The rung trajectory lands in ``self.adaptive_rungs``.
+
+        ``policy`` overrides ``spec.exec_policy`` (a bare int means a
+        single-rung ladder, i.e. the static behavior).
+        """
+        p = pol.normalize(self.spec.exec_policy if policy is None else policy)
+        st = self.init_state()
+        rung = p.init_rung
+        prev = np.asarray(st.counters)
+        rungs: list[int] = []
+        for _ in range(max_windows):
+            if bool(np.asarray(st.done).all()):
+                break
+            rungs.append(rung)
+            st = self._window_fn(p.ladder[rung])(st)
+            cur = np.asarray(st.counters)
+            stats = pol.window_stats(prev, cur, self.spec.pool_cap)
+            rung = pol.choose_rung(p, rung, stats)
+            prev = cur
+        self.adaptive_rungs = tuple(rungs)
+        return st

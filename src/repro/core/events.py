@@ -67,16 +67,36 @@ class EventPool(NamedTuple):
 
     Fields are parallel arrays of shape (cap,) (payload: (cap, PAYLOAD)). ``valid``
     marks live slots; dead slots carry time == T_INF so min-reductions are mask-free.
+
+    The pool carries its own free-slot lifecycle state (PR 5): ``free_ring`` is
+    a ring buffer of free slot indices and ``free_head`` / ``free_tail`` /
+    ``free_count`` are the ring cursors, with the invariant that ring positions
+    ``head, head+1, ..., head+count-1 (mod cap)`` hold exactly the indices of
+    the free (invalid) slots. ``insert`` pops the next-k free slots off the
+    head (O(n_insert) — no pool-wide rank scan) and ``release`` pushes
+    reclaimed slot ids onto the tail (O(n_released)); ``pop_mask`` (whole-pool
+    masks, e.g. migration) canonicalizes via ``rebuild_ring``. The *reference
+    scan paths* are the exception: ``insert_ref`` / ``pop_mask_ref`` keep only
+    ``free_count`` exact and let the ring contents/cursors go stale (they are
+    the retained PR 1-4 cost model; the ``insert_mode="ref"`` engine never
+    reads the ring) — run ``rebuild_ring`` before handing a ref-mutated pool
+    back to the ring fast path. Ring contents outside the live window are
+    unspecified-but-deterministic: a pure function of the event history, so
+    byte-comparisons between two runs of the same configuration stay exact.
     """
 
-    time: jax.Array     # i32 (cap,)  timestamp in ticks; T_INF when slot free
-    seq: jax.Array      # i32 (cap,)  deterministic tie-break id
-    kind: jax.Array     # i32 (cap,)
-    src: jax.Array      # i32 (cap,)  source LP (global id)
-    dst: jax.Array      # i32 (cap,)  destination LP (global id)
-    ctx: jax.Array      # i32 (cap,)  simulation context (run) id
-    payload: jax.Array  # f32 (cap, PAYLOAD)
-    valid: jax.Array    # bool (cap,)
+    time: jax.Array       # i32 (cap,)  timestamp in ticks; T_INF when slot free
+    seq: jax.Array        # i32 (cap,)  deterministic tie-break id
+    kind: jax.Array       # i32 (cap,)
+    src: jax.Array        # i32 (cap,)  source LP (global id)
+    dst: jax.Array        # i32 (cap,)  destination LP (global id)
+    ctx: jax.Array        # i32 (cap,)  simulation context (run) id
+    payload: jax.Array    # f32 (cap, PAYLOAD)
+    valid: jax.Array      # bool (cap,)
+    free_ring: jax.Array  # i32 (cap,)  ring buffer of free slot indices
+    free_head: jax.Array  # i32 scalar  ring position of the next free slot
+    free_tail: jax.Array  # i32 scalar  ring position where released slots land
+    free_count: jax.Array  # i32 scalar number of free slots
 
     @property
     def cap(self) -> int:
@@ -93,6 +113,37 @@ def empty_pool(cap: int) -> EventPool:
         ctx=jnp.zeros((cap,), jnp.int32),
         payload=jnp.zeros((cap, PAYLOAD), jnp.float32),
         valid=jnp.zeros((cap,), bool),
+        free_ring=jnp.arange(cap, dtype=jnp.int32),
+        free_head=jnp.int32(0),
+        free_tail=jnp.int32(0),
+        free_count=jnp.int32(cap),
+    )
+
+
+def occupancy(pool: EventPool) -> jax.Array:
+    """Live slots in the pool — O(1) off the ring's free count.
+
+    The monitoring gauge the adaptive exec policy reads (C_POOL_OCC /
+    C_POOL_FREE): every mutation path keeps ``free_count`` exact, so this
+    never needs a pool-wide ``valid`` reduction.
+    """
+    return jnp.int32(pool.cap) - pool.free_count
+
+
+def rebuild_ring(pool: EventPool) -> EventPool:
+    """Canonicalize the free ring from ``valid`` (O(cap) — reference paths).
+
+    Free slots land first, in ascending slot order, with ``head == 0``; live
+    slots fill the dead remainder of the ring (also ascending), keeping the
+    ring a deterministic permutation of ``arange(cap)``.
+    """
+    ring = jnp.argsort(pool.valid, stable=True).astype(jnp.int32)
+    n_free = jnp.sum((~pool.valid).astype(jnp.int32))
+    return pool._replace(
+        free_ring=ring,
+        free_head=jnp.int32(0),
+        free_tail=n_free % jnp.int32(pool.cap),
+        free_count=n_free,
     )
 
 
@@ -114,8 +165,16 @@ class EventBatch(NamedTuple):
 
 
 def empty_batch(n: int) -> EventBatch:
-    p = empty_pool(n)
-    return EventBatch(*p)
+    return EventBatch(
+        time=jnp.full((n,), T_INF, jnp.int32),
+        seq=jnp.zeros((n,), jnp.int32),
+        kind=jnp.zeros((n,), jnp.int32),
+        src=jnp.zeros((n,), jnp.int32),
+        dst=jnp.zeros((n,), jnp.int32),
+        ctx=jnp.zeros((n,), jnp.int32),
+        payload=jnp.zeros((n, PAYLOAD), jnp.float32),
+        valid=jnp.zeros((n,), bool),
+    )
 
 
 def batch_from_rows(rows) -> EventBatch:
@@ -142,12 +201,73 @@ def batch_from_rows(rows) -> EventBatch:
     )
 
 
-def insert(pool: EventPool, batch: EventBatch):
+def _scatter_batch(pool: EventPool, batch: EventBatch, idx: jax.Array,
+                   fits: jax.Array) -> EventPool:
+    """Write the fitting batch rows into pool slots ``idx`` (cap == dropped)."""
+    return pool._replace(
+        time=pool.time.at[idx].set(batch.time, mode="drop"),
+        seq=pool.seq.at[idx].set(batch.seq, mode="drop"),
+        kind=pool.kind.at[idx].set(batch.kind, mode="drop"),
+        src=pool.src.at[idx].set(batch.src, mode="drop"),
+        dst=pool.dst.at[idx].set(batch.dst, mode="drop"),
+        ctx=pool.ctx.at[idx].set(batch.ctx, mode="drop"),
+        payload=pool.payload.at[idx].set(batch.payload, mode="drop"),
+        valid=pool.valid.at[idx].set(fits, mode="drop"),
+    )
+
+
+def insert(pool: EventPool, batch: EventBatch, slot_fn=None):
     """Insert ``batch`` (masked rows skipped) into free slots of ``pool``.
 
-    Returns (pool', n_dropped). Free slots are assigned in ascending slot order to
-    keep the layout deterministic. Overflowing events are *counted*, never silently
-    lost (the monitoring counters surface them — paper §4.1's "load of the agents").
+    Returns (pool', n_dropped). The ring fast path: the r-th fitting row takes
+    the slot at ring position ``(free_head + r) % cap`` — an O(n_insert)
+    prefix-sum + gather, with no O(pool_cap) rank scan (that reference path is
+    retained as :func:`insert_ref`). Slot assignment is deterministic (ring
+    order is a pure function of the event history), and overflowing events are
+    *counted*, never silently lost (the monitoring counters surface them —
+    paper §4.1's "load of the agents").
+
+    ``slot_fn(free_ring, free_head, want) -> dst_slot`` is the kernel hook for
+    the Pallas free-ring gather (``kernels.ops.ring_slots``); the default is
+    the XLA prefix-sum + gather below. ``dst_slot`` must hold, per batch row,
+    the ring slot its insert rank addresses (garbage beyond ``free_count`` is
+    fine — those rows are masked to the drop index).
+    """
+    cap = pool.cap
+    want = batch.valid
+    want_rank = jnp.cumsum(want.astype(jnp.int32)) - 1          # rank among inserts
+    n_want = jnp.sum(want.astype(jnp.int32))
+    fits = want & (want_rank < pool.free_count)
+    n_take = jnp.sum(fits.astype(jnp.int32))
+
+    if slot_fn is None:
+        pos = (pool.free_head + jnp.maximum(want_rank, 0)) % jnp.int32(cap)
+        dst_slot = pool.free_ring[pos]
+    else:
+        dst_slot = slot_fn(pool.free_ring, pool.free_head, want)
+    idx = jnp.where(fits, dst_slot, cap)                        # cap == out of bounds -> drop
+
+    pool = _scatter_batch(pool, batch, idx, fits)
+    return pool._replace(
+        free_head=(pool.free_head + n_take) % jnp.int32(cap),
+        free_count=pool.free_count - n_take,
+    ), n_want - n_take
+
+
+def insert_ref(pool: EventPool, batch: EventBatch):
+    """Reference insert: O(pool_cap) cumsum rank scan over the ``valid`` mask.
+
+    The pre-ring (PR 1-4) insert path, retained as the oracle for the ring
+    fast path (``spec.insert_mode="ref"``; the ``insert_churn`` benchmark
+    gates the ring speedup against it). Free slots are assigned in ascending
+    slot order. Semantically identical to :func:`insert` — same events kept,
+    same events dropped — only the slot layout differs.
+
+    Lifecycle state: only ``free_count`` is maintained (exact, for the
+    occupancy gauges); the ring *contents* and cursors go stale — the ref
+    engine path never reads them, and charging the reference a per-window
+    ring rebuild would bias the benchmark it anchors. Run ``rebuild_ring``
+    before handing a ref-inserted pool back to the ring fast path.
     """
     cap = pool.cap
     free = ~pool.valid
@@ -169,17 +289,37 @@ def insert(pool: EventPool, batch: EventBatch):
     dst_slot = rank_to_slot[jnp.clip(want_rank, 0, cap - 1)]
     idx = jnp.where(fits, dst_slot, cap)                        # cap == out of bounds -> drop
 
-    pool = EventPool(
-        time=pool.time.at[idx].set(batch.time, mode="drop"),
-        seq=pool.seq.at[idx].set(batch.seq, mode="drop"),
-        kind=pool.kind.at[idx].set(batch.kind, mode="drop"),
-        src=pool.src.at[idx].set(batch.src, mode="drop"),
-        dst=pool.dst.at[idx].set(batch.dst, mode="drop"),
-        ctx=pool.ctx.at[idx].set(batch.ctx, mode="drop"),
-        payload=pool.payload.at[idx].set(batch.payload, mode="drop"),
-        valid=pool.valid.at[idx].set(True, mode="drop"),
-    )
+    pool = _scatter_batch(pool, batch, idx, fits)
+    pool = pool._replace(
+        free_count=pool.free_count - (n_want - n_drop))
     return pool, n_drop
+
+
+def release(pool: EventPool, slots: jax.Array, mask: jax.Array) -> EventPool:
+    """Reclaim executed slots: invalidate + push onto the free ring's tail.
+
+    ``slots`` are distinct pool-slot indices (the engine's ``exec_idx`` window
+    gather) and ``mask`` flags the rows that actually executed (``exec_safe``)
+    — the caller guarantees masked slots are currently valid. O(len(slots)):
+    the r-th masked slot lands at ring position ``(free_tail + r) % cap``, so
+    reclaim order (and hence future insert layout) is the deterministic
+    (time, seq) window order. The pool-wide-mask reference is
+    :func:`pop_mask`.
+    """
+    cap = pool.cap
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    n = jnp.sum(mask.astype(jnp.int32))
+    pos = (pool.free_tail + jnp.maximum(rank, 0)) % jnp.int32(cap)
+    ring = pool.free_ring.at[jnp.where(mask, pos, cap)].set(
+        slots.astype(jnp.int32), mode="drop")
+    gone = jnp.where(mask, slots, cap)
+    return pool._replace(
+        time=pool.time.at[gone].set(T_INF, mode="drop"),
+        valid=pool.valid.at[gone].set(False, mode="drop"),
+        free_ring=ring,
+        free_tail=(pool.free_tail + n) % jnp.int32(cap),
+        free_count=pool.free_count + n,
+    )
 
 
 def gather(pool: EventPool, idx: jax.Array) -> EventBatch:
@@ -229,11 +369,34 @@ def compact_batch(batch: EventBatch, cap: int):
 
 
 def pop_mask(pool: EventPool, mask: jax.Array) -> EventPool:
-    """Invalidate ``mask``-ed slots (processed events leave the pool)."""
+    """Invalidate ``mask``-ed slots and canonicalize the free ring.
+
+    For rare whole-pool operations (LP migration re-homing) where the caller
+    has a pool-wide mask rather than a slot list: the O(cap log cap) ring
+    rebuild keeps the lifecycle state fully consistent for the ring fast
+    path afterwards. The per-window reclaim is :func:`release`.
+    """
+    gone = pool.valid & mask
+    pool = pool._replace(
+        time=jnp.where(gone, T_INF, pool.time),
+        valid=pool.valid & ~mask,
+    )
+    return rebuild_ring(pool)
+
+
+def pop_mask_ref(pool: EventPool, mask: jax.Array) -> EventPool:
+    """Invalidate ``mask``-ed slots — the PR 1-4 reclaim, O(cap) wheres.
+
+    The ``insert_mode="ref"`` engine path: like :func:`insert_ref` it keeps
+    ``free_count`` exact for the occupancy gauges but lets the ring contents
+    go stale (nothing in ref mode reads them, and the retained scan path must
+    carry its historical cost, not a ring-maintenance surcharge).
+    """
     gone = pool.valid & mask
     return pool._replace(
         time=jnp.where(gone, T_INF, pool.time),
         valid=pool.valid & ~mask,
+        free_count=pool.free_count + jnp.sum(gone.astype(jnp.int32)),
     )
 
 

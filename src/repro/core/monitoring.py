@@ -41,9 +41,58 @@ C_TRACE_DROP = 22     # trace records lost to the fixed-cap trace buffer; any
                       # nonzero value makes trace-based oracle comparisons
                       # invalid, so oracle.merged_engine_trace refuses to
                       # return a truncated trace (fails loudly instead)
-N_COUNTERS = 23
+C_RING_WRAP = 23      # free-ring cursor wraps (head on insert, tail on release)
+C_POOL_OCC = 24       # GAUGE: live pool slots at window end (occupancy)
+C_POOL_FREE = 25      # GAUGE: free pool slots at window end (insert headroom)
+N_COUNTERS = 26
 
 DROP_COUNTERS = (C_DROP_POOL, C_DROP_ROUTE, C_DROP_FLOW, C_DROP_QUEUE)
+
+# Gauges: overwritten (not accumulated) every window — the pool-lifecycle
+# occupancy signals the adaptive exec policy (core/policy.py) reads alongside
+# the C_EXEC_SPILL / C_BATCH_ROWS rates.
+GAUGE_COUNTERS = (C_POOL_OCC, C_POOL_FREE)
+
+# Pool-lifecycle diagnostics: the only counters allowed to differ between the
+# ring insert path and the retained insert_ref scan path of one scenario
+# (the ref path never touches the ring cursors, so it never wraps them).
+POOL_DIAG_COUNTERS = (C_RING_WRAP,)
+
+# The engine-infrastructure counters every Registry starts with, in index
+# order (Registry.__init__ seeds its counter table from this tuple, so the
+# C_* constants above are the indices the registry assigns). Extensions
+# declare additional counters with ``Registry.counter(name)`` — see
+# docs/scenario_api.md — and size the engine's counter vector through
+# ``Registry.n_counters``.
+BUILTIN_COUNTERS = (
+    ("EVENTS", "events processed"),
+    ("MSGS_REMOTE", "events routed to another agent"),
+    ("STALE", "stale (interrupted) flow-completion events"),
+    ("INTERRUPTS", "bandwidth-share recomputations"),
+    ("JOBS_SUBMITTED", "jobs accepted by a compute farm"),
+    ("JOBS_DONE", "jobs completed"),
+    ("FLOWS_STARTED", "WAN transfers started"),
+    ("FLOWS_DONE", "WAN transfers completed"),
+    ("MB_TRANSFERRED", "completed-flow megabytes (rounded to int)"),
+    ("DROP_POOL", "event-pool overflow"),
+    ("DROP_ROUTE", "routing-buffer overflow"),
+    ("DROP_FLOW", "flow-table overflow"),
+    ("DROP_QUEUE", "job-queue overflow"),
+    ("WINDOWS", "conservative windows executed (sync rounds)"),
+    ("MIGRATIONS", "disk -> tape migrations"),
+    ("WRITES", "storage writes"),
+    ("MB_WRITTEN", "written megabytes (rounded to int)"),
+    ("LP_LOCAL", "events destined to locally-owned LPs"),
+    ("EXEC_SPILL", "safe events deferred past exec_cap to the next window"),
+    ("BATCH_EXEC", "events executed through grouped vectorized dispatch"),
+    ("BATCH_FALLBACK", "conflicted events via the sequential fallback"),
+    ("BATCH_ROWS", "component-table rows scattered by the batched merge"),
+    ("TRACE_DROP", "trace records lost to the fixed-cap trace buffer"),
+    ("RING_WRAP", "free-ring cursor wraps (head on insert, tail on release)"),
+    ("POOL_OCC", "GAUGE: live pool slots at window end"),
+    ("POOL_FREE", "GAUGE: free pool slots at window end"),
+)
+assert len(BUILTIN_COUNTERS) == N_COUNTERS
 
 # Dispatch-path diagnostics: the only counters allowed to differ between the
 # batched and the sequential execution of the same scenario (everything else
@@ -54,12 +103,19 @@ DROP_COUNTERS = (C_DROP_POOL, C_DROP_ROUTE, C_DROP_FLOW, C_DROP_QUEUE)
 BATCH_DIAG_COUNTERS = (C_BATCH_EXEC, C_BATCH_FALLBACK, C_BATCH_ROWS)
 
 
-def zero_counters() -> jax.Array:
-    return jnp.zeros((N_COUNTERS,), jnp.int32)
+def zero_counters(n: int | None = None) -> jax.Array:
+    """A zero counter vector. ``n`` sizes it for extended registries
+    (``Registry.n_counters``); the default is the builtin width."""
+    return jnp.zeros((N_COUNTERS if n is None else n,), jnp.int32)
 
 
 def bump(counters: jax.Array, idx: int, amount=1) -> jax.Array:
     return counters.at[idx].add(jnp.asarray(amount, jnp.int32))
+
+
+def gauge(counters: jax.Array, idx: int, value) -> jax.Array:
+    """Overwrite a gauge counter (per-window level, not an accumulation)."""
+    return counters.at[idx].set(jnp.asarray(value, jnp.int32))
 
 
 def gather_counters(counters: jax.Array, axis: str | None) -> jax.Array:

@@ -27,9 +27,12 @@ def run_sequential(world: World, own: WorldOwnership, init_events: ev.EventBatch
     """Returns (final_world, counters, trace) with trace = [(time, seq, kind, dst)].
 
     The dispatch table comes from the world's own registry, so models defined
-    outside core (``BUILTIN.extend()``) get their sequential reference for free.
+    outside core (``BUILTIN.extend()``) get their sequential reference for free
+    — including any registry-declared monitoring counters, which size the
+    counter vector here exactly as they do in the engine.
     """
-    table = registry_of(world).make_handlers(spec.lookahead, spec.work_per_mb)
+    reg = registry_of(world)
+    table = reg.make_handlers(spec.lookahead, spec.work_per_mb)
 
     @jax.jit
     def apply(w, c, e):
@@ -54,7 +57,7 @@ def run_sequential(world: World, own: WorldOwnership, init_events: ev.EventBatch
         heapq.heappush(heap, (int(init.time[i]), int(init.seq[i]), uid))
         uid += 1
 
-    counters = mon.zero_counters()
+    counters = mon.zero_counters(reg.n_counters)
     trace: list[tuple[int, int, int, int]] = []
     n = 0
     while heap and n < max_events:

@@ -1,0 +1,144 @@
+"""Monitoring-driven adaptive exec width — the LISA -> scheduler loop (C3).
+
+The paper's control thesis (§4.1) is that the monitoring system feeds the
+scheduler, which adapts the simulation's execution to the observed load. The
+engine's per-window knob is ``exec_cap``: how many of the earliest safe events
+one conservative window executes. PR 1 fixed it at ``min(pool_cap, 256)``;
+since PR 2 execution is vectorized (no longer serial in exec_cap), so the
+right width is load-dependent:
+
+* **too narrow** under dense windows: safe events spill (``C_EXEC_SPILL``)
+  and the run pays extra windows — extra GVT collectives — for the same
+  events;
+* **too narrow** near pool saturation: a compacted window frees at most
+  ``exec_cap`` slots of insert headroom, so a nearly-full pool needs a wide
+  window to avoid counted drops (``C_DROP_POOL``);
+* **too wide** on sparse windows: the vectorized dispatch pays for lanes that
+  execute nothing.
+
+:class:`ExecPolicy` picks the next window's width from a small fixed ladder
+of pre-compiled widths. The ladder (not a continuous knob) is what keeps the
+jit caches warm: the engine compiles one window program per rung on first
+use and every later window reuses it, so adaptation costs a dictionary
+lookup, not a recompile. Decisions consume the per-window monitoring vector —
+the spill rate, the batched-merge scatter volume (``C_BATCH_ROWS``), and the
+pool-lifecycle occupancy gauges (``C_POOL_OCC`` / ``C_POOL_FREE``) published
+by the free-ring pool — and are pure host-side functions, so an adaptive run
+is exactly reproducible.
+
+Correctness is free: spilling is oracle-exact for *any* exec width sequence
+(spilled events stay below the unchanged horizon — see engine.py step 4), so
+the policy trades only window count and per-window cost, never accuracy.
+Colaso et al. (2019) frame this knob as an accuracy-vs-cost tradeoff for
+sampled simulators; here the spill semantics make the accuracy term zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import monitoring as mon
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPolicy:
+    """A ladder of per-window execution widths + the movement thresholds.
+
+    ``ladder`` is a strictly ascending tuple of widths (each a static shape
+    the engine compiles one window program for). One decision moves at most
+    one rung — hysteresis against oscillation on bursty workloads.
+
+    Grow (rung + 1) when either
+      * spill pressure: this window spilled more than ``grow_spill`` x the
+        current width (dense windows: pay one compile, save many windows), or
+      * pool saturation: occupancy exceeded ``grow_occupancy`` of pool_cap
+        (a wider window frees more slots of insert headroom).
+    Shrink (rung - 1) when the window was sparse: nothing spilled, occupancy
+    is comfortable, and both the executed-event count and the scatter volume
+    (``C_BATCH_ROWS``) fit inside ``shrink_util`` x the *next lower* width.
+    """
+
+    ladder: tuple[int, ...]
+    init_rung: int = 0
+    grow_spill: float = 0.10
+    grow_occupancy: float = 0.75
+    shrink_util: float = 0.50
+
+    def __post_init__(self):
+        if not self.ladder:
+            raise ValueError("ExecPolicy needs a non-empty width ladder")
+        lad = tuple(int(w) for w in self.ladder)
+        if any(w <= 0 for w in lad):
+            raise ValueError(f"ladder widths must be positive: {lad}")
+        if any(b <= a for a, b in zip(lad, lad[1:])):
+            raise ValueError(f"ladder must be strictly ascending: {lad}")
+        object.__setattr__(self, "ladder", lad)
+        if not 0 <= self.init_rung < len(lad):
+            raise ValueError(f"init_rung {self.init_rung} outside ladder "
+                             f"{lad}")
+
+
+def default_ladder(pool_cap: int, base: int = 256) -> tuple[int, ...]:
+    """A geometric ladder around the historical static default: base/4,
+    base, base*4, ... capped at ``pool_cap`` (always included)."""
+    widths = {min(max(base // 4, 1), pool_cap), min(base, pool_cap)}
+    w = base * 4
+    while w < pool_cap:
+        widths.add(w)
+        w *= 4
+    widths.add(pool_cap)
+    return tuple(sorted(widths))
+
+
+def normalize(exec_policy) -> ExecPolicy:
+    """An ExecPolicy from a spec's ``exec_policy`` field (int -> one rung)."""
+    if isinstance(exec_policy, ExecPolicy):
+        return exec_policy
+    return ExecPolicy(ladder=(int(exec_policy),))
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowStats:
+    """The per-window monitoring slice a policy decision consumes.
+
+    Rates are per-window deltas, reduced ``max`` over agents (the fleet
+    adapts to its hottest agent — one spilling agent stalls GVT progress for
+    everyone); occupancy is the worst-agent fraction of pool_cap.
+    """
+
+    processed: int    # max over agents of this window's C_EVENTS delta
+    spilled: int      # max over agents of this window's C_EXEC_SPILL delta
+    rows: int         # max over agents of this window's C_BATCH_ROWS delta
+    occupancy: float  # max over agents of C_POOL_OCC / pool_cap
+
+
+def window_stats(prev_counters, counters, pool_cap: int) -> WindowStats:
+    """Extract a :class:`WindowStats` from two (A, N) counter snapshots."""
+    prev = np.asarray(prev_counters)
+    cur = np.asarray(counters)
+    delta = cur - prev
+    return WindowStats(
+        processed=int(delta[:, mon.C_EVENTS].max()),
+        spilled=int(delta[:, mon.C_EXEC_SPILL].max()),
+        rows=int(delta[:, mon.C_BATCH_ROWS].max()),
+        occupancy=float(cur[:, mon.C_POOL_OCC].max()) / max(pool_cap, 1),
+    )
+
+
+def choose_rung(policy: ExecPolicy, rung: int, stats: WindowStats) -> int:
+    """The next window's ladder rung (pure, host-side, deterministic)."""
+    width = policy.ladder[rung]
+    if stats.spilled > policy.grow_spill * width:
+        return min(rung + 1, len(policy.ladder) - 1)
+    if stats.occupancy > policy.grow_occupancy:
+        return min(rung + 1, len(policy.ladder) - 1)
+    if rung > 0:
+        lo = policy.ladder[rung - 1]
+        sparse = (stats.spilled == 0
+                  and stats.occupancy <= policy.grow_occupancy
+                  and stats.processed < policy.shrink_util * lo
+                  and stats.rows < policy.shrink_util * lo)
+        if sparse:
+            return rung - 1
+    return rung

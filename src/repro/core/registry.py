@@ -49,6 +49,9 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core import monitoring as _mon
 
 # Payload width: enough scalars for the richest built-in handler (flow start:
 # size, route, two notify pairs). ``events.PAYLOAD`` re-exports this.
@@ -94,25 +97,50 @@ class FieldSpec:
 
 
 class PayloadSpec:
-    """Named view of an event kind's payload scalars.
+    """Named, typed view of an event kind's payload scalars.
 
     Replaces magic index lists: ``spec.pack(size=40.0, notify_lp=f)`` builds
     the positional payload row with declared defaults for the rest. Fields are
-    given as ``"name"`` (default 0.0) or ``("name", default)``.
+    given as ``"name"`` (float32, default 0.0), ``("name", default)``
+    (float32), or ``("name", default, dtype)`` — the **dtype view** (PR 5).
+
+    The engine's payload storage is a flat float32 row; an ``int32`` field
+    would historically round-trip through float32 *numerically* and silently
+    lose precision beyond 2^24. Declaring ``("token", 0, jnp.int32)`` instead
+    stores the int's raw bits reinterpreted as a float32 bit pattern
+    (``lax.bitcast_convert_type`` in-graph, numpy views on the host): no
+    arithmetic ever touches the value, and the engine only ever copies,
+    gathers, and scatters payload bytes, so any 32-bit int — including the
+    31-bit ids the registry tests pin — survives intact. Read typed fields
+    back with :meth:`get` (which bitcasts int fields to int32); never read an
+    int field positionally as a float.
     """
 
     def __init__(self, *fields):
         self.names: tuple[str, ...] = ()
-        self.defaults: dict[str, float] = {}
+        self.defaults: dict[str, Any] = {}
+        self.dtypes: dict[str, Any] = {}
         for f in fields:
-            name, default = (f, 0.0) if isinstance(f, str) else f
+            if isinstance(f, str):
+                name, default, dtype = f, 0.0, jnp.float32
+            elif len(f) == 2:
+                (name, default), dtype = f, jnp.float32
+            else:
+                name, default, dtype = f
             if not isinstance(name, str) or not name.isidentifier():
                 raise RegistryError(f"payload field name {name!r} must be an "
                                     "identifier")
             if name in self.defaults:
                 raise RegistryError(f"duplicate payload field {name!r}")
+            dtype = jnp.dtype(dtype)
+            if dtype not in (jnp.dtype(jnp.float32), jnp.dtype(jnp.int32)):
+                raise RegistryError(
+                    f"payload field {name!r} dtype must be float32 or int32 "
+                    f"(a payload scalar is one 32-bit lane), got {dtype}")
             self.names += (name,)
-            self.defaults[name] = float(default)
+            self.dtypes[name] = dtype
+            self.defaults[name] = (int(default) if dtype == jnp.int32
+                                   else float(default))
         if len(self.names) > PAYLOAD:
             raise RegistryError(
                 f"payload has {len(self.names)} fields; the engine carries at "
@@ -126,18 +154,53 @@ class PayloadSpec:
             raise RegistryError(f"unknown payload field {name!r}; "
                                 f"declared: {self.names}") from None
 
-    def pack(self, **values) -> list:
-        """Positional payload row from named values (declared defaults fill
-        the rest). The builder pads it to ``PAYLOAD`` scalars."""
+    def _check_known(self, values):
         unknown = set(values) - set(self.names)
         if unknown:
             raise RegistryError(f"unknown payload field(s) {sorted(unknown)}; "
                                 f"declared: {self.names}")
-        return [values.get(n, self.defaults[n]) for n in self.names]
+
+    def pack(self, **values) -> "np.ndarray":
+        """Positional payload row from named values (declared defaults fill
+        the rest). The builder pads it to ``PAYLOAD`` scalars.
+
+        Host-side: returns a float32 numpy row. Int32 fields are encoded as
+        raw bit patterns via numpy views — never through a Python float, whose
+        float64 round-trip would quiet signaling-NaN bit patterns.
+        """
+        self._check_known(values)
+        row = np.zeros((len(self.names),), np.float32)
+        for i, n in enumerate(self.names):
+            v = values.get(n, self.defaults[n])
+            if self.dtypes[n] == jnp.int32:
+                row[i] = np.asarray(int(v), np.int32).view(np.float32)
+            else:
+                row[i] = v
+        return row
+
+    def pack_jax(self, **values) -> jax.Array:
+        """In-graph payload packing: a padded (``PAYLOAD``,) float32 row for
+        handler emits, bitcasting int32 fields (the traced twin of
+        :meth:`pack`)."""
+        self._check_known(values)
+        row = jnp.zeros((PAYLOAD,), jnp.float32)
+        for i, n in enumerate(self.names):
+            v = values.get(n, self.defaults[n])
+            if self.dtypes[n] == jnp.int32:
+                f = jax.lax.bitcast_convert_type(
+                    jnp.asarray(v, jnp.int32), jnp.float32)
+            else:
+                f = jnp.asarray(v, jnp.float32)
+            row = row.at[i].set(f)
+        return row
 
     def get(self, payload: jax.Array, name: str) -> jax.Array:
-        """Read one named scalar from a (``PAYLOAD``,) payload row."""
-        return payload[..., self.index(name)]
+        """Read one named scalar from a (``PAYLOAD``,) payload row — int32
+        fields are bit-exact (bitcast, not a float->int conversion)."""
+        v = payload[..., self.index(name)]
+        if self.dtypes[name] == jnp.int32:
+            return jax.lax.bitcast_convert_type(v, jnp.int32)
+        return v
 
     def __repr__(self):
         return f"PayloadSpec({', '.join(self.names)})"
@@ -229,6 +292,13 @@ class Registry:
         self._components: dict[str, ComponentDef] = {}
         self._kinds: list[EventKindDef] = []
         self._handlers: dict[int, Callable] = {}
+        # counter name -> index. Every registry starts with the engine-
+        # infrastructure counters (monitoring.BUILTIN_COUNTERS, whose C_*
+        # constants are exactly these indices); extensions append their own
+        # with Registry.counter and the engine sizes its per-agent counter
+        # vector with Registry.n_counters.
+        self._counters: dict[str, int] = {
+            name: i for i, (name, _doc) in enumerate(_mon.BUILTIN_COUNTERS)}
         self._sealed = False
         # modules whose import registers handlers onto this registry (lets
         # components.py declare the model without importing handlers.py)
@@ -350,6 +420,47 @@ class Registry:
                 return k
         raise RegistryError(f"unknown event kind {ref!r}")
 
+    def counter(self, name: str, doc: str = "") -> int:
+        """Declare a named monitoring counter; returns its index.
+
+        The way outside-core components get named stats without editing
+        ``monitoring.py``: the returned index is stable for this registry
+        (builtin engine counters occupy ``0..monitoring.N_COUNTERS-1``; each
+        declaration appends), and handlers bump it with ``mon.bump(counters,
+        idx)`` exactly like a builtin. The engine, the oracle, and the batched
+        dispatcher all size their counter vectors with :attr:`n_counters`, so
+        declared counters flow through every execution path — including the
+        batched-lane summation — with zero core edits.
+        """
+        self._check_open(f"counter {name!r}")
+        if not name.isidentifier():
+            raise RegistryError(f"counter name {name!r} must be an identifier")
+        if name in self._counters:
+            raise RegistryError(f"duplicate counter {name!r} "
+                                f"(index {self._counters[name]})")
+        del doc  # carried for documentation tooling; the index is the API
+        idx = len(self._counters)
+        self._counters[name] = idx
+        return idx
+
+    @property
+    def counters(self) -> dict:
+        """counter name -> index (builtin engine counters first)."""
+        return dict(self._counters)
+
+    @property
+    def n_counters(self) -> int:
+        """Width of the per-agent counter vector for this registry's models."""
+        return len(self._counters)
+
+    def counter_index(self, name: str) -> int:
+        try:
+            return self._counters[name]
+        except KeyError:
+            raise RegistryError(
+                f"unknown counter {name!r}; declared: "
+                f"{sorted(self._counters)}") from None
+
     def on(self, kind) -> Callable:
         """Decorator registering ``fn(env, world, counters, e)`` as the
         handler of ``kind`` (an :class:`EventKindDef`, id, or name)."""
@@ -374,6 +485,7 @@ class Registry:
         child._components = dict(self._components)
         child._kinds = list(self._kinds)
         child._handlers = dict(self._handlers)
+        child._counters = dict(self._counters)
         return child
 
     # ----------------------------------------------------------------- freeze
@@ -618,8 +730,10 @@ class ScenarioSpec:
     route_cap: int          # per-(src,dst)-agent routing-buffer capacity
     n_lp: int
     work_per_mb: float = 1.0  # CPU ops per transferred MB (job sizing)
-    exec_cap: int = 256     # per-window execution-buffer capacity (compacted scan);
-                            # safe events beyond it spill to the next window
+    exec_policy: Any = 256  # per-window execution width: a static int (the
+                            # PR 1-4 exec_cap; safe events beyond it spill to
+                            # the next window) or a policy.ExecPolicy ladder
+                            # driven by monitoring (Engine.run_adaptive)
     batched_dispatch: bool = True  # engine step 4: grouped vectorized dispatch
                                    # (False = PR 1 sequential compacted fold)
     merge_mode: str = "delta"      # batched-dispatch merge strategy:
@@ -628,6 +742,19 @@ class ScenarioSpec:
                                    # "dense" = the PR 2 reference merge over
                                    # whole component tables, O(lanes x tables)
                                    # — kept for equivalence tests + benchmarks
+    insert_mode: str = "ring"      # event-pool lifecycle strategy: "ring" =
+                                   # free-list ring (O(n_insert) insert +
+                                   # O(exec_cap) release); "ref" = the PR 1-4
+                                   # O(pool_cap) rank-scan insert + pool-wide
+                                   # pop mask — kept for equivalence tests and
+                                   # the insert_churn benchmark gate
+
+    @property
+    def exec_cap(self) -> int:
+        """The static per-window execution width the non-adaptive drivers
+        use: the int itself, or an adaptive policy's initial-rung width."""
+        p = self.exec_policy
+        return p if isinstance(p, int) else p.ladder[p.init_rung]
 
 
 class ScenarioBuilderBase:
@@ -734,8 +861,9 @@ class ScenarioBuilderBase:
     def build(self, *, n_agents: int = 1, n_ctx: int = 1, lookahead: int,
               t_end: int, pool_cap: int = 1024, emit_cap: int | None = None,
               route_cap: int | None = None, exec_cap: int | None = None,
-              placement=None, work_per_mb: float = 1.0,
-              batched_dispatch: bool = True, merge_mode: str = "delta"):
+              exec_policy=None, placement=None, work_per_mb: float = 1.0,
+              batched_dispatch: bool = True, merge_mode: str = "delta",
+              insert_mode: str = "ring"):
         from repro.core import events as ev   # late: events imports registry
 
         reg = self._registry
@@ -788,6 +916,13 @@ class ScenarioBuilderBase:
             comp.own_field: inverse_map(comp)
             for comp in reg.components.values()})
 
+        if exec_policy is not None and exec_cap is not None:
+            raise RegistryError(
+                "pass either exec_cap (static width) or exec_policy "
+                "(adaptive ladder), not both")
+        if exec_policy is None:
+            exec_policy = max(exec_cap if exec_cap is not None
+                              else min(pool_cap, 256), 1)
         spec = ScenarioSpec(
             n_agents=n_agents,
             n_ctx=n_ctx,
@@ -796,12 +931,12 @@ class ScenarioBuilderBase:
             pool_cap=pool_cap,
             emit_cap=emit_cap or pool_cap,
             route_cap=route_cap or max(pool_cap // max(n_agents, 1), 16),
-            exec_cap=max(exec_cap if exec_cap is not None
-                         else min(pool_cap, 256), 1),
+            exec_policy=exec_policy,
             n_lp=nlp,
             work_per_mb=work_per_mb,
             batched_dispatch=batched_dispatch,
             merge_mode=merge_mode,
+            insert_mode=insert_mode,
         )
         init_events = ev.batch_from_rows(self._events)
         return world, own, init_events, spec

@@ -125,3 +125,16 @@ def exec_selection(safe: jax.Array, exec_idx: jax.Array):
     exec_safe = safe[exec_idx]
     slot_mask = jnp.zeros_like(safe).at[exec_idx].set(exec_safe)
     return slot_mask, exec_safe
+
+
+def exec_selection_ring(safe: jax.Array, exec_idx: jax.Array) -> jax.Array:
+    """Execution flags over the ring-compacted candidates (engine step 4).
+
+    The free-ring pool reclaims executed slots directly from ``(exec_idx,
+    exec_safe)`` (``events.release`` — an O(exec_cap) scatter), so the
+    per-window O(pool_cap) slot-mask build of :func:`exec_selection` is only
+    needed by the retained ``insert_mode="ref"`` path. Same soundness
+    argument: safe slots beyond ``exec_cap`` spill, stay below the horizon,
+    and execute in a later window.
+    """
+    return safe[exec_idx]

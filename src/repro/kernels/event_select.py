@@ -181,6 +181,70 @@ def _group_kernel(kind_ref, act_ref, order_ref, rank_ref, counts_ref, *,
     counts_ref[0] = jnp.stack(counts)
 
 
+def _ring_slots_kernel(ring_ref, want_ref, head_ref, out_ref, *,
+                       n: int, cap: int, chunk: int):
+    """Free-ring slot assignment: prefix-sum the insert mask, gather the ring.
+
+    The insert path of the free-ring event pool (``events.insert``): the r-th
+    masked batch row takes the slot at ring position ``(head + r) % cap``.
+    The insert rank is a log-step shift-add prefix sum over the batch lane;
+    the ring gather is expressed as chunked one-hot selection (iota-compare +
+    masked sum) so no dynamic VMEM gather is needed on the VPU — the same
+    trick the segment-rank kernel uses for its rank counts.
+    """
+    want = want_ref[0]                     # (n,) int32 0/1
+    head = head_ref[0][0]
+    x = want
+    s = 1
+    while s < n:
+        x = x + jnp.concatenate([jnp.zeros((s,), jnp.int32), x[:-s]])
+        s *= 2
+    rank = x - want                        # exclusive prefix = insert rank
+    pos = (head + rank) % jnp.int32(cap)
+
+    acc = jnp.zeros((n,), jnp.int32)
+    ids0 = jax.lax.broadcasted_iota(jnp.int32, (n, chunk), 1)
+    for c in range(0, cap, chunk):
+        ids = ids0 + jnp.int32(c)
+        seg = ring_ref[0, c:c + chunk]     # (chunk,) static slice
+        eq = pos[:, None] == ids
+        acc = acc + jnp.sum(jnp.where(eq, seg[None, :], 0), axis=1)
+    out_ref[0] = acc
+
+
+def ring_slots(free_ring: jax.Array, head: jax.Array, want: jax.Array, *,
+               interpret=False):
+    """(cap,) free ring + head cursor + (n,) insert mask -> (n,) slot ids.
+
+    The free-ring variant of the event-pool insert: destination pool slots
+    for a window's emit batch, matching ``kernels.ref.ring_slots_ref`` (and
+    hence the XLA path inside ``events.insert``) exactly on masked rows —
+    unmasked rows carry the garbage the engine drops. One VMEM pass of
+    O(n log n + cap * n / lanes) vector work; no pool-wide rank scan.
+    """
+    cap = free_ring.shape[0]
+    nb = want.shape[0]
+    n = 1 << max((nb - 1).bit_length(), 1)
+    chunk = min(cap, 512)
+    capp = ((cap + chunk - 1) // chunk) * chunk
+    ringp = jnp.zeros((capp,), jnp.int32).at[:cap].set(free_ring)[None]
+    wantp = jnp.zeros((n,), jnp.int32).at[:nb].set(
+        want.astype(jnp.int32))[None]
+    headp = jnp.asarray(head, jnp.int32).reshape(1, 1)
+    kernel = functools.partial(_ring_slots_kernel, n=n, cap=cap, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, capp), lambda i: (0, 0)),
+                  pl.BlockSpec((1, n), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.int32),
+        interpret=interpret,
+    )(ringp, wantp, headp)
+    return out[0, :nb]
+
+
 def group_by_kind(kind: jax.Array, active: jax.Array, n_kinds: int, *,
                   interpret=False):
     """Same-kind grouping for the engine's batched dispatch (step 4).

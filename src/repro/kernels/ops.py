@@ -72,6 +72,19 @@ def group_by_kind(kind, active, n_kinds):
 
 
 @jax.jit
+def ring_slots(free_ring, head, want):
+    """(cap,) free ring + head + (n,) insert mask -> (n,) destination slots.
+
+    The free-ring variant of the event-pool insert (Pallas prefix-sum +
+    chunked one-hot ring gather). Hook it into the pool with
+    ``events.insert(pool, batch, slot_fn=ops.ring_slots)``; the default XLA
+    path inside ``events.insert`` is the reference (kernels.ref.ring_slots_ref
+    — tests sweep kernel vs reference).
+    """
+    return _es.ring_slots(free_ring, head, want, interpret=_interpret())
+
+
+@jax.jit
 def maxmin_rates(inc, bw, active):
     """(F, L), (L,), (F,) -> (F,) max-min fair rates."""
     return _bw.maxmin_rates_pallas(inc, bw, active, interpret=_interpret())

@@ -46,6 +46,16 @@ def select_events_ref(time_key: jax.Array, seq: jax.Array,
     return sort_events_ref(time_key, seq)[: min(exec_cap, time_key.shape[0])]
 
 
+def ring_slots_ref(free_ring: jax.Array, head: jax.Array,
+                   want: jax.Array) -> jax.Array:
+    """Free-ring insert slot assignment — XLA reference for
+    kernels.event_select.ring_slots (the math inside events.insert)."""
+    cap = free_ring.shape[0]
+    w = want.astype(jnp.int32)
+    rank = jnp.cumsum(w) - w                      # exclusive prefix
+    return free_ring[(jnp.asarray(head, jnp.int32) + rank) % cap]
+
+
 def group_by_kind_ref(kind: jax.Array, active: jax.Array, n_kinds: int):
     """Same-kind grouping (order, rank, counts) — XLA reference for
     kernels.event_select.group_by_kind; mirror of engine.group_by_kind_xla."""

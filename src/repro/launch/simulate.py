@@ -16,6 +16,24 @@ import os
 import numpy as np
 
 
+def _exec_policy_args(args, pool_cap):
+    """(exec_cap | exec_policy) build kwargs from the CLI knobs.
+
+    ``pool_cap`` must be the value the builder is given — the default ladder
+    tops out at the pool, so the two may not drift apart.
+    """
+    if not getattr(args, "adaptive_exec", False):
+        return dict(exec_cap=args.exec_cap)
+    if args.exec_cap is not None:
+        raise SystemExit(
+            "--exec-cap and --adaptive-exec conflict: pass either a static "
+            "width or a ladder (--exec-ladder), not both")
+    from repro.core.policy import ExecPolicy, default_ladder
+    ladder = (tuple(args.exec_ladder) if args.exec_ladder
+              else default_ladder(pool_cap))
+    return dict(exec_policy=ExecPolicy(ladder=ladder))
+
+
 def run_t0t1(args):
     from repro.core import Engine, ScenarioBuilder
     from repro.core import monitoring as mon
@@ -35,18 +53,24 @@ def run_t0t1(args):
                             notify2_lp=t1["storage"],
                             notify2_kind=DATA_WRITE.id),
                         interval=15, count=args.flows)
+        pool_cap = 1024
         world, own, init_ev, spec = b.build(
-            n_agents=args.agents, lookahead=2, t_end=100_000, pool_cap=1024,
-            exec_cap=args.exec_cap, work_per_mb=2.0,
+            n_agents=args.agents, lookahead=2, t_end=100_000,
+            pool_cap=pool_cap, work_per_mb=2.0,
             batched_dispatch=args.batched_dispatch,
-            merge_mode=args.merge_mode)
+            merge_mode=args.merge_mode, insert_mode=args.insert_mode,
+            **_exec_policy_args(args, pool_cap))
         eng = Engine(world, own, init_ev, spec)
-        st = eng.run_local(max_windows=200_000)
+        if args.adaptive_exec:
+            st = eng.run_adaptive(max_windows=200_000)
+        else:
+            st = eng.run_local(max_windows=200_000)
         c = np.asarray(st.counters).sum(axis=0)
         print(f"[t0t1] bw={bw:7.3f} MB/tick  events={int(c[mon.C_EVENTS]):6d} "
               f"stale={int(c[mon.C_STALE]):5d} "
               f"interrupts={int(c[mon.C_INTERRUPTS]):5d} "
-              f"MB={int(c[mon.C_MB_TRANSFERRED])}")
+              f"MB={int(c[mon.C_MB_TRANSFERRED])} "
+              f"windows={int(np.asarray(st.windows)[0])}")
 
 
 def run_workload(args):
@@ -94,7 +118,8 @@ def run_distributed(args):
                                         exec_cap=args.exec_cap,
                                         work_per_mb=2.0,
                                         batched_dispatch=args.batched_dispatch,
-                                        merge_mode=args.merge_mode)
+                                        merge_mode=args.merge_mode,
+                                        insert_mode=args.insert_mode)
     eng = Engine(world, own, init_ev, spec)
     mesh = Mesh(np.array(jax.devices()[:n]), ("agents",))
     st = eng.run_distributed(mesh, max_windows=200_000)
@@ -123,6 +148,16 @@ def main():
                     default="delta",
                     help="batched-merge strategy: per-row delta scatters "
                          "(default) or the PR 2 whole-table reference merge")
+    p1.add_argument("--insert-mode", choices=("ring", "ref"), default="ring",
+                    help="event-pool lifecycle: free-list ring (default) or "
+                         "the retained O(pool_cap) insert_ref scan")
+    p1.add_argument("--adaptive-exec", action="store_true",
+                    help="monitoring-driven exec width (core/policy.py "
+                         "ladder; Engine.run_adaptive) instead of a static "
+                         "exec_cap")
+    p1.add_argument("--exec-ladder", type=int, nargs="+", default=None,
+                    help="explicit width ladder for --adaptive-exec "
+                         "(default: policy.default_ladder(pool_cap))")
     p2 = sub.add_parser("workload")
     p2.add_argument("--results", default="results/dryrun")
     p2.add_argument("--cell", default="")
@@ -139,6 +174,9 @@ def main():
                     default="delta",
                     help="batched-merge strategy: per-row delta scatters "
                          "(default) or the PR 2 whole-table reference merge")
+    p3.add_argument("--insert-mode", choices=("ring", "ref"), default="ring",
+                    help="event-pool lifecycle: free-list ring (default) or "
+                         "the retained O(pool_cap) insert_ref scan")
     args = ap.parse_args()
     dict(t0t1=run_t0t1, workload=run_workload,
          distributed=run_distributed)[args.mode](args)

@@ -1,0 +1,242 @@
+"""Failure/repair process LP — the third component defined entirely outside core.
+
+The paper's availability studies (§3/§4.2) model resources that fail and
+recover while the workload runs; this module adds that as a registry
+extension with **zero edits** inside ``repro/core``: a *failure process*
+component whose LP tortures a compute farm with bursts of CPU failures at
+pseudo-exponential intervals, plus repair events that bring the CPUs back.
+It is the stress case the adaptive exec policy (``core/policy.py``) was built
+for — failure bursts make some conservative windows dense (many same-tick
+events -> spill pressure at a narrow exec width) while the exponential gaps
+leave others nearly empty (shrink opportunity) — and the third proof of the
+registry seam after the builtins and the replica cache.
+
+The module demonstrates every PR 5 registry feature at once:
+
+* **Extension kinds on a builtin table**: ``CPU_FAIL`` / ``CPU_REPAIR``
+  declare ``table="farm"`` — their handlers write the farm row of the
+  destination LP under the ordinary delta contract, so the conflict mask
+  automatically serializes a burst hitting one farm (same ``(farm, row)``
+  key) while failures on distinct farms batch in one vectorized call.
+* **Declared monitoring counters** (``Registry.counter``): ``CPU_FAILS`` /
+  ``CPU_REPAIRS`` / ``FAIL_BURSTS`` are named fleet stats with no edit in
+  ``monitoring.py``.
+* **Payload dtype views**: the failed CPU slot and the repair delay travel
+  as declared ``int32`` payload fields (bit-exact through the float32
+  payload lanes — see ``PayloadSpec``).
+
+Model caveat (a stress generator, not a faithful FT study): a failure marks
+the CPU slot busy — the farm scheduler stops placing jobs there — but a job
+already running on the slot still completes, and its ``JOB_END`` may reclaim
+the slot before the repair arrives. Randomness is an in-handler LCG carried
+in mutable component state, so the sequential oracle replays the identical
+stream and every execution path stays byte-identical.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core import handlers as hd
+from repro.core import monitoring as mon
+from repro.core.components import BUILTIN, JOB_SUBMIT, ScenarioBuilder
+from repro.core.registry import (FieldSpec, PayloadSpec, Registry,
+                                 ScenarioBuilderBase)
+
+
+def _lcg(rng):
+    """One step of the classic 32-bit LCG (int32 wrap-around, oracle-exact)."""
+    return rng * jnp.int32(1664525) + jnp.int32(1013904223)
+
+
+def _unit(rng):
+    """(0, 1) float32 from the LCG's high bits (sign-safe shift + mask)."""
+    bits = jnp.bitwise_and(jnp.right_shift(rng, 9), jnp.int32((1 << 22) - 1))
+    return (bits.astype(jnp.float32) + 0.5) / jnp.float32(1 << 22)
+
+
+def _expo(rng, mean):
+    """Pseudo-exponential delay with the given mean, in [1, 8*mean] ticks."""
+    m = jnp.maximum(mean, 1).astype(jnp.float32)
+    d = jnp.ceil(-m * jnp.log(_unit(rng)))
+    return jnp.clip(d, 1.0, 8.0 * m).astype(jnp.int32)
+
+
+def register_failure_model(reg: Registry) -> dict:
+    """Declare the failure-process component, kinds, handlers, and counters."""
+    c_fails = reg.counter("CPU_FAILS", "CPU slots taken down by failures")
+    c_repairs = reg.counter("CPU_REPAIRS", "CPU slots brought back up")
+    c_bursts = reg.counter("FAIL_BURSTS", "failure bursts fired")
+    c_trunc = reg.counter(
+        "FAIL_BURST_TRUNC",
+        f"failures not emitted because fp_burst exceeded the "
+        f"{ev.MAX_EMIT - 1} emit slots a FAIL_TICK carries")
+
+    fproc = reg.component("fproc", doc="failure/repair process LP", fields=dict(
+        fp_target=FieldSpec((), jnp.int32, doc="farm LP the process torments"),
+        fp_burst=FieldSpec((), jnp.int32, fill=1,
+                           doc=f"CPU failures per burst (<= {ev.MAX_EMIT - 1})"),
+        fp_fail_mean=FieldSpec((), jnp.int32, fill=16,
+                               doc="mean ticks between bursts (exponential)"),
+        fp_repair_mean=FieldSpec((), jnp.int32, fill=8,
+                                 doc="mean ticks a failed CPU stays down"),
+        fp_rng=FieldSpec((), jnp.int32, mutable=True, doc="LCG state"),
+        fp_left=FieldSpec((), jnp.int32, mutable=True,
+                          doc="remaining bursts to fire"),
+    ))
+    # int32 dtype views: slot ids and delays travel bit-exact through the
+    # float32 payload lanes (never a numeric float round-trip)
+    fail_payload = PayloadSpec(("slot", 0, jnp.int32),
+                               ("repair_delay", 1, jnp.int32))
+    tick = reg.kind("FAIL_TICK", table="fproc")
+    fail = reg.kind("CPU_FAIL", table="farm", payload=fail_payload)
+    repair = reg.kind("CPU_REPAIR", table="farm",
+                      payload=PayloadSpec(("slot", 0, jnp.int32)))
+
+    @reg.on(tick)
+    def h_fail_tick(env, world, counters, e):
+        g = world.lp_res[e.dst]
+        rng = world.fp_rng[g]
+        left = world.fp_left[g]
+        fire = left > 0
+        target = world.fp_target[g]
+        burst = world.fp_burst[g]
+        n_cpu = world.cpu_busy.shape[1]
+        out = hd.no_emits()
+        # the burst: up to MAX_EMIT-1 same-tick CPU_FAILs at the target farm
+        # (one conservative window -> one conflict group on that farm row)
+        for s in range(ev.MAX_EMIT - 1):
+            rng = _lcg(rng)
+            slot = jnp.bitwise_and(jnp.right_shift(rng, 7),
+                                   jnp.int32(2**24 - 1)) % jnp.int32(n_cpu)
+            rng = _lcg(rng)
+            delay = _expo(rng, world.fp_repair_mean[g])
+            out = hd.set_emit(
+                out, s, valid=fire & (s < burst),
+                time=e.time + env.delay(1), kind=fail.id, src=e.dst,
+                dst=target, ctx=e.ctx,
+                payload=fail_payload.pack_jax(slot=slot, repair_delay=delay),
+                parent_seq=e.seq)
+        # next burst after a pseudo-exponential gap
+        rng = _lcg(rng)
+        gap = _expo(rng, world.fp_fail_mean[g])
+        out = hd.set_emit(
+            out, ev.MAX_EMIT - 1, valid=fire & (left > 1),
+            time=e.time + env.delay(gap), kind=tick.id, src=e.dst, dst=e.dst,
+            ctx=e.ctx, payload=jnp.zeros((ev.PAYLOAD,), jnp.float32),
+            parent_seq=e.seq)
+        counters = mon.bump(counters, c_bursts, jnp.where(fire, 1, 0))
+        # a burst wider than the emit slots is truncated — like every other
+        # overflow in this engine, counted, never silent
+        trunc = jnp.maximum(burst - jnp.int32(ev.MAX_EMIT - 1), 0)
+        counters = mon.bump(counters, c_trunc, jnp.where(fire, trunc, 0))
+        delta = env.delta(world, "fproc", g, fp_rng=rng,
+                          fp_left=left - jnp.where(fire, 1, 0))
+        return delta, counters, out
+
+    @reg.on(fail)
+    def h_cpu_fail(env, world, counters, e):
+        f = world.lp_res[e.dst]
+        slot = fail_payload.get(e.payload, "slot")
+        busy = world.cpu_busy[f].at[slot].set(1)
+        memr = world.cpu_mem[f].at[slot].set(0.0)
+        counters = mon.bump(counters, c_fails)
+        out = hd.set_emit(
+            hd.no_emits(), 0, valid=True,
+            time=e.time + env.delay(fail_payload.get(e.payload,
+                                                     "repair_delay")),
+            kind=repair.id, src=e.dst, dst=e.dst, ctx=e.ctx,
+            payload=repair.payload.pack_jax(slot=slot), parent_seq=e.seq)
+        delta = env.delta(world, "farm", f, cpu_busy=busy, cpu_mem=memr,
+                          jobq=world.jobq[f], jobq_n=world.jobq_n[f])
+        return delta, counters, out
+
+    @reg.on(repair)
+    def h_cpu_repair(env, world, counters, e):
+        """Bring the slot back up — and, like JOB_END, pop the FIFO head
+        onto the repaired CPU so jobs queued during the outage restart
+        (``handlers.start_queued_job`` is the shared queue discipline)."""
+        f = world.lp_res[e.dst]
+        slot = repair.payload.get(e.payload, "slot")
+        counters = mon.bump(counters, c_repairs)
+        busy_v, mem_v, new_jq, new_qn, out = hd.start_queued_job(
+            env, world, f, slot, e, hd.no_emits(), 0)
+        delta = env.delta(world, "farm", f,
+                          cpu_busy=world.cpu_busy[f].at[slot].set(busy_v),
+                          cpu_mem=world.cpu_mem[f].at[slot].set(mem_v),
+                          jobq=new_jq, jobq_n=new_qn)
+        return delta, counters, out
+
+    return dict(fproc=fproc, FAIL_TICK=tick, CPU_FAIL=fail, CPU_REPAIR=repair,
+                C_CPU_FAILS=c_fails, C_CPU_REPAIRS=c_repairs,
+                C_FAIL_BURSTS=c_bursts, C_FAIL_BURST_TRUNC=c_trunc)
+
+
+FAIL_REGISTRY = BUILTIN.extend()
+_DEFS = register_failure_model(FAIL_REGISTRY)
+FPROC = _DEFS["fproc"]
+FAIL_TICK = _DEFS["FAIL_TICK"]
+CPU_FAIL = _DEFS["CPU_FAIL"]
+CPU_REPAIR = _DEFS["CPU_REPAIR"]
+C_CPU_FAILS = _DEFS["C_CPU_FAILS"]
+C_CPU_REPAIRS = _DEFS["C_CPU_REPAIRS"]
+C_FAIL_BURSTS = _DEFS["C_FAIL_BURSTS"]
+C_FAIL_BURST_TRUNC = _DEFS["C_FAIL_BURST_TRUNC"]
+K_FAIL_TICK = FAIL_TICK.id
+LPK_FPROC = FPROC.lp_kind
+
+
+class FailureScenarioBuilder(ScenarioBuilder):
+    """Builtin builder + the generated ``add_fproc(...)`` method."""
+
+    _registry = FAIL_REGISTRY
+
+    def __init__(self, max_cpu: int = 16, queue_cap: int = 32,
+                 max_link: int = 8, max_flow: int = 64):
+        ScenarioBuilderBase.__init__(
+            self, max_cpu=max_cpu, queue_cap=queue_cap, max_link=max_link,
+            max_flow=max_flow)
+
+
+def build_failure_scenario(*, n_farms: int = 8, n_cpu: int = 4,
+                           procs_per_farm: int = 1, burst: int = 3,
+                           fail_mean: int = 12, repair_mean: int = 6,
+                           n_bursts: int = 6, jobs_per_farm: int = 0,
+                           job_interval: int = 8, seed: int = 1,
+                           lookahead: int = 2, n_agents: int = 1,
+                           pool_cap: int = 1024, **build_kw):
+    """Farms under failure/repair churn (optionally with a job workload).
+
+    One failure process per (farm, proc) pair; distinct farms give the
+    batched dispatcher conflict-free lanes, ``procs_per_farm > 1`` (or
+    ``burst > 1``) forces same-row collisions through the sequential
+    fallback. ``jobs_per_farm`` adds a JOB_SUBMIT generator per farm so
+    failures contend with the workload for CPU slots.
+    """
+    if burst > ev.MAX_EMIT - 1:
+        raise ValueError(
+            f"burst={burst} exceeds the {ev.MAX_EMIT - 1} CPU_FAIL emit "
+            "slots a FAIL_TICK carries (excess would be truncated and "
+            "counted in FAIL_BURST_TRUNC)")
+    b = FailureScenarioBuilder(max_cpu=n_cpu, queue_cap=8, max_link=1,
+                               max_flow=2)
+    farms = [b.add_farm([1.0] * n_cpu) for _ in range(n_farms)]
+    procs = []
+    for i, farm in enumerate(farms):
+        for p in range(procs_per_farm):
+            lp = b.add_fproc(fp_target=farm, fp_burst=burst,
+                             fp_fail_mean=fail_mean,
+                             fp_repair_mean=repair_mean,
+                             fp_rng=seed + 7919 * (i * procs_per_farm + p),
+                             fp_left=n_bursts)
+            b.add_event(time=1 + (i * procs_per_farm + p) % lookahead,
+                        kind=FAIL_TICK, src=lp, dst=lp)
+            procs.append(lp)
+    for farm in farms[: n_farms if jobs_per_farm else 0]:
+        b.add_generator(target_lp=farm, kind=JOB_SUBMIT,
+                        payload=JOB_SUBMIT.pack(work=3.0, mem=1.0),
+                        interval=job_interval, count=jobs_per_farm)
+    t_end = (n_bursts + 2) * 8 * max(fail_mean, repair_mean)
+    built = b.build(n_agents=n_agents, lookahead=lookahead, t_end=t_end,
+                    pool_cap=pool_cap, **build_kw)
+    return built, dict(farms=farms, procs=procs)

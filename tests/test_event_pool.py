@@ -1,0 +1,272 @@
+"""Event-pool lifecycle subsystem (PR 5): free-list ring vs the scan reference.
+
+Unit coverage for the ring invariants (insert/release round trips, FIFO slot
+reuse, overflow accounting, wrap detection, canonical rebuild) plus the
+engine-level equivalence the tentpole claims: the ring fast path and the
+retained ``insert_ref`` scan path are *semantically identical* — same traces,
+same counters (modulo the ring-wrap diagnostic), same world bytes, same live
+pool events — and both match the sequential oracle. The hypothesis property
+``ring == ref == oracle`` runs under the CI jax matrix.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import t0t1_builder
+from repro.core import Engine, events as ev, merged_engine_trace, run_sequential
+from repro.core import monitoring as mon
+
+NON_RING = [i for i in range(mon.N_COUNTERS) if i not in mon.POOL_DIAG_COUNTERS]
+
+
+def rows(n, t0=5, seq0=0):
+    return [dict(time=t0 + i, seq=seq0 + i, kind=0, src=0, dst=0) for i in range(n)]
+
+
+def live_events(pool):
+    """The pool's live (time, seq) content, layout-independent."""
+    p = jax.tree.map(np.asarray, pool)
+    out = [
+        (int(p.time[i]), int(p.seq[i]), int(p.kind[i]), int(p.dst[i]))
+        for i in range(p.valid.shape[0])
+        if p.valid[i]
+    ]
+    return sorted(out)
+
+
+def check_ring_invariant(pool):
+    """Ring positions head..head+count-1 hold exactly the free slot ids."""
+    p = jax.tree.map(np.asarray, pool)
+    cap = p.valid.shape[0]
+    count = int(p.free_count)
+    assert count == cap - int(p.valid.sum())
+    idx = (int(p.free_head) + np.arange(count)) % cap
+    listed = sorted(int(s) for s in p.free_ring[idx])
+    assert listed == sorted(np.where(~p.valid)[0].tolist())
+    assert int(p.free_tail) == (int(p.free_head) + count) % cap
+
+
+# ---------------------------------------------------------------- unit: ring
+
+
+def test_insert_assigns_ring_slots_and_counts_drops():
+    pool = ev.empty_pool(8)
+    pool, d = ev.insert(pool, ev.batch_from_rows(rows(3)))
+    assert int(d) == 0
+    check_ring_invariant(pool)
+    np.testing.assert_array_equal(np.asarray(pool.valid), [1, 1, 1, 0, 0, 0, 0, 0])
+    # overflow: 8 more into 5 free slots -> 3 counted drops
+    pool, d = ev.insert(pool, ev.batch_from_rows(rows(8, t0=50, seq0=10)))
+    assert int(d) == 3
+    assert int(pool.free_count) == 0
+    check_ring_invariant(pool)
+
+
+def test_release_reuses_slots_fifo():
+    pool, _ = ev.insert(ev.empty_pool(8), ev.batch_from_rows(rows(8)))
+    slots = jnp.asarray([2, 5, 0], jnp.int32)
+    pool = ev.release(pool, slots, jnp.asarray([True, True, True]))
+    check_ring_invariant(pool)
+    assert int(ev.occupancy(pool)) == 5
+    # next inserts take the released slots in release order: 2, 5, 0
+    pool1, _ = ev.insert(pool, ev.batch_from_rows(rows(1, t0=90, seq0=90)))
+    new_slot = np.where(np.asarray(pool1.valid) & ~np.asarray(pool.valid))[0]
+    assert new_slot.tolist() == [2]
+    pool3, _ = ev.insert(pool, ev.batch_from_rows(rows(3, t0=90, seq0=90)))
+    check_ring_invariant(pool3)
+    assert np.asarray(pool3.valid).all()
+
+
+def test_release_mask_skips_rows():
+    pool, _ = ev.insert(ev.empty_pool(8), ev.batch_from_rows(rows(4)))
+    slots = jnp.asarray([1, 3], jnp.int32)
+    pool = ev.release(pool, slots, jnp.asarray([True, False]))
+    check_ring_invariant(pool)
+    np.testing.assert_array_equal(np.asarray(pool.valid), [1, 0, 1, 1, 0, 0, 0, 0])
+
+
+def test_ring_wrap_and_full_cycle():
+    """Churn a tiny pool far past cap: cursors wrap, invariant holds."""
+    pool, _ = ev.insert(ev.empty_pool(4), ev.batch_from_rows(rows(3)))
+    for i in range(7):
+        live = np.where(np.asarray(pool.valid))[0]
+        first = jnp.asarray(live[:1].astype(np.int32))
+        pool = ev.release(pool, first, jnp.asarray([True]))
+        batch = ev.batch_from_rows(rows(1, t0=100 + i, seq0=100 + i))
+        pool, d = ev.insert(pool, batch)
+        assert int(d) == 0
+        check_ring_invariant(pool)
+    assert int(ev.occupancy(pool)) == 3
+
+
+def test_rebuild_and_pop_mask_canonicalize():
+    pool, _ = ev.insert(ev.empty_pool(8), ev.batch_from_rows(rows(6)))
+    pool = ev.pop_mask(pool, jnp.asarray([1, 0, 1, 0, 1, 0, 0, 0], bool))
+    check_ring_invariant(pool)
+    assert int(pool.free_head) == 0  # canonical layout
+    # canonical order: freed slots ascending first
+    n_free = int(pool.free_count)
+    ring = np.asarray(pool.free_ring)[:n_free]
+    assert ring.tolist() == sorted(ring.tolist())
+
+
+def test_insert_ref_semantics_match_ring():
+    """Same events kept/dropped, same drop counts — only layout may differ."""
+    pool_a, _ = ev.insert(ev.empty_pool(8), ev.batch_from_rows(rows(5)))
+    pool_b, _ = ev.insert_ref(ev.empty_pool(8), ev.batch_from_rows(rows(5)))
+    batch = ev.batch_from_rows(rows(6, t0=40, seq0=40))
+    out_a, d_a = ev.insert(pool_a, batch)
+    out_b, d_b = ev.insert_ref(pool_b, batch)
+    assert int(d_a) == int(d_b) == 3
+    assert live_events(out_a) == live_events(out_b)
+    assert int(out_a.free_count) == int(out_b.free_count) == 0
+
+
+def test_occupancy_is_exact_on_every_path():
+    pool = ev.empty_pool(8)
+    assert int(ev.occupancy(pool)) == 0
+    pool, _ = ev.insert_ref(pool, ev.batch_from_rows(rows(5)))
+    assert int(ev.occupancy(pool)) == 5
+    pool = ev.pop_mask_ref(pool, jnp.asarray([1, 1, 0, 0, 0, 0, 0, 0], bool))
+    assert int(ev.occupancy(pool)) == 3
+
+
+# -------------------------------------------------------- ring_slots kernel
+
+
+def test_ring_slots_kernel_matches_reference():
+    from repro.kernels import ops
+    from repro.kernels.ref import ring_slots_ref
+
+    rng = np.random.RandomState(7)
+    for cap, n in [(64, 16), (128, 128), (1024, 100), (4096, 512)]:
+        ring = jnp.asarray(rng.permutation(cap).astype(np.int32))
+        head = jnp.int32(rng.randint(0, cap))
+        want = jnp.asarray(rng.rand(n) < 0.6)
+        got = np.asarray(ops.ring_slots(ring, head, want))
+        ref = np.asarray(ring_slots_ref(ring, head, want))
+        m = np.asarray(want)
+        np.testing.assert_array_equal(got[m], ref[m])
+
+
+def test_insert_with_kernel_slot_fn_is_identical():
+    from repro.kernels import ops
+
+    pool, _ = ev.insert(ev.empty_pool(64), ev.batch_from_rows(rows(20)))
+    seven = jnp.arange(7, dtype=jnp.int32)
+    pool = ev.release(pool, seven, jnp.ones((7,), bool))
+    batch = ev.batch_from_rows(rows(12, t0=70, seq0=70))
+    a, da = ev.insert(pool, batch)
+    b, db = ev.insert(pool, batch, slot_fn=ops.ring_slots)
+    assert int(da) == int(db)
+    for name, x, y in zip(a._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=name)
+
+
+# --------------------------------------------- engine: ring == ref == oracle
+
+
+def run_modes(world, own, init_ev, spec, max_windows=20000):
+    eng_ring = Engine(world, own, init_ev, spec, trace_cap=4096)
+    st_ring = eng_ring.run_local(max_windows=max_windows)
+    spec_ref = dataclasses.replace(spec, insert_mode="ref")
+    eng_ref = Engine(world, own, init_ev, spec_ref, trace_cap=4096)
+    st_ref = eng_ref.run_local(max_windows=max_windows)
+    return st_ring, st_ref
+
+
+def assert_ring_ref_oracle(built):
+    world, own, init_ev, spec = built
+    _ow, _oc, otrace = run_sequential(world, own, init_ev, spec)
+    st_ring, st_ref = run_modes(world, own, init_ev, spec)
+    tr_ring = merged_engine_trace(
+        np.asarray(st_ring.trace), np.asarray(st_ring.trace_n)
+    )
+    tr_ref = merged_engine_trace(np.asarray(st_ref.trace), np.asarray(st_ref.trace_n))
+    assert tr_ring == tr_ref == otrace
+    # world bytes + windows identical; counters identical modulo ring diag
+    for name, a, b in zip(st_ring.world._fields, st_ring.world, st_ref.world):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+    np.testing.assert_array_equal(
+        np.asarray(st_ring.windows), np.asarray(st_ref.windows)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st_ring.counters)[:, NON_RING],
+        np.asarray(st_ref.counters)[:, NON_RING],
+    )
+    # live pool content equal event-by-event (layout may differ)
+    n_agents = np.asarray(st_ring.pool.valid).shape[0]
+    for a in range(n_agents):
+        ring_live = live_events(jax.tree.map(lambda x: x[a], st_ring.pool))
+        ref_live = live_events(jax.tree.map(lambda x: x[a], st_ref.pool))
+        assert ring_live == ref_live
+
+
+@pytest.mark.parametrize("n_agents", [1, 2])
+def test_ring_matches_ref_and_oracle_t0t1(n_agents):
+    b, kw = t0t1_builder()
+    assert_ring_ref_oracle(b.build(n_agents=n_agents, **kw))
+
+
+def test_ring_under_spill_and_tiny_pool():
+    """Heavy churn in a small pool: slots recycle constantly, wraps occur."""
+    b, kw = t0t1_builder(n_flows=8, interval=9)
+    kw.update(pool_cap=32, exec_cap=2)
+    built = b.build(n_agents=1, **kw)
+    assert_ring_ref_oracle(built)
+    world, own, init_ev, spec = built
+    st = Engine(world, own, init_ev, spec, trace_cap=4096).run_local()
+    assert int(np.asarray(st.counters)[0, mon.C_RING_WRAP]) > 0
+
+
+def test_gauges_track_pool_levels():
+    b, kw = t0t1_builder()
+    world, own, init_ev, spec = b.build(n_agents=1, **kw)
+    eng = Engine(world, own, init_ev, spec)
+    st = eng.init_state()
+    st = eng.step_local(st)
+    c = np.asarray(st.counters)[0]
+    occ = int(np.asarray(st.pool.valid[0]).sum())
+    assert c[mon.C_POOL_OCC] == occ
+    assert c[mon.C_POOL_FREE] == spec.pool_cap - occ
+
+
+# ------------------------------------------------------ hypothesis property
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    pool_params = st.fixed_dictionaries(
+        dict(
+            bw=st.floats(0.25, 8.0),
+            count=st.integers(2, 12),
+            interval=st.integers(5, 40),
+            lookahead=st.integers(1, 4),
+            n_agents=st.sampled_from([1, 2]),
+            exec_cap=st.sampled_from([3, 17, 256]),
+            pool_cap=st.sampled_from([48, 256]),
+        )
+    )
+
+    @settings(max_examples=6, deadline=None)
+    @given(pool_params)
+    def test_ring_ref_oracle_property(p):
+        """The PR 5 acceptance property: ring == ref == oracle on randomized
+        seed scenarios (traces, counters, world bytes, live pool content)."""
+        b, kw = t0t1_builder(
+            wan_bw=p["bw"],
+            n_flows=p["count"],
+            interval=p["interval"],
+            lookahead=p["lookahead"],
+        )
+        kw.update(exec_cap=p["exec_cap"], pool_cap=p["pool_cap"])
+        assert_ring_ref_oracle(b.build(n_agents=p["n_agents"], **kw))

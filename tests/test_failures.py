@@ -1,0 +1,230 @@
+"""Failure/repair process LP (scenarios/failures.py) — the third zero-core-edit
+extension, and the proof of the PR 5 registry features riding along: extension
+kinds writing a *builtin* table under the delta contract, registry-declared
+monitoring counters, and int32 payload dtype views. The batched engine, the
+sequential engine path, and the heapq oracle must agree byte-for-byte.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Engine, merged_engine_trace, run_sequential
+from repro.core import monitoring as mon
+from repro.core.components import BUILTIN
+from repro.scenarios.failures import (
+    C_CPU_FAILS,
+    C_CPU_REPAIRS,
+    C_FAIL_BURSTS,
+    FAIL_REGISTRY,
+    build_failure_scenario,
+)
+
+NON_DIAG = [i for i in range(mon.N_COUNTERS) if i not in mon.BATCH_DIAG_COUNTERS]
+
+
+def run_pair(built, trace_cap=4096, max_windows=20000):
+    world, own, init_ev, spec = built
+    eng_b = Engine(world, own, init_ev, spec, trace_cap=trace_cap)
+    st_b = eng_b.run_local(max_windows=max_windows)
+    spec_s = dataclasses.replace(spec, batched_dispatch=False)
+    eng_s = Engine(world, own, init_ev, spec_s, trace_cap=trace_cap)
+    st_s = eng_s.run_local(max_windows=max_windows)
+    return st_b, st_s
+
+
+def trace_of(st):
+    return merged_engine_trace(np.asarray(st.trace), np.asarray(st.trace_n))
+
+
+def assert_identical(st_b, st_s):
+    np.testing.assert_array_equal(
+        np.asarray(st_b.counters)[:, NON_DIAG],
+        np.asarray(st_s.counters)[:, NON_DIAG],
+    )
+    # declared extension counters must agree across paths too
+    np.testing.assert_array_equal(
+        np.asarray(st_b.counters)[:, mon.N_COUNTERS :],
+        np.asarray(st_s.counters)[:, mon.N_COUNTERS :],
+    )
+    assert trace_of(st_b) == trace_of(st_s)
+    for name, a, b in zip(st_b.world._fields, st_b.world, st_s.world):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+
+def test_registry_extends_builtin_without_touching_it():
+    assert "fproc" in FAIL_REGISTRY.components
+    assert "fproc" not in BUILTIN.components  # zero core edits
+    assert FAIL_REGISTRY.n_kinds == BUILTIN.n_kinds + 3
+    assert FAIL_REGISTRY.kind_table[: BUILTIN.n_kinds] == BUILTIN.kind_table
+    # CPU_FAIL / CPU_REPAIR declare the *builtin* farm table
+    farm_id = BUILTIN.components["farm"].table_id
+    assert FAIL_REGISTRY.kind_table[BUILTIN.n_kinds + 1] == farm_id
+    assert FAIL_REGISTRY.kind_table[BUILTIN.n_kinds + 2] == farm_id
+    # declared counters extend the builtin vector
+    assert C_CPU_FAILS >= mon.N_COUNTERS
+    assert FAIL_REGISTRY.n_counters == mon.N_COUNTERS + 4
+    assert "CPU_FAILS" not in BUILTIN.counters
+
+
+def test_oversized_burst_is_rejected_or_counted():
+    """fp_burst beyond the emit slots: the builder refuses, and a directly
+    built oversized process counts its truncated failures."""
+    from repro.core import events as ev
+    from repro.scenarios.failures import (
+        C_FAIL_BURST_TRUNC,
+        FAIL_TICK,
+        FailureScenarioBuilder,
+    )
+
+    with pytest.raises(ValueError, match="BURST_TRUNC"):
+        build_failure_scenario(burst=ev.MAX_EMIT)
+    b = FailureScenarioBuilder(max_cpu=8)
+    farm = b.add_farm([1.0] * 8)
+    proc = b.add_fproc(
+        fp_target=farm,
+        fp_burst=ev.MAX_EMIT + 2,
+        fp_fail_mean=8,
+        fp_repair_mean=4,
+        fp_rng=1,
+        fp_left=2,
+    )
+    b.add_event(time=1, kind=FAIL_TICK, src=proc, dst=proc)
+    world, own, init_ev, spec = b.build(
+        n_agents=1, lookahead=1, t_end=400, pool_cap=64
+    )
+    st = Engine(world, own, init_ev, spec).run_local()
+    c = np.asarray(st.counters)[0]
+    assert c[C_FAIL_BURST_TRUNC] == 2 * 3  # 3 truncated per burst, 2 bursts
+    assert c[C_CPU_FAILS] == 2 * (ev.MAX_EMIT - 1)
+
+
+@pytest.mark.parametrize("n_agents", [1, 2])
+def test_failures_match_oracle(n_agents):
+    built, _ids = build_failure_scenario(
+        n_farms=4,
+        n_cpu=4,
+        burst=2,
+        n_bursts=4,
+        jobs_per_farm=3,
+        n_agents=n_agents,
+    )
+    world, own, init_ev, spec = built
+    ow, oc, otrace = run_sequential(world, own, init_ev, spec)
+    st_b, st_s = run_pair(built)
+    assert trace_of(st_b) == otrace
+    assert_identical(st_b, st_s)
+    w = jax.tree.map(lambda x: np.asarray(x[0]), st_b.world)
+    np.testing.assert_array_equal(np.asarray(ow.cpu_busy), w.cpu_busy)
+    np.testing.assert_array_equal(np.asarray(ow.fp_rng), w.fp_rng)
+    # declared counters count the same events as the oracle's run
+    c = np.asarray(st_b.counters).sum(axis=0)
+    oc = np.asarray(oc)
+    assert c[C_CPU_FAILS] == oc[C_CPU_FAILS] > 0
+    assert c[C_CPU_REPAIRS] == oc[C_CPU_REPAIRS] > 0
+    assert c[C_FAIL_BURSTS] == oc[C_FAIL_BURSTS] > 0
+    # every failure eventually repairs (t_end covers the repair tail)
+    assert c[C_CPU_REPAIRS] <= c[C_CPU_FAILS]
+
+
+def test_burst_on_one_farm_serializes_through_fallback():
+    """A burst > 1 on a single farm is a same-row collision group: the
+    conflict mask must route it through the sequential fallback."""
+    built, _ids = build_failure_scenario(n_farms=1, n_cpu=8, burst=3, n_bursts=3)
+    world, own, init_ev, spec = built
+    _ow, _oc, otrace = run_sequential(world, own, init_ev, spec)
+    st_b, st_s = run_pair(built)
+    c = np.asarray(st_b.counters)[0]
+    assert c[mon.C_BATCH_FALLBACK] > 0
+    assert trace_of(st_b) == otrace
+    assert_identical(st_b, st_s)
+
+
+def test_distinct_farms_batch_clean():
+    """One single-failure process per farm: distinct farm rows, no fallback
+    from the failure traffic itself (bursts of 1, staggered seeds)."""
+    built, _ids = build_failure_scenario(
+        n_farms=6, n_cpu=4, burst=1, n_bursts=2, lookahead=1
+    )
+    world, own, init_ev, spec = built
+    _ow, _oc, otrace = run_sequential(world, own, init_ev, spec)
+    st_b, _st_s = run_pair(built)
+    c = np.asarray(st_b.counters)[0]
+    assert c[mon.C_BATCH_EXEC] > 0
+    assert trace_of(st_b) == otrace
+
+
+def test_failed_cpu_queues_jobs_until_repair():
+    """A job submitted while the only CPU is down must queue, then start on
+    the repair's FIFO pop and complete — the failure actually bites."""
+    from repro.core.components import JOB_SUBMIT
+    from repro.scenarios.failures import FAIL_TICK, FailureScenarioBuilder
+
+    b = FailureScenarioBuilder(max_cpu=1, queue_cap=4)
+    farm = b.add_farm([1.0])
+    proc = b.add_fproc(
+        fp_target=farm,
+        fp_burst=1,
+        fp_fail_mean=4,
+        fp_repair_mean=60,
+        fp_rng=3,
+        fp_left=1,
+    )
+    b.add_event(time=1, kind=FAIL_TICK, src=proc, dst=proc)
+    # the job lands while the CPU is down (the fail fires at t=2)
+    b.add_event(
+        time=6,
+        kind=JOB_SUBMIT,
+        src=farm,
+        dst=farm,
+        payload=JOB_SUBMIT.pack(work=2.0, mem=1.0),
+    )
+    world, own, init_ev, spec = b.build(
+        n_agents=1, lookahead=1, t_end=1000, pool_cap=64
+    )
+    st = Engine(world, own, init_ev, spec, trace_cap=512).run_local()
+    c = np.asarray(st.counters)[0]
+    w = jax.tree.map(lambda x: np.asarray(x[0]), st.world)
+    _ow, _oc, otrace = run_sequential(world, own, init_ev, spec)
+    assert trace_of(st) == otrace
+    assert c[C_CPU_FAILS] == 1 and c[C_CPU_REPAIRS] == 1
+    # queued during the outage, completed after the repair popped it
+    assert c[mon.C_JOBS_SUBMITTED] == 1 and c[mon.C_JOBS_DONE] == 1
+    assert int(w.jobq_n[0]) == 0 and int(w.cpu_busy[0, 0]) == 0
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    fail_params = st.fixed_dictionaries(
+        dict(
+            n_farms=st.integers(1, 5),
+            n_cpu=st.sampled_from([2, 4, 8]),
+            procs_per_farm=st.integers(1, 2),
+            burst=st.integers(1, 3),
+            fail_mean=st.integers(4, 20),
+            repair_mean=st.integers(2, 12),
+            n_bursts=st.integers(1, 5),
+            jobs_per_farm=st.sampled_from([0, 3]),
+            seed=st.integers(0, 2**20),
+            n_agents=st.sampled_from([1, 2]),
+        )
+    )
+
+    @settings(max_examples=6, deadline=None)
+    @given(fail_params)
+    def test_failures_match_oracle_property(p):
+        """Randomized failure churn: batched == sequential == oracle."""
+        built, _ids = build_failure_scenario(**p)
+        world, own, init_ev, spec = built
+        _ow, _oc, otrace = run_sequential(world, own, init_ev, spec)
+        st_b, st_s = run_pair(built)
+        assert trace_of(st_b) == otrace
+        assert_identical(st_b, st_s)

@@ -36,7 +36,13 @@ from repro.core.components import (
     WorldOwnership,
     register_builtin_model,
 )
-from repro.core.registry import FieldSpec, PayloadSpec, Registry, RegistryError
+from repro.core.registry import (
+    FieldSpec,
+    PayloadSpec,
+    Registry,
+    RegistryError,
+    ScenarioBuilderBase,
+)
 from repro.scenarios.cache import (
     CACHE_LOOKUP,
     CACHE_REGISTRY,
@@ -267,10 +273,12 @@ def test_payload_spec_validation():
     with pytest.raises(RegistryError, match="duplicate payload field"):
         PayloadSpec("a", ("a", 1.0))
     p = PayloadSpec("size", ("lp", -1))
-    assert p.pack(size=3.0) == [3.0, -1.0]
+    np.testing.assert_array_equal(p.pack(size=3.0), [3.0, -1.0])
     with pytest.raises(RegistryError, match="unknown payload field"):
         p.pack(bogus=1.0)
     assert p.index("lp") == 1
+    with pytest.raises(RegistryError, match="float32 or int32"):
+        PayloadSpec(("x", 0, jnp.float64))
 
 
 def test_builder_row_validation():
@@ -312,6 +320,125 @@ def test_make_delta_enforces_the_delta_contract():
         reg.make_delta(world, "cache", 0, cache_hits=jnp.int32(1))
     with pytest.raises(RegistryError, match="unknown component"):
         reg.make_delta(world, "disk", 0)
+
+
+def test_counter_declaration_and_validation():
+    """Registry.counter: builtin seed + extension appends + validation."""
+    r = _mini_registry()
+    assert r.n_counters == mon.N_COUNTERS
+    assert r.counters["EVENTS"] == mon.C_EVENTS
+    idx = r.counter("BOX_PUTS", "puts served")
+    assert idx == mon.N_COUNTERS and r.counter_index("BOX_PUTS") == idx
+    with pytest.raises(RegistryError, match="duplicate counter"):
+        r.counter("BOX_PUTS")
+    with pytest.raises(RegistryError, match="duplicate counter"):
+        r.counter("EVENTS")  # builtin names are taken
+    with pytest.raises(RegistryError, match="identifier"):
+        r.counter("not a name")
+    with pytest.raises(RegistryError, match="unknown counter"):
+        r.counter_index("NOPE")
+    # extend() inherits declared counters; sealing closes declaration
+    child = r.extend()
+    assert child.counter_index("BOX_PUTS") == idx
+    r.world_struct()
+    with pytest.raises(RegistryError, match="sealed"):
+        r.counter("LATE")
+
+
+def test_cache_declared_counters_flow_through_engine_and_oracle():
+    """The outside-core cache counters (no monitoring.py edit) count the
+    same events in the engine (batched + sequential) and the oracle."""
+    from repro.scenarios.cache import C_CACHE_FILLS, C_CACHE_LOOKUPS
+
+    built, _caches = build_churn_scenario(
+        n_caches=4, n_keys=3, n_rounds=5, cache_ways=8
+    )
+    world, own, init_ev, spec = built
+    assert CACHE_REGISTRY.n_counters == mon.N_COUNTERS + 2
+    _ow, oc, _otrace = run_sequential(world, own, init_ev, spec)
+    st_b, st_s = run_cache_pair(built)
+    for st_x in (st_b, st_s):
+        c = np.asarray(st_x.counters)[0]
+        assert c.shape[0] == CACHE_REGISTRY.n_counters
+        assert c[C_CACHE_LOOKUPS] == 4 * 5  # one lookup per round
+        assert c[C_CACHE_FILLS] == 4 * 3  # one fill per cold miss
+    oc = np.asarray(oc)
+    assert oc[C_CACHE_LOOKUPS] == 20 and oc[C_CACHE_FILLS] == 12
+
+
+# ---------------------------------------------------------------------------
+# Payload dtype views: int columns survive the float32 lanes bit-exact
+# ---------------------------------------------------------------------------
+
+
+def test_payload_dtype_views_declaration():
+    p = PayloadSpec(("token", 0, jnp.int32), "size", ("lp", -1))
+    assert p.dtypes["token"] == jnp.dtype(jnp.int32)
+    assert p.dtypes["size"] == jnp.dtype(jnp.float32)
+    big = (1 << 31) - 1
+    row = p.pack(token=big, size=2.5)
+    assert row.dtype == np.float32
+    # bit-exact decode from the packed float lanes (host + traced)
+    assert int(np.asarray(p.get(jnp.asarray(row), "token"))) == big
+    np.testing.assert_allclose(np.asarray(p.get(jnp.asarray(row), "size")), 2.5)
+    row_j = p.pack_jax(token=jnp.int32(-123456789), size=1.0)
+    assert row_j.shape == (ev.PAYLOAD,)
+    assert int(np.asarray(p.get(row_j, "token"))) == -123456789
+
+
+def test_31bit_int_payload_survives_engine_and_oracle():
+    """The PR 5 acceptance test for dtype views: a 31-bit id — whose bit
+    pattern is a float32 NaN — rides an event payload through the builder,
+    the batched engine, routing, and the heapq oracle without losing a bit.
+    (Numerically, float32 would round any int above 2^24.)"""
+    reg = BUILTIN.extend()
+    reg.component(
+        "idsink",
+        fields=dict(
+            sink_token=FieldSpec((), jnp.int32, mutable=True),
+            sink_n=FieldSpec((), jnp.int32, mutable=True),
+        ),
+    )
+    payload = PayloadSpec(("token", 0, jnp.int32), "weight")
+    put = reg.kind("TOKEN_PUT", table="idsink", payload=payload)
+
+    @reg.on(put)
+    def h_token_put(env, world, counters, e):
+        s = world.lp_res[e.dst]
+        delta = env.delta(
+            world,
+            "idsink",
+            s,
+            sink_token=payload.get(e.payload, "token"),
+            sink_n=world.sink_n[s] + 1,
+        )
+        return delta, counters, hd.no_emits()
+
+    class B(ScenarioBuilderBase):
+        _registry = reg
+
+    tokens = [(1 << 31) - 1, 0x7F800001, 16777217, -5]
+    b = B()
+    sinks = [b.add_component("idsink") for _ in tokens]
+    for lp, tok in zip(sinks, tokens):
+        b.add_event(
+            time=1 + lp,
+            kind=put,
+            src=lp,
+            dst=lp,
+            payload=payload.pack(token=tok, weight=1.0),
+        )
+    world, own, init_ev, spec = b.build(
+        n_agents=2, lookahead=1, t_end=50, pool_cap=64
+    )
+    ow, _oc, otrace = run_sequential(world, own, init_ev, spec)
+    st = Engine(world, own, init_ev, spec, trace_cap=64).run_local()
+    w = jax.tree.map(lambda x: np.asarray(x[0]), st.world)
+    np.testing.assert_array_equal(w.sink_token, tokens)
+    np.testing.assert_array_equal(np.asarray(ow.sink_token), tokens)
+    np.testing.assert_array_equal(w.sink_n, 1)
+    trace = merged_engine_trace(np.asarray(st.trace), np.asarray(st.trace_n))
+    assert trace == otrace
 
 
 # ---------------------------------------------------------------------------

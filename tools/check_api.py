@@ -58,6 +58,20 @@ def check() -> list[str]:
         components.BUILTIN.sync_plan(),
         fresh.sync_plan(),
     )
+    # counter indices: the registry's builtin counter table must be exactly
+    # the monitoring C_* constants (Registry.__init__ seeds from
+    # monitoring.BUILTIN_COUNTERS; a drifted index would silently misattribute
+    # every stat an extension declares on top)
+    from repro.core import monitoring as mon
+
+    expect(
+        "builtin counter table",
+        {name: idx for name, idx in fresh.counters.items()},
+        {name: getattr(mon, f"C_{name}")
+         for name, _doc in mon.BUILTIN_COUNTERS},
+    )
+    expect("n_counters (builtin)", fresh.n_counters, mon.N_COUNTERS)
+
     kind_ids = {k.name: k.id for k in components.BUILTIN.kinds}
     expect("kind ids", {k.name: k.id for k in fresh.kinds}, kind_ids)
     for name, kid in kind_ids.items():
