@@ -27,6 +27,10 @@
                      entirely outside core (repro/scenarios/cache.py) running
                      through the registry-generated batched dispatch
                      (gated since PR 5)
+  shard_scaling    — PR 6 distributed scale-out: events/s at 64 packed agents
+                     on 4 forced host devices vs 1 (shard_map x vmap driver;
+                     subprocesses, trajectory entry — no gate on shared-CPU
+                     "devices")
   kernels          — µs/call for each Pallas kernel's XLA reference path
   workload_sim     — DESIGN.md §2: DES-predicted step time vs analytic roofline
 
@@ -553,6 +557,72 @@ def bench_cache_churn(pool_caps=(4096,), width=256, n_keys=4, lookahead=4):
              f"speedup={rates['batched'] / rates['sequential']:.2f}x")
 
 
+def bench_shard_scaling(n_agents=64, n_ticks=32, lookahead=2):
+    """Distributed scale-out: events/s at 64 packed agents, 4 host devices vs
+    1 (the shard_map x vmap driver; K = 16 vs 64 lanes per shard).
+
+    Each agent owns one idle LP with one NOOP per tick, so every conservative
+    window executes one event per agent — embarrassingly agent-parallel,
+    isolating the driver overheads (staged all_to_all + tuple-axis GVT
+    collective vs pure vmap lanes). Subprocesses, because the host device
+    count is fixed at jax import. Recorded as a baseline.json *trajectory*
+    entry, no gate: forced host devices share this container's CPU, so the
+    wall-clock ratio is hardware truth only on a real multi-device fleet.
+    """
+    import os
+    import subprocess
+    import sys
+
+    child = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + sys.argv[1])
+import json, time
+import numpy as np
+import jax
+from jax.sharding import Mesh
+from repro.core import Engine, ScenarioBuilder, events as ev
+from repro.core import monitoring as mon
+
+n_agents, n_ticks, lookahead = (int(a) for a in sys.argv[2:5])
+b = ScenarioBuilder(max_cpu=1, queue_cap=2, max_link=1, max_flow=2)
+lps = [b.add_idle_lp() for _ in range(n_agents)]
+for t in range(n_ticks):
+    for lp in lps:
+        b.add_event(time=1 + lookahead * t, kind=ev.K_NOOP, src=lp, dst=lp)
+built = b.build(n_agents=n_agents, lookahead=lookahead,
+                t_end=lookahead * (n_ticks + 1) + 2, pool_cap=n_ticks + 2,
+                emit_cap=8)
+eng = Engine(*built)
+mesh = Mesh(np.array(jax.devices()), ("agents",))
+jax.block_until_ready(eng.run_distributed(mesh).counters)   # compile
+t0 = time.perf_counter()
+st = eng.run_distributed(mesh)
+jax.block_until_ready(st.counters)
+dt = time.perf_counter() - t0
+c = np.asarray(st.counters)
+print(json.dumps({"events": int(c[:, mon.C_EVENTS].sum()), "s": dt,
+                  "windows": int(np.asarray(st.windows)[0])}))
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    res = {}
+    for nd in (1, 4):
+        out = subprocess.run(
+            [sys.executable, "-c", child, str(nd), str(n_agents),
+             str(n_ticks), str(lookahead)],
+            capture_output=True, text=True, env=env, timeout=900)
+        assert out.returncode == 0, out.stderr[-2000:]
+        res[nd] = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res[1]["events"] == res[4]["events"] == n_agents * n_ticks
+    eps = {nd: r["events"] / r["s"] for nd, r in res.items()}
+    emit("shard_scaling", res[4]["s"] * 1e6,
+         f"agents={n_agents};devices=4;events={res[4]['events']};"
+         f"windows={res[4]['windows']};events_s_d4={eps[4]:.0f};"
+         f"events_s_d1={eps[1]:.0f};speedup={eps[4] / eps[1]:.2f}")
+
+
 def bench_kernels():
     from repro.kernels import ops
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
@@ -657,6 +727,10 @@ def main() -> None:
                     help="also write results as machine-readable JSON "
                          "(uploaded from CI as the benchmark artifact and "
                          "checked by benchmarks/check_regression.py)")
+    ap.add_argument("--shard-scaling", action="store_true",
+                    help="also run the multi-device shard_scaling benchmark "
+                         "(subprocesses with forced host device counts; run "
+                         "by the dedicated distributed CI job)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.quick:
@@ -682,8 +756,11 @@ def main() -> None:
         bench_insert_churn()
         bench_adaptive_exec()
         bench_cache_churn()
+        bench_shard_scaling()
         bench_kernels()
         bench_workload_sim()
+    if args.shard_scaling and args.quick:
+        bench_shard_scaling()
     if args.json:
         write_json(args.json)
 

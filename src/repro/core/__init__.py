@@ -20,7 +20,8 @@ from repro.core.components import (BUILTIN, LPK_FARM, LPK_GEN, LPK_IDLE,
                                    LPK_NET, LPK_STORAGE, ScenarioBuilder,
                                    ScenarioSpec, World, WorldOwnership,
                                    sync_world)
-from repro.core.engine import AXIS, Engine, EngineState, lexsort_time_seq
+from repro.core.engine import (AXIS, Engine, EngineState, ShardAxes,
+                               lexsort_time_seq)
 from repro.core.handlers import WorldDelta
 from repro.core.policy import ExecPolicy
 from repro.core.oracle import merged_engine_trace, run_sequential
@@ -31,7 +32,8 @@ __all__ = [
     "AXIS", "BUILTIN", "Engine", "EngineState", "ExecPolicy", "FieldSpec",
     "LPK_FARM", "LPK_GEN", "LPK_IDLE", "LPK_NET", "LPK_STORAGE",
     "PayloadSpec", "Registry", "RegistryError", "ScenarioBuilder",
-    "ScenarioSpec", "World", "WorldDelta", "WorldOwnership", "events",
+    "ScenarioSpec", "ShardAxes", "World", "WorldDelta", "WorldOwnership",
+    "events",
     "handlers", "lexsort_time_seq", "merged_engine_trace", "monitoring",
     "network", "oracle", "policy", "registry", "registry_of",
     "run_sequential", "scheduler", "sync", "sync_world",

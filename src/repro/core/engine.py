@@ -59,7 +59,18 @@ never recompiles (docs/architecture.md, "Pool lifecycle").
 The same per-agent program runs under ``jax.vmap(axis_name='agents')`` (LocalComm:
 tests, benchmarks, single host) and under ``shard_map`` over a device mesh
 (CollectiveComm: production) — collectives are axis-name-polymorphic, so the two
-drivers are semantically identical by construction.
+drivers are semantically identical by construction. The distributed driver
+composes both: ``run_distributed`` packs ``K = ceil(n_agents / n_devices)``
+agents per device (``shard_map`` over the mesh axis x ``vmap`` over an
+in-shard lane axis — a :class:`ShardAxes` pair), so agent count is decoupled
+from device count (thousands of LPs on a 4-8 device mesh). Collectives then
+reduce over the (shard, lane) *tuple* — one fleet-global GVT/psum — and the
+routing all_to_all runs in two stages (shards, then lanes) whose flattened
+receive order equals the flat single-axis exchange's, keeping the distributed
+results byte-identical to ``run_local`` down to pool slot layouts.
+``run_distributed_adaptive`` is the per-shard analog of ``run_adaptive``:
+per-shard monitoring -> per-shard rung decision -> max-reduce so every shard
+stays in lockstep on one jit-cached window program.
 """
 from __future__ import annotations
 
@@ -91,6 +102,37 @@ else:  # pragma: no cover - exercised only on older jax
     _shard_map = functools.partial(_sm, check_rep=False)
 
 
+class ShardAxes(NamedTuple):
+    """The shard_map x vmap agent packing of ``run_distributed``.
+
+    ``shard`` names the 1-D mesh axis (``n_shards`` devices); ``lane`` names
+    the vmap axis inside each shard (``n_lanes`` agents packed per device).
+    The stacked state is laid out shard-major, so the global agent id is
+    ``lax.axis_index((shard, lane)) == shard_idx * n_lanes + lane_idx`` —
+    exactly the row index of the agent in the (A, ...) state. Collectives
+    that accept axis-name tuples (pmin/psum/axis_index) reduce over both
+    axes directly; all_gather/all_to_all do not, and are staged per axis
+    (monitoring.gather_counters, engine._route_and_insert)."""
+
+    shard: str
+    lane: str
+    n_shards: int
+    n_lanes: int
+
+    @property
+    def names(self) -> tuple[str, str]:
+        return (self.shard, self.lane)
+
+    @property
+    def size(self) -> int:
+        return self.n_shards * self.n_lanes
+
+
+def axis_names(axis: "str | ShardAxes | None"):
+    """The collective axis-name argument for an engine axis spec."""
+    return axis.names if isinstance(axis, ShardAxes) else axis
+
+
 def lexsort_time_seq(time_key: jax.Array, seq: jax.Array) -> jax.Array:
     """Stable (time, seq) sort permutation — the XLA reference for event_select."""
     perm = jnp.argsort(seq, stable=True)
@@ -102,6 +144,22 @@ def select_events_xla(time_key: jax.Array, seq: jax.Array,
                       exec_cap: int) -> jax.Array:
     """Compacted gather indices (sort + safe-prefix) — XLA default select_fn."""
     return lexsort_time_seq(time_key, seq)[:exec_cap]
+
+
+def route_rank_xla(dst_agent: jax.Array) -> jax.Array:
+    """Stable within-bucket routing ranks — the XLA default route_fn.
+
+    ``rank[i]`` counts earlier rows with the same destination bucket, so the
+    emit-routing pack scatters row i to flat slot ``dst * route_cap + rank``:
+    sort by bucket, rank within group, scatter back to input order. The
+    Pallas predecessor-count kernel (kernels.ops.route_rank) is the hookable
+    alternative; kernels.ref.route_rank_ref mirrors this exactly.
+    """
+    sperm = jnp.argsort(dst_agent, stable=True)
+    skey = dst_agent[sperm]
+    group_start = jnp.searchsorted(skey, skey, side="left")
+    rank_sorted = jnp.arange(skey.shape[0], dtype=jnp.int32) - group_start
+    return jnp.zeros_like(rank_sorted).at[sperm].set(rank_sorted)
 
 
 def group_by_kind_xla(kind: jax.Array, active: jax.Array,
@@ -143,7 +201,8 @@ class Engine:
                  select_fn: Callable[[jax.Array, jax.Array, int], jax.Array]
                  | None = None,
                  group_fn: Callable[[jax.Array, jax.Array], tuple]
-                 | None = None):
+                 | None = None,
+                 route_fn: Callable[[jax.Array], jax.Array] | None = None):
         self.world = world
         self.own = own
         self.init_events = init_events
@@ -162,6 +221,11 @@ class Engine:
         # kernel (kernels.ops.group_by_kind); default is the XLA argsort.
         self.group_fn = group_fn or functools.partial(
             group_by_kind_xla, n_kinds=self.registry.n_kinds)
+        # route_fn(dst_agent) -> stable within-bucket ranks: the emit-routing
+        # pack for the all_to_all exchange (and the migration re-home). Hook
+        # point for the Pallas predecessor-count kernel
+        # (kernels.ops.route_rank); default is the XLA sort-based rank.
+        self.route_fn = route_fn or route_rank_xla
         if spec.merge_mode not in ("delta", "dense"):
             raise ValueError(
                 f"spec.merge_mode must be 'delta' or 'dense', got "
@@ -219,17 +283,19 @@ class Engine:
         )
 
     # ------------------------------------------------------------- superstep
-    def _superstep(self, st: EngineState, axis: str | None,
+    def _superstep(self, st: EngineState, axis: "str | ShardAxes | None",
                    exec_cap: int | None = None) -> EngineState:
         """One conservative window. ``exec_cap`` overrides the spec's static
         width — the adaptive driver (``run_adaptive``) traces one program per
-        ladder rung through this hook."""
+        ladder rung through this hook. ``axis`` is the vmap axis name, a
+        :class:`ShardAxes` pair under the shard_map x vmap driver, or None
+        for a single agent."""
         spec = self.spec
         world, pool, counters = st.world, st.pool, st.counters
 
         # 1-2. GVT + safe mask (C2)
         lmin = sync.local_min_per_ctx(pool, spec.n_ctx)
-        gvt = sync.global_min(lmin, axis)
+        gvt = sync.global_min(lmin, axis_names(axis))
         horizon = sync.horizons(gvt, spec.lookahead, spec.t_end)
         done = sync.all_done(gvt, spec.t_end)
         safe = sync.safe_mask(pool, horizon)
@@ -275,7 +341,7 @@ class Engine:
         pool, counters = self._route_and_insert(world, pool, counters, emits, axis)
 
         # 7. replicated-state sync (C4) — field lists generated by the registry
-        world = self.registry.sync_world(world, self.own, axis)
+        world = self.registry.sync_world(world, self.own, axis_names(axis))
 
         # pool-lifecycle gauges: the occupancy/headroom signals the adaptive
         # exec policy reads (O(1) off the ring's free count in either mode)
@@ -479,9 +545,19 @@ class Engine:
         return pool2, counters, dropped
 
     def _route_and_insert(self, world: World, pool: ev.EventPool, counters,
-                          emits: ev.EventBatch, axis: str | None):
+                          emits: ev.EventBatch, axis: "str | ShardAxes | None",
+                          migrate: bool = False):
+        """Route a batch by destination agent, exchange, insert (steps 5-6).
+
+        ``migrate=True`` is the placement-migration flavor: it additionally
+        books shipped rows into C_MIGRATE_OUT (donor side, post route-cap —
+        route overflow stays C_DROP_ROUTE as everywhere) and received rows
+        into C_MIGRATE_IN (pre-insert), so ``sum(C_MIGRATE_OUT) ==
+        sum(C_MIGRATE_IN)`` holds globally and exactly; receiving-pool
+        overflow lands in C_DROP_POOL, never silent.
+        """
         spec = self.spec
-        A = spec.n_agents
+        A = axis.size if isinstance(axis, ShardAxes) else spec.n_agents
         if axis is None or A == 1:
             pool, counters, dropped = self._insert(pool, counters, emits)
             counters = mon.bump(counters, mon.C_DROP_POOL, dropped)
@@ -489,16 +565,12 @@ class Engine:
                                 jnp.sum(emits.valid.astype(jnp.int32)))
             return pool, counters
 
-        me = jax.lax.axis_index(axis)
+        me = jax.lax.axis_index(axis_names(axis))
         rcap = spec.route_cap
         dst_agent = jnp.where(emits.valid, world.lp_agent[emits.dst], A)
 
-        # stable bucket ranks: sort by agent, rank within group
-        sperm = jnp.argsort(dst_agent, stable=True)
-        skey = dst_agent[sperm]
-        group_start = jnp.searchsorted(skey, skey, side="left")
-        rank_sorted = jnp.arange(skey.shape[0], dtype=jnp.int32) - group_start
-        rank = jnp.zeros_like(rank_sorted).at[sperm].set(rank_sorted)
+        # stable bucket ranks (route_fn hook; default XLA sort-based rank)
+        rank = self.route_fn(dst_agent)
 
         ok = emits.valid & (rank < rcap)
         counters = mon.bump(counters, mon.C_DROP_ROUTE,
@@ -509,6 +581,10 @@ class Engine:
         counters = mon.bump(
             counters, mon.C_LP_LOCAL,
             jnp.sum((ok & (dst_agent == me)).astype(jnp.int32)))
+        if migrate:
+            counters = mon.bump(
+                counters, mon.C_MIGRATE_OUT,
+                jnp.sum((ok & (dst_agent != me)).astype(jnp.int32)))
 
         flat = jnp.where(ok, dst_agent * rcap + rank, A * rcap)  # OOB -> drop
 
@@ -517,33 +593,49 @@ class Engine:
             return buf.at[flat].set(col, mode="drop").reshape(
                 (A, rcap) + col.shape[1:])
 
-        b_time = scatter(emits.time, ev.T_INF)
-        b_seq = scatter(emits.seq, 0)
-        b_kind = scatter(emits.kind, 0)
-        b_src = scatter(emits.src, 0)
-        b_dst = scatter(emits.dst, 0)
-        b_ctx = scatter(emits.ctx, 0)
-        b_payload = scatter(emits.payload, 0.0)
-        b_valid = scatter(emits.valid, False)
+        if isinstance(axis, ShardAxes):
+            # all_to_all takes a single axis name, so the (shard x lane)
+            # exchange is staged: reshape the (A, rcap, ...) buffer to the
+            # shard-major (D, K, rcap, ...) packing, exchange shard blocks
+            # across the mesh, then lane blocks inside each shard. The
+            # flattened receive order is ascending global source agent —
+            # exactly the flat single-axis exchange's — so pool slot layouts
+            # (and hence traces/counters) stay byte-identical to run_local.
+            d, k = axis.n_shards, axis.n_lanes
 
-        a2a = functools.partial(jax.lax.all_to_all, axis_name=axis,
-                                split_axis=0, concat_axis=0)
+            def a2a(col):
+                x = col.reshape((d, k) + col.shape[1:])
+                x = jax.lax.all_to_all(x, axis.shard, split_axis=0,
+                                       concat_axis=0)
+                x = jax.lax.all_to_all(x, axis.lane, split_axis=1,
+                                       concat_axis=1)
+                return x.reshape(col.shape)
+        else:
+            a2a = functools.partial(jax.lax.all_to_all, axis_name=axis,
+                                    split_axis=0, concat_axis=0)
+
         rx = ev.EventBatch(
-            time=a2a(b_time).reshape(A * rcap),
-            seq=a2a(b_seq).reshape(A * rcap),
-            kind=a2a(b_kind).reshape(A * rcap),
-            src=a2a(b_src).reshape(A * rcap),
-            dst=a2a(b_dst).reshape(A * rcap),
-            ctx=a2a(b_ctx).reshape(A * rcap),
-            payload=a2a(b_payload).reshape(A * rcap, ev.PAYLOAD),
-            valid=a2a(b_valid).reshape(A * rcap),
+            time=a2a(scatter(emits.time, ev.T_INF)).reshape(A * rcap),
+            seq=a2a(scatter(emits.seq, 0)).reshape(A * rcap),
+            kind=a2a(scatter(emits.kind, 0)).reshape(A * rcap),
+            src=a2a(scatter(emits.src, 0)).reshape(A * rcap),
+            dst=a2a(scatter(emits.dst, 0)).reshape(A * rcap),
+            ctx=a2a(scatter(emits.ctx, 0)).reshape(A * rcap),
+            payload=a2a(scatter(emits.payload, 0.0)).reshape(A * rcap,
+                                                             ev.PAYLOAD),
+            valid=a2a(scatter(emits.valid, False)).reshape(A * rcap),
         )
+        if migrate:
+            # received rows counted before insert: out/in balance is exact,
+            # and any overflow below is a C_DROP_POOL, not a silent loss
+            counters = mon.bump(counters, mon.C_MIGRATE_IN,
+                                jnp.sum(rx.valid.astype(jnp.int32)))
         pool, counters, dropped = self._insert(pool, counters, rx)
         counters = mon.bump(counters, mon.C_DROP_POOL, dropped)
         return pool, counters
 
     # ------------------------------------------------------------------- run
-    def _run_fn(self, axis: str | None, max_windows: int):
+    def _run_fn(self, axis: "str | ShardAxes | None", max_windows: int):
         def cond(st: EngineState):
             return (~st.done) & (st.windows < max_windows)
 
@@ -555,9 +647,13 @@ class Engine:
 
         return run
 
-    def run_local(self, max_windows: int = 10_000, jit: bool = True) -> EngineState:
-        """Single-device multi-agent execution (vmap over the agents axis)."""
-        st = self.init_state()
+    def run_local(self, max_windows: int = 10_000, jit: bool = True,
+                  state: EngineState | None = None) -> EngineState:
+        """Single-device multi-agent execution (vmap over the agents axis).
+
+        ``state`` resumes from a prior EngineState (e.g. after a placement
+        migration) instead of ``init_state()``."""
+        st = self.init_state() if state is None else state
         key = ("run_local", max_windows, jit)
         fn = self._jit_cache.get(key)
         if fn is None:
@@ -568,41 +664,121 @@ class Engine:
             self._jit_cache[key] = fn
         return fn(st)
 
-    def run_distributed(self, mesh: Mesh, max_windows: int = 10_000) -> EngineState:
-        """shard_map execution: one simulation agent per device along 'agents'."""
-        st = self.init_state()
-        per_agent = self._run_fn(AXIS, max_windows)
+    # ------------------------------------------------------- distributed run
+    def _dist_axes(self, mesh: Mesh) -> ShardAxes:
+        """The shard x lane packing of a mesh: ``K = ceil(A / D)`` agents per
+        device, stacked state padded to ``D * K`` rows (shard-major)."""
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"run_distributed needs a 1-D mesh, got axes {mesh.axis_names}")
+        shard = mesh.axis_names[0]
+        d = int(mesh.devices.size)
+        k = -(-self.spec.n_agents // d)
+        lane = "lanes" if shard != "lanes" else "lanes2"
+        return ShardAxes(shard=shard, lane=lane, n_shards=d, n_lanes=k)
 
-        def shard_fn(s: EngineState):
-            # shard_map passes block-shaped (1, ...) operands; squeeze the axis.
-            s1 = jax.tree.map(lambda x: x[0], s)
-            out = per_agent(s1)
-            return jax.tree.map(lambda x: x[None], out)
+    def _pad_state(self, st: EngineState, a_pad: int) -> EngineState:
+        """Pad a stacked (A, ...) state to ``a_pad`` rows with inert agents.
 
-        fn = _shard_map(shard_fn, mesh=mesh, in_specs=P(AXIS),
-                        out_specs=P(AXIS))
-        return jax.jit(fn)(st)
+        Pad agents exist so ``A % n_devices != 0`` still packs into a
+        rectangular (D, K) layout. They must be *invisible*: an empty pool
+        contributes T_INF to GVT, an ``lp_agent`` row copied from agent 0
+        owns no LP at a pad index (all ``lp_agent`` values are real-agent
+        ids), so owner-wins sync and the routing exchange see only zeros from
+        them. Globally-uniform scalars (t_now/done/windows — and the
+        replicated world copy) are broadcast from row 0, NOT zeroed: every
+        row of the while_loop cond must stay uniform even when resuming from
+        a mid-run state, or the shards' collective counts diverge. Counters
+        and trace are zeroed (pad rows are sliced off before results are
+        returned, and all-zero rows are neutral in the max-reduced adaptive
+        stats).
+        """
+        n = a_pad - st.t_now.shape[0]
+        if n == 0:
+            return st
+        rep0 = lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (n,) + x.shape[1:])])
+        zero = lambda x: jnp.concatenate(
+            [x, jnp.zeros((n,) + x.shape[1:], x.dtype)])
+        epool = ev.empty_pool(self.spec.pool_cap)
+        pool = jax.tree.map(
+            lambda x, e: jnp.concatenate(
+                [x, jnp.broadcast_to(e[None], (n,) + e.shape)]),
+            st.pool, epool)
+        return EngineState(
+            world=jax.tree.map(rep0, st.world),
+            pool=pool,
+            counters=zero(st.counters),
+            t_now=rep0(st.t_now),
+            done=rep0(st.done),
+            windows=rep0(st.windows),
+            trace=zero(st.trace),
+            trace_n=zero(st.trace_n),
+        )
+
+    def _slice_state(self, st: EngineState) -> EngineState:
+        """Drop pad-agent rows: the real agents' (A, ...) state."""
+        A = self.spec.n_agents
+        if st.t_now.shape[0] == A:
+            return st
+        return jax.tree.map(lambda x: x[:A], st)
+
+    def _dist_run_fn(self, mesh: Mesh, axes: ShardAxes, max_windows: int):
+        key = ("run_distributed", mesh, max_windows)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            inner = jax.vmap(self._run_fn(axes, max_windows),
+                             axis_name=axes.lane)
+            fn = jax.jit(_shard_map(inner, mesh=mesh, in_specs=P(axes.shard),
+                                    out_specs=P(axes.shard)))
+            self._jit_cache[key] = fn
+        return fn
+
+    def run_distributed(self, mesh: Mesh, max_windows: int = 10_000,
+                        state: EngineState | None = None) -> EngineState:
+        """shard_map x vmap execution over a 1-D device mesh.
+
+        ``K = ceil(n_agents / n_devices)`` agents pack per device: shard_map
+        partitions the stacked (padded) state's leading axis over the mesh
+        and ``vmap`` runs the per-agent program over each shard's K-row
+        block, so agent count is decoupled from device count. Collectives
+        reduce over the (shard, lane) axis-name tuple (one fleet-global
+        GVT/psum) and the routing all_to_all is staged per axis with a
+        shard-major receive order — results are byte-identical to
+        ``run_local`` (down to pool slot layouts) and hence to the
+        sequential oracle. ``state`` resumes from a prior (unpadded)
+        EngineState."""
+        axes = self._dist_axes(mesh)
+        st = self._pad_state(self.init_state() if state is None else state,
+                             axes.size)
+        out = self._dist_run_fn(mesh, axes, max_windows)(st)
+        return self._slice_state(out)
 
     # -------------------------------------------------------------- migration
     def _apply_placement(self, st: EngineState, new_lp_agent: jax.Array,
-                         axis: str | None) -> EngineState:
+                         axis: "str | ShardAxes | None") -> EngineState:
         """Move LPs to a new placement (paper §4.1 dynamic decomposition).
 
         Component state is replicated (C4), so migration only (1) rewrites
-        ``lp_agent`` and (2) re-homes pending events whose destination LP moved —
-        one extra all_to_all, reusing the routing path.
+        ``lp_agent`` and (2) re-homes pending events whose destination LP
+        moved — one extra all_to_all, reusing the routing path with
+        ``migrate=True`` so shipped/received rows are booked into
+        C_MIGRATE_OUT / C_MIGRATE_IN (globally balanced; receiver overflow
+        is C_DROP_POOL). The donor pool is canonicalized by ``ev.pop_mask``'s
+        ring rebuild, so slot layout after a migration is a pure function of
+        the surviving events — identical across drivers.
         """
-        world = st.world._replace(lp_agent=new_lp_agent)
+        world = st.world._replace(lp_agent=jnp.asarray(new_lp_agent,
+                                                       jnp.int32))
         pool, counters = st.pool, st.counters
         if axis is None or self.spec.n_agents == 1:
             return st._replace(world=world)
-        me = jax.lax.axis_index(axis)
+        me = jax.lax.axis_index(axis_names(axis))
         moving = pool.valid & (world.lp_agent[pool.dst] != me)
-        emits = ev.EventBatch(time=pool.time, seq=pool.seq, kind=pool.kind,
-                              src=pool.src, dst=pool.dst, ctx=pool.ctx,
-                              payload=pool.payload, valid=moving)
+        emits = ev.extract(pool, moving)
         pool = ev.pop_mask(pool, moving)
-        pool, counters = self._route_and_insert(world, pool, counters, emits, axis)
+        pool, counters = self._route_and_insert(world, pool, counters, emits,
+                                                axis, migrate=True)
         return st._replace(world=world, pool=pool, counters=counters)
 
     def apply_placement_local(self, st: EngineState,
@@ -612,6 +788,29 @@ class Engine:
         fn = jax.vmap(lambda s: self._apply_placement(
             s, new_lp_agent, axis), axis_name=AXIS)
         return jax.jit(fn)(st)
+
+    def apply_placement_distributed(self, st: EngineState,
+                                    new_lp_agent: jax.Array,
+                                    mesh: Mesh) -> EngineState:
+        """shard_map x vmap driver for migration (cross-shard event re-home).
+
+        ``st`` is an unpadded (A, ...) state (e.g. a ``run_distributed``
+        result mid-run); ``new_lp_agent`` is fleet-global. Returns the
+        unpadded migrated state — byte-identical to
+        ``apply_placement_local`` on the same state."""
+        axes = self._dist_axes(mesh)
+        key = ("dist_placement", mesh)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            inner = jax.vmap(
+                lambda s, nla: self._apply_placement(s, nla, axes),
+                in_axes=(0, None), axis_name=axes.lane)
+            fn = jax.jit(_shard_map(inner, mesh=mesh,
+                                    in_specs=(P(axes.shard), P()),
+                                    out_specs=P(axes.shard)))
+            self._jit_cache[key] = fn
+        return self._slice_state(fn(self._pad_state(st, axes.size),
+                                    new_lp_agent))
 
     def step_local(self, st: EngineState) -> EngineState:
         """One conservative window (vmap driver) — used by tests and benchmarks."""
@@ -640,8 +839,8 @@ class Engine:
         return fn
 
     def run_adaptive(self, max_windows: int = 10_000,
-                     policy: "pol.ExecPolicy | int | None" = None
-                     ) -> EngineState:
+                     policy: "pol.ExecPolicy | int | None" = None,
+                     state: EngineState | None = None) -> EngineState:
         """Monitoring-driven execution (vmap driver): the per-window LISA
         loop of core/policy.py.
 
@@ -655,10 +854,11 @@ class Engine:
         changes. The rung trajectory lands in ``self.adaptive_rungs``.
 
         ``policy`` overrides ``spec.exec_policy`` (a bare int means a
-        single-rung ladder, i.e. the static behavior).
+        single-rung ladder, i.e. the static behavior); ``state`` resumes
+        from a prior EngineState.
         """
         p = pol.normalize(self.spec.exec_policy if policy is None else policy)
-        st = self.init_state()
+        st = self.init_state() if state is None else state
         rung = p.init_rung
         prev = np.asarray(st.counters)
         rungs: list[int] = []
@@ -673,3 +873,58 @@ class Engine:
             prev = cur
         self.adaptive_rungs = tuple(rungs)
         return st
+
+    def _dist_window_fn(self, mesh: Mesh, width: int):
+        """One jitted shard_map x vmap window program at a fixed exec width
+        (cached per (mesh, rung) — lockstep adaptation recompiles nothing
+        after each rung's first use)."""
+        key = ("dist_window", mesh, width)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            axes = self._dist_axes(mesh)
+            inner = jax.vmap(
+                lambda s: self._superstep(s, axes, exec_cap=width),
+                axis_name=axes.lane)
+            fn = jax.jit(_shard_map(inner, mesh=mesh, in_specs=P(axes.shard),
+                                    out_specs=P(axes.shard)))
+            self._jit_cache[key] = fn
+        return fn
+
+    def run_distributed_adaptive(self, mesh: Mesh, max_windows: int = 10_000,
+                                 policy: "pol.ExecPolicy | int | None" = None,
+                                 state: EngineState | None = None
+                                 ) -> EngineState:
+        """Monitoring-driven distributed execution: ``run_adaptive``'s LISA
+        loop over the shard_map x vmap driver.
+
+        Each window runs the jit-cached program of the current rung on every
+        shard (the collectives inside a window are fleet-wide, so all shards
+        must trace the same width). The host then reads per-shard
+        :func:`pol.shard_window_stats` off the free ring's O(1) occupancy
+        gauges, decides a rung per shard, and max-reduces the decisions
+        (:func:`pol.choose_rung_lockstep`) — the hottest shard sets the
+        fleet's width. Because every ``choose_rung`` condition is monotone in
+        the max-reduced stats, the lockstep rung trajectory is byte-identical
+        to ``run_adaptive``'s on the same scenario, and exactness is
+        unconditional (spilling is oracle-exact for any width sequence). The
+        trajectory lands in ``self.adaptive_rungs``."""
+        p = pol.normalize(self.spec.exec_policy if policy is None else policy)
+        axes = self._dist_axes(mesh)
+        A = self.spec.n_agents
+        st = self._pad_state(self.init_state() if state is None else state,
+                             axes.size)
+        rung = p.init_rung
+        prev = np.asarray(st.counters)
+        rungs: list[int] = []
+        for _ in range(max_windows):
+            if bool(np.asarray(st.done)[:A].all()):
+                break
+            rungs.append(rung)
+            st = self._dist_window_fn(mesh, p.ladder[rung])(st)
+            cur = np.asarray(st.counters)
+            stats = pol.shard_window_stats(prev, cur, self.spec.pool_cap,
+                                           axes.n_shards)
+            rung = pol.choose_rung_lockstep(p, rung, stats)
+            prev = cur
+        self.adaptive_rungs = tuple(rungs)
+        return self._slice_state(st)

@@ -368,6 +368,18 @@ def compact_batch(batch: EventBatch, cap: int):
     return out, n_valid, n_valid - n_kept
 
 
+def extract(pool: EventPool, mask: jax.Array) -> EventBatch:
+    """Pool rows as a routable batch: valid exactly where live and masked.
+
+    The donor half of event migration (engine ``_apply_placement``): extract
+    the moving rows, ``pop_mask`` them out (which canonicalizes the ring via
+    ``rebuild_ring``), and hand the batch to the routing exchange. Rows stay
+    in slot order, so the receiving inserts are deterministic."""
+    return EventBatch(time=pool.time, seq=pool.seq, kind=pool.kind,
+                      src=pool.src, dst=pool.dst, ctx=pool.ctx,
+                      payload=pool.payload, valid=pool.valid & mask)
+
+
 def pop_mask(pool: EventPool, mask: jax.Array) -> EventPool:
     """Invalidate ``mask``-ed slots and canonicalize the free ring.
 

@@ -44,7 +44,13 @@ C_TRACE_DROP = 22     # trace records lost to the fixed-cap trace buffer; any
 C_RING_WRAP = 23      # free-ring cursor wraps (head on insert, tail on release)
 C_POOL_OCC = 24       # GAUGE: live pool slots at window end (occupancy)
 C_POOL_FREE = 25      # GAUGE: free pool slots at window end (insert headroom)
-N_COUNTERS = 26
+C_MIGRATE_OUT = 26    # pending events shipped to another agent by placement
+                      # migration (post route-cap; route overflow is
+                      # C_DROP_ROUTE as everywhere)
+C_MIGRATE_IN = 27     # migrated events received from another agent (counted
+                      # pre-insert, so sum(out) == sum(in) globally; receiving
+                      # pool overflow lands in C_DROP_POOL, never silent)
+N_COUNTERS = 28
 
 DROP_COUNTERS = (C_DROP_POOL, C_DROP_ROUTE, C_DROP_FLOW, C_DROP_QUEUE)
 
@@ -91,6 +97,8 @@ BUILTIN_COUNTERS = (
     ("RING_WRAP", "free-ring cursor wraps (head on insert, tail on release)"),
     ("POOL_OCC", "GAUGE: live pool slots at window end"),
     ("POOL_FREE", "GAUGE: free pool slots at window end"),
+    ("MIGRATE_OUT", "pending events shipped to another agent by migration"),
+    ("MIGRATE_IN", "migrated events received from another agent"),
 )
 assert len(BUILTIN_COUNTERS) == N_COUNTERS
 
@@ -118,10 +126,22 @@ def gauge(counters: jax.Array, idx: int, value) -> jax.Array:
     return counters.at[idx].set(jnp.asarray(value, jnp.int32))
 
 
-def gather_counters(counters: jax.Array, axis: str | None) -> jax.Array:
-    """(A, N_COUNTERS) fleet view (identity reshape when single-agent)."""
+def gather_counters(counters: jax.Array,
+                    axis: str | tuple[str, ...] | None) -> jax.Array:
+    """(A, N_COUNTERS) fleet view (identity reshape when single-agent).
+
+    ``axis`` may be a (shard, lane) tuple for the shard_map x vmap driver
+    (engine.ShardAxes agent packing): ``all_gather`` rejects mixed-axis
+    tuples, so the gather is staged innermost-first — lanes, then shards —
+    which flattens to the shard-major global agent order (== the global
+    agent id ``lax.axis_index((shard, lane))`` yields)."""
     if axis is None:
         return counters[None]
+    if isinstance(axis, (tuple, list)):
+        out = counters
+        for name in reversed(axis):
+            out = jax.lax.all_gather(out, name)
+        return out.reshape((-1,) + counters.shape)
     return jax.lax.all_gather(counters, axis)
 
 

@@ -126,6 +126,22 @@ def window_stats(prev_counters, counters, pool_cap: int) -> WindowStats:
     )
 
 
+def shard_window_stats(prev_counters, counters, pool_cap: int,
+                       n_shards: int) -> tuple[WindowStats, ...]:
+    """Per-shard :class:`WindowStats` from two (A, N) counter snapshots.
+
+    Agents are packed shard-major (``A == n_shards * n_lanes``, the engine's
+    shard_map x vmap layout), so shard d owns the contiguous row block
+    ``[d*K, (d+1)*K)``. Each shard's stats are the max over its own lanes —
+    the per-shard analog of :func:`window_stats`."""
+    prev = np.asarray(prev_counters)
+    cur = np.asarray(counters)
+    k = prev.shape[0] // n_shards
+    return tuple(
+        window_stats(prev[d * k:(d + 1) * k], cur[d * k:(d + 1) * k], pool_cap)
+        for d in range(n_shards))
+
+
 def choose_rung(policy: ExecPolicy, rung: int, stats: WindowStats) -> int:
     """The next window's ladder rung (pure, host-side, deterministic)."""
     width = policy.ladder[rung]
@@ -142,3 +158,19 @@ def choose_rung(policy: ExecPolicy, rung: int, stats: WindowStats) -> int:
         if sparse:
             return rung - 1
     return rung
+
+
+def choose_rung_lockstep(policy: ExecPolicy, rung: int,
+                         shard_stats: tuple[WindowStats, ...]) -> int:
+    """The distributed next rung: max over per-shard decisions.
+
+    Every shard must run the same jit-cached window program (the collectives
+    inside a window are fleet-wide), so per-shard width choices reduce via
+    max — the hottest shard sets the fleet's width, exactly as
+    :func:`window_stats`'s max-over-agents does for the vmap driver. The two
+    formulations are equivalent: every :func:`choose_rung` condition is
+    monotone in (spilled, occupancy, processed, rows), so
+    ``max_d choose_rung(stats_d) == choose_rung(max_d stats_d)`` — the
+    distributed rung trajectory is byte-identical to ``run_adaptive``'s.
+    """
+    return max(choose_rung(policy, rung, s) for s in shard_stats)

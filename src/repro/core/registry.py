@@ -645,7 +645,7 @@ class Registry:
                 getattr(delta, f), mode="drop")
             for f, rf in self.delta_schema.items()})
 
-    def sync_world(self, world, own, axis: str | None):
+    def sync_world(self, world, own, axis: str | tuple[str, ...] | None):
         """Owner-wins replication sync generated from the field specs.
 
         Mutable fields all-reduce ``where(mine, row, 0)`` with their owning

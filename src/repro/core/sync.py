@@ -36,8 +36,12 @@ def local_min_per_ctx(pool: ev.EventPool, n_ctx: int) -> jax.Array:
     return ev.min_pending_time_per_ctx(pool, n_ctx)
 
 
-def global_min(x: jax.Array, axis: str | None) -> jax.Array:
-    """All-reduce min across agents — the collective null-message exchange."""
+def global_min(x: jax.Array, axis: str | tuple[str, ...] | None) -> jax.Array:
+    """All-reduce min across agents — the collective null-message exchange.
+
+    ``axis`` may be a tuple of axis names for the shard_map x vmap driver
+    (mesh shard axis + in-shard lane axis): ``pmin`` reduces over both in one
+    collective, so GVT is global across every packed agent."""
     if axis is None:
         return x
     return jax.lax.pmin(x, axis)

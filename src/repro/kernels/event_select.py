@@ -245,6 +245,57 @@ def ring_slots(free_ring: jax.Array, head: jax.Array, want: jax.Array, *,
     return out[0, :nb]
 
 
+def _route_rank_kernel(dst_ref, rank_ref, *, n: int, chunk: int):
+    """Within-bucket routing ranks: chunked predecessor-count, all in VMEM.
+
+    rank[i] counts earlier rows with the same destination bucket — exactly
+    the stable bucket rank of the emit-routing pack. The count is a chunked
+    (n, chunk) equality compare + masked sum over the row axis (the same
+    one-hot trick as the ring-slot gather), so no sort and no dynamic
+    gather is needed on the VPU.
+    """
+    dst = dst_ref[0]                       # (n,)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)[0]
+    acc = jnp.zeros((n,), jnp.int32)
+    jd0 = jax.lax.broadcasted_iota(jnp.int32, (n, chunk), 1)
+    for c in range(0, n, chunk):
+        jdx = jd0 + jnp.int32(c)
+        seg = dst_ref[0, c:c + chunk]      # (chunk,) static slice
+        eq = (dst[:, None] == seg[None, :]) & (jdx < pos[:, None])
+        acc = acc + jnp.sum(eq.astype(jnp.int32), axis=1)
+    rank_ref[0] = acc
+
+
+def route_rank(dst_agent: jax.Array, *, interpret=False):
+    """(n,) destination buckets -> (n,) stable within-bucket ranks.
+
+    The emit-routing pack of the engine's all_to_all exchange (step 5 and the
+    migration re-home): row i's slot in the (n_agents, route_cap) scatter
+    buffer is ``dst_agent[i] * route_cap + rank[i]``. Matches
+    ``kernels.ref.route_rank_ref`` exactly on every row (invalid rows carry a
+    sentinel bucket and rank like any other bucket — the engine masks them).
+    """
+    nb = dst_agent.shape[0]
+    n = 1 << max((nb - 1).bit_length(), 1)
+    chunk = min(n, 512)
+    # pad rows with per-row distinct sentinels so they never contaminate a
+    # real bucket's count (ranks beyond nb are discarded anyway)
+    pad_ids = -jnp.arange(1, n - nb + 1, dtype=jnp.int32)
+    dpad = jnp.concatenate(
+        [dst_agent.astype(jnp.int32), pad_ids])[None] if n > nb else (
+        dst_agent.astype(jnp.int32)[None])
+    kernel = functools.partial(_route_rank_kernel, n=n, chunk=chunk)
+    rank = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.int32),
+        interpret=interpret,
+    )(dpad)
+    return rank[0, :nb]
+
+
 def group_by_kind(kind: jax.Array, active: jax.Array, n_kinds: int, *,
                   interpret=False):
     """Same-kind grouping for the engine's batched dispatch (step 4).

@@ -85,6 +85,19 @@ def ring_slots(free_ring, head, want):
 
 
 @jax.jit
+def route_rank(dst_agent):
+    """(n,) destination buckets -> (n,) stable within-bucket ranks.
+
+    The emit-routing pack for the engine's all_to_all exchange (and the
+    migration re-home): flat scatter slot = ``dst * route_cap + rank``. Hook
+    it into the engine with ``Engine(..., route_fn=ops.route_rank)``; the
+    default XLA path (engine.route_rank_xla == kernels.ref.route_rank_ref)
+    is the reference the tests sweep against.
+    """
+    return _es.route_rank(dst_agent, interpret=_interpret())
+
+
+@jax.jit
 def maxmin_rates(inc, bw, active):
     """(F, L), (L,), (F,) -> (F,) max-min fair rates."""
     return _bw.maxmin_rates_pallas(inc, bw, active, interpret=_interpret())

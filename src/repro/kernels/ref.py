@@ -56,6 +56,17 @@ def ring_slots_ref(free_ring: jax.Array, head: jax.Array,
     return free_ring[(jnp.asarray(head, jnp.int32) + rank) % cap]
 
 
+def route_rank_ref(dst_agent: jax.Array) -> jax.Array:
+    """Stable within-bucket routing ranks — XLA reference for
+    kernels.event_select.route_rank (the emit-routing pack inside
+    engine._route_and_insert): rank[i] = |{j < i : dst_agent[j] == dst_agent[i]}|."""
+    sperm = jnp.argsort(dst_agent, stable=True)
+    skey = dst_agent[sperm]
+    group_start = jnp.searchsorted(skey, skey, side="left")
+    rank_sorted = jnp.arange(skey.shape[0], dtype=jnp.int32) - group_start
+    return jnp.zeros_like(rank_sorted).at[sperm].set(rank_sorted)
+
+
 def group_by_kind_ref(kind: jax.Array, active: jax.Array, n_kinds: int):
     """Same-kind grouping (order, rank, counts) — XLA reference for
     kernels.event_select.group_by_kind; mirror of engine.group_by_kind_xla."""

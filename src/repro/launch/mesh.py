@@ -28,6 +28,17 @@ def make_test_mesh(n_devices: int | None = None, model: int = 2):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_sim_mesh(n_devices: int | None = None, axis: str = "agents"):
+    """1-D mesh for the DES engine's scale-out driver.
+
+    ``Engine.run_distributed`` composes shard_map over this axis with vmap
+    inside each shard, packing ceil(n_agents / n_devices) agent rows per
+    device — so any agent count works on any device count; the axis only has
+    to be 1-D (the engine splits it internally into (shard, lane))."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), (axis,))
+
+
 # Hardware constants (TPU v5e) used by the roofline analysis.
 PEAK_FLOPS_BF16 = 197e12     # per chip
 HBM_BW = 819e9               # bytes/s per chip

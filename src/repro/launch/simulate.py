@@ -3,8 +3,12 @@
 Modes:
   t0t1       reproduce the paper's §3.1 CERN study (bandwidth sweep)
   workload   simulate a training cell from a dry-run roofline JSON
-  distributed run the T0/T1 scenario under shard_map (needs >1 device:
-             XLA_FLAGS=--xla_force_host_platform_device_count=8)
+  distributed run the T0/T1 scenario under the shard_map x vmap scale-out
+             driver (needs >1 device:
+             XLA_FLAGS=--xla_force_host_platform_device_count=8);
+             --agents-per-device packs multiple agent rows per shard,
+             --migrate demos cross-shard event migration, --adaptive-exec
+             runs the lockstep per-shard width ladder
 """
 from __future__ import annotations
 
@@ -95,12 +99,13 @@ def run_distributed(args):
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=8")
     import jax
-    from jax.sharding import Mesh
     from repro.core import Engine, ScenarioBuilder
     from repro.core import monitoring as mon
     from repro.core.components import DATA_WRITE, FLOW_START, JOB_SUBMIT
+    from repro.launch.mesh import make_sim_mesh
 
-    n = min(len(jax.devices()), 8)
+    n_dev = min(len(jax.devices()), 8)
+    n = n_dev * args.agents_per_device
     b = ScenarioBuilder(max_cpu=4, queue_cap=16, max_link=4, max_flow=32)
     t0 = b.add_regional_center(n_cpu=2, cpu_power=10.0, disk=2000.0,
                                tape=20000.0, tape_rate=5.0)
@@ -113,20 +118,45 @@ def run_distributed(args):
                         notify_kind=JOB_SUBMIT.id, notify2_lp=t1["storage"],
                         notify2_kind=DATA_WRITE.id),
                     interval=15, count=24)
+    pool_cap = 512
     world, own, init_ev, spec = b.build(n_agents=n, lookahead=2,
-                                        t_end=100_000, pool_cap=512,
-                                        exec_cap=args.exec_cap,
+                                        t_end=100_000, pool_cap=pool_cap,
                                         work_per_mb=2.0,
                                         batched_dispatch=args.batched_dispatch,
                                         merge_mode=args.merge_mode,
-                                        insert_mode=args.insert_mode)
+                                        insert_mode=args.insert_mode,
+                                        **_exec_policy_args(args, pool_cap))
     eng = Engine(world, own, init_ev, spec)
-    mesh = Mesh(np.array(jax.devices()[:n]), ("agents",))
-    st = eng.run_distributed(mesh, max_windows=200_000)
+    mesh = make_sim_mesh(n_dev)
+    state = None
+    if args.migrate and n > 1:
+        # cross-shard migration demo: move the agent holding the seeded
+        # events (the generator LP's owner) to the opposite end of the fleet
+        # so its pool ships through the all_to_all path, then continue from
+        # the migrated state
+        st0 = eng.init_state()
+        la = np.asarray(st0.world.lp_agent[0])
+        src = int(np.asarray(st0.pool.valid).sum(axis=1).argmax())
+        dst = 0 if src != 0 else n - 1
+        new_la = np.where(la == src, dst,
+                          np.where(la == dst, src, la)).astype(np.int32)
+        state = eng.apply_placement_distributed(st0, new_la, mesh)
+    if args.adaptive_exec:
+        st = eng.run_distributed_adaptive(mesh, max_windows=200_000,
+                                          state=state)
+    else:
+        st = eng.run_distributed(mesh, max_windows=200_000, state=state)
     c = np.asarray(st.counters).sum(axis=0)
-    print(f"[distributed] agents={n} events={int(c[mon.C_EVENTS])} "
+    extra = ""
+    if args.migrate:
+        extra = (f" migrate_out={int(c[mon.C_MIGRATE_OUT])}"
+                 f" migrate_in={int(c[mon.C_MIGRATE_IN])}")
+    if args.adaptive_exec:
+        extra += f" rungs={sorted(set(eng.adaptive_rungs))}"
+    print(f"[distributed] agents={n} devices={n_dev} "
+          f"events={int(c[mon.C_EVENTS])} "
           f"windows={int(np.asarray(st.windows)[0])} "
-          f"remote_msgs={int(c[mon.C_MSGS_REMOTE])}")
+          f"remote_msgs={int(c[mon.C_MSGS_REMOTE])}" + extra)
 
 
 def main():
@@ -163,6 +193,22 @@ def main():
     p2.add_argument("--cell", default="")
     p2.add_argument("--limit", type=int, default=5)
     p3 = sub.add_parser("distributed")
+    p3.add_argument("--agents-per-device", type=int, default=2,
+                    help="agent rows vmapped inside each shard (total agents "
+                         "= devices x this; the engine pads internally, so "
+                         "uneven packings also work via the API)")
+    p3.add_argument("--migrate", action="store_true",
+                    help="demo cross-shard event migration: swap the first "
+                         "and last agents' LP placements through the "
+                         "all_to_all freight path before running, and report "
+                         "MIGRATE_OUT/MIGRATE_IN")
+    p3.add_argument("--adaptive-exec", action="store_true",
+                    help="lockstep monitoring-driven per-shard exec width "
+                         "(Engine.run_distributed_adaptive) instead of a "
+                         "static exec_cap")
+    p3.add_argument("--exec-ladder", type=int, nargs="+", default=None,
+                    help="explicit width ladder for --adaptive-exec "
+                         "(default: policy.default_ladder(pool_cap))")
     p3.add_argument("--exec-cap", type=int, default=None,
                     help="per-window compacted execution cap "
                          "(default min(pool_cap, 256))")

@@ -1,0 +1,106 @@
+"""Shared subprocess scaffolding for multi-device distributed tests.
+
+The real collective path (``lax.pmin`` / staged ``all_to_all`` under
+``shard_map``) needs more than one device, and this container has one CPU; a
+fresh interpreter with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+set *before* jax imports is the only way to get an N-device fleet. Every
+distributed test therefore ships a small script to a child process and reads
+one JSON line back. This module is that plumbing, shared by
+``test_distributed.py`` (hypothesis property) and
+``test_distributed_scale.py`` (deterministic scenarios) so each test is just
+its body.
+
+``HEADER`` gives child scripts a common prelude: the forced device count, the
+usual imports, and ``t0t1_build`` — the two-regional-centers + WAN scenario
+(paper fig 1) every oracle-equivalence test runs, parameterized enough to
+reach the interesting regimes (agent counts not divisible by the device
+count, mixed generators, spill-inducing pool caps).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+N_DEVICES = 4
+
+HEADER = """\
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+import json
+import numpy as np
+import jax
+from jax.sharding import Mesh
+from repro.core import Engine, ScenarioBuilder, events as ev, \\
+    merged_engine_trace, run_sequential
+from repro.core import monitoring as mon
+from repro.core.policy import ExecPolicy
+
+N_DEVICES = {n}
+
+
+def t0t1_build(n_agents, *, pool_cap=256, n_flows=12, interval=25,
+               flow_mb=40.0, lookahead=2, t_end=5000, second_gen=False,
+               exec_policy=None):
+    b = ScenarioBuilder(max_cpu=4, queue_cap=8, max_link=4, max_flow=16)
+    t0 = b.add_regional_center(n_cpu=2, cpu_power=10.0, disk=500.0,
+                               tape=5000.0, tape_rate=5.0)
+    t1 = b.add_regional_center(n_cpu=2, cpu_power=8.0, disk=300.0,
+                               tape=3000.0, tape_rate=5.0)
+    wan = b.add_net_region(link_bws=[2.0, 2.0], link_lats=[5, 5])
+    b.add_generator(target_lp=wan, kind=ev.K_FLOW_START,
+                    payload=[flow_mb, 0, -1, -1, t1["farm"], ev.K_JOB_SUBMIT,
+                             t1["storage"], ev.K_DATA_WRITE],
+                    interval=interval, count=n_flows, start=0)
+    if second_gen:
+        b.add_generator(target_lp=wan, kind=ev.K_FLOW_START,
+                        payload=[flow_mb / 2, 1, -1, -1, t0["farm"],
+                                 ev.K_JOB_SUBMIT, t0["storage"],
+                                 ev.K_DATA_WRITE],
+                        interval=max(interval - 8, 3), count=n_flows, start=3)
+    kw = dict(n_agents=n_agents, lookahead=lookahead, t_end=t_end,
+              pool_cap=pool_cap, work_per_mb=2.0)
+    if exec_policy is not None:
+        kw["exec_policy"] = exec_policy
+    return b.build(**kw)
+
+
+def oracle_trace(**build_kw):
+    w, o, e, s = t0t1_build(1, **build_kw)
+    _, _, trace = run_sequential(w, o, e, s)
+    return trace
+
+
+def engine_trace(st):
+    return merged_engine_trace(np.asarray(st.trace), np.asarray(st.trace_n))
+
+
+def tree_eq(a, b):
+    return bool(jax.tree.all(jax.tree.map(
+        lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()), a, b)))
+"""
+
+
+def run_distributed_child(
+    body: str, n_devices: int = N_DEVICES, timeout: int = 600
+) -> dict:
+    """Run ``HEADER + body`` in a fresh interpreter with an n-device fleet.
+
+    The body must ``print(json.dumps({...}))`` as its last stdout line; that
+    object is returned. Any nonzero exit fails the calling test with the
+    child's stderr tail attached.
+    """
+    code = HEADER.format(n=n_devices) + "\n" + body
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])

@@ -1,10 +1,8 @@
 """Distributed-path tests: shard_map engine == oracle (subprocess, 4 devices),
-elastic re-mesh + checkpoint continuity, event-pool overflow accounting."""
+the randomized scale-out equivalence property, elastic re-mesh + checkpoint
+continuity, event-pool overflow accounting."""
 import dataclasses
 import json
-import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
@@ -12,8 +10,9 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import example, given, settings, strategies as st
 
+from distributed_harness import run_distributed_child
 from repro.core import events as ev
 
 
@@ -21,44 +20,114 @@ from repro.core import events as ev
 def test_shard_map_engine_matches_oracle_subprocess():
     """The real collective path (lax.pmin/all_to_all under shard_map over 4
     host devices) executes the exact oracle trace."""
-    code = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-import numpy as np, jax, json
-from jax.sharding import Mesh
-from repro.core import Engine, ScenarioBuilder, events as ev, run_sequential, \
-    merged_engine_trace
-
-def build(n_agents):
-    b = ScenarioBuilder(max_cpu=4, queue_cap=8, max_link=4, max_flow=16)
-    t0 = b.add_regional_center(n_cpu=2, cpu_power=10.0, disk=500.0,
-                               tape=5000.0, tape_rate=5.0)
-    t1 = b.add_regional_center(n_cpu=2, cpu_power=8.0, disk=300.0,
-                               tape=3000.0, tape_rate=5.0)
-    wan = b.add_net_region(link_bws=[2.0, 2.0], link_lats=[5, 5])
-    b.add_generator(target_lp=wan, kind=ev.K_FLOW_START,
-                    payload=[40.0, 0, -1, -1, t1["farm"], ev.K_JOB_SUBMIT,
-                             t1["storage"], ev.K_DATA_WRITE],
-                    interval=25, count=12, start=0)
-    return b.build(n_agents=n_agents, lookahead=2, t_end=5000, pool_cap=256,
-                   work_per_mb=2.0)
-
-w, o, e, s = build(1)
-_, _, otrace = run_sequential(w, o, e, s)
-w, o, e, s = build(4)
+    res = run_distributed_child(r"""
+otrace = oracle_trace()
+w, o, e, s = t0t1_build(4)
 eng = Engine(w, o, e, s, trace_cap=4096)
 mesh = Mesh(np.array(jax.devices()), ("agents",))
 st = eng.run_distributed(mesh, max_windows=20000)
-trace = merged_engine_trace(np.asarray(st.trace), np.asarray(st.trace_n))
+trace = engine_trace(st)
 print(json.dumps({"match": trace == otrace, "n": len(trace)}))
-"""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=600)
-    assert out.returncode == 0, out.stderr[-2000:]
-    res = json.loads(out.stdout.strip().splitlines()[-1])
+""")
     assert res["match"] and res["n"] > 0
+
+
+# The pinned acceptance cases: one with cross-shard event migration, one with
+# the adaptive per-shard width ladder actually moving rungs (verified: this
+# scenario spills at width 1 and climbs through every rung).
+_MIGRATE_CASE = dict(n_agents=6, pool_cap=256, n_flows=12, interval=25,
+                     second_gen=False, ladder=None, migrate=True,
+                     mig_window=20)
+_ADAPTIVE_CASE = dict(n_agents=6, pool_cap=256, n_flows=12, interval=5,
+                      second_gen=True, ladder=(1, 4, 16), migrate=False,
+                      mig_window=20)
+
+
+@pytest.mark.slow
+@settings(max_examples=3, deadline=None)
+@example(**_MIGRATE_CASE)
+@example(**_ADAPTIVE_CASE)
+@given(n_agents=st.sampled_from([3, 5, 6, 7]),
+       pool_cap=st.sampled_from([48, 256]),
+       n_flows=st.sampled_from([8, 12]),
+       interval=st.sampled_from([5, 25]),
+       second_gen=st.booleans(),
+       ladder=st.sampled_from([None, (1, 4, 16), (2, 8, 32)]),
+       migrate=st.booleans(),
+       mig_window=st.integers(5, 40))
+def test_distributed_scale_out_equivalence_property(n_agents, pool_cap,
+                                                    n_flows, interval,
+                                                    second_gen, ladder,
+                                                    migrate, mig_window):
+    """Randomized scale-out specs — agent counts not divisible by the device
+    count, mixed generators, small pool caps, adaptive ladders, mid-run
+    cross-shard migration — all satisfy distributed == run_local ==
+    run_adaptive == oracle on traces, counters, and final world (the static
+    and adaptive pairs byte-identical in full state; every driver's merged
+    trace byte-identical to the sequential heapq oracle; zero drop counters
+    as the exactness precondition)."""
+    params = dict(n_agents=n_agents, pool_cap=pool_cap, n_flows=n_flows,
+                  interval=interval, second_gen=second_gen,
+                  ladder=list(ladder) if ladder else None, migrate=migrate,
+                  mig_window=mig_window)
+    res = run_distributed_child(f"params = {params!r}\n" + r"""
+n = params["n_agents"]
+bkw = dict(pool_cap=params["pool_cap"], n_flows=params["n_flows"],
+           interval=params["interval"], second_gen=params["second_gen"])
+otrace = oracle_trace(**bkw)
+w, o, e, s = t0t1_build(n, **bkw)
+eng = Engine(w, o, e, s, trace_cap=4096)
+mesh = Mesh(np.array(jax.devices()), ("agents",))
+checks = {}
+state_d = state_l = None
+if params["migrate"]:
+    # run a few windows distributed, swap the first and last agents'
+    # LPs (cross-shard for any n > K), then continue both drivers from
+    # the migrated state
+    axes = eng._dist_axes(mesh)
+    stp = eng._pad_state(eng.init_state(), axes.size)
+    step = eng._dist_window_fn(mesh, s.exec_cap)
+    for _ in range(params["mig_window"]):
+        stp = step(stp)
+    mid = eng._slice_state(stp)
+    la = np.asarray(mid.world.lp_agent[0])
+    hi = n - 1
+    new_la = np.where(la == 0, hi, np.where(la == hi, 0, la)).astype(np.int32)
+    state_d = eng.apply_placement_distributed(mid, new_la, mesh)
+    state_l = eng.apply_placement_local(mid, new_la)
+    checks["migrated_states_equal"] = tree_eq(state_d, state_l)
+    cnt = np.asarray(state_d.counters)
+    checks["migrate_out_in_balanced"] = (
+        int(cnt[:, mon.C_MIGRATE_OUT].sum())
+        == int(cnt[:, mon.C_MIGRATE_IN].sum()))
+st_d = eng.run_distributed(mesh, max_windows=20000, state=state_d)
+st_l = eng.run_local(max_windows=20000, state=state_l)
+checks["static_full_state_equal"] = tree_eq(st_d, st_l)
+checks["static_trace_is_oracle"] = engine_trace(st_d) == otrace
+if params["ladder"]:
+    p = ExecPolicy(ladder=tuple(params["ladder"]))
+    st_a = eng.run_adaptive(max_windows=20000, policy=p, state=state_l)
+    rungs_a = eng.adaptive_rungs
+    st_da = eng.run_distributed_adaptive(mesh, max_windows=20000, policy=p,
+                                         state=state_d)
+    rungs_da = eng.adaptive_rungs
+    checks["adaptive_full_state_equal"] = tree_eq(st_a, st_da)
+    checks["adaptive_rungs_lockstep"] = rungs_a == rungs_da
+    checks["adaptive_trace_is_oracle"] = engine_trace(st_da) == otrace
+    checks["adaptive_final_world_matches_static"] = tree_eq(
+        st_da.world, st_d.world)
+    checks["info_adaptive_engaged"] = len(set(rungs_a)) > 1
+cnt = np.asarray(st_d.counters)
+checks["no_drops"] = (int(cnt[:, mon.C_DROP_POOL].sum()) == 0
+                      and int(cnt[:, mon.C_DROP_ROUTE].sum()) == 0)
+print(json.dumps(checks))
+""")
+    failed = {k: v for k, v in res.items()
+              if not k.startswith("info_") and v is not True}
+    assert not failed, (failed, params)
+    if params == {**_ADAPTIVE_CASE,
+                  "ladder": list(_ADAPTIVE_CASE["ladder"])}:
+        assert res["info_adaptive_engaged"], res
 
 
 def test_elastic_failure_recovery_continuity(tmp_path):

@@ -270,3 +270,70 @@ if HAVE_HYPOTHESIS:
         )
         kw.update(exec_cap=p["exec_cap"], pool_cap=p["pool_cap"])
         assert_ring_ref_oracle(b.build(n_agents=p["n_agents"], **kw))
+
+
+# ----------------------------------------------- donor-side migration pops
+
+
+def test_extract_masks_routable_rows():
+    """extract() is the donor half of migration: valid exactly where live
+    and masked, all slot data passed through untouched."""
+    pool, _ = ev.insert(ev.empty_pool(8), ev.batch_from_rows(rows(5)))
+    mask = jnp.asarray([1, 0, 1, 0, 1, 1, 1, 1], bool)
+    batch = ev.extract(pool, mask)
+    np.testing.assert_array_equal(
+        np.asarray(batch.valid), np.asarray(pool.valid & mask)
+    )
+    np.testing.assert_array_equal(np.asarray(batch.time), np.asarray(pool.time))
+    np.testing.assert_array_equal(np.asarray(batch.seq), np.asarray(pool.seq))
+
+
+def test_pop_mask_after_ring_wraparound():
+    """Donor-side pop on a wrapped ring: pop_mask's rebuild canonicalizes the
+    lifecycle state, so post-migration inserts land exactly like inserts into
+    a freshly built pool with the same live events."""
+    # churn a small pool until the ring cursors wrap
+    pool, _ = ev.insert(ev.empty_pool(8), ev.batch_from_rows(rows(6)))
+    for i in range(9):
+        live = np.where(np.asarray(pool.valid))[0]
+        first = jnp.asarray(live[:1].astype(np.int32))
+        pool = ev.release(pool, first, jnp.asarray([True]))
+        pool, d = ev.insert(
+            pool, ev.batch_from_rows(rows(1, t0=100 + i, seq0=100 + i))
+        )
+        assert int(d) == 0
+    assert int(pool.free_head) != 0  # the ring really wrapped
+    # donor pop: ship out half the live slots
+    keep = np.asarray(pool.valid).copy()
+    keep[np.where(keep)[0][::2]] = False
+    moving = jnp.asarray(~keep & np.asarray(pool.valid))
+    popped = ev.pop_mask(pool, moving)
+    check_ring_invariant(popped)
+    assert int(popped.free_head) == 0  # canonical after rebuild
+    # survivors are exactly the unmoved live events
+    m = np.asarray(moving)
+    p = jax.tree.map(np.asarray, pool)
+    kept = sorted(
+        (int(p.time[i]), int(p.seq[i]), int(p.kind[i]), int(p.dst[i]))
+        for i in np.where(np.asarray(pool.valid) & ~m)[0]
+    )
+    assert live_events(popped) == kept
+    # canonical ring == ascending free slots: the ring fast path now takes
+    # exactly the slots the reference rank scan would
+    batch = ev.batch_from_rows(rows(3, t0=500, seq0=500))
+    out_a, d_a = ev.insert(popped, batch)
+    out_b, d_b = ev.insert_ref(popped, batch)
+    assert int(d_a) == int(d_b) == 0
+    np.testing.assert_array_equal(np.asarray(out_a.valid), np.asarray(out_b.valid))
+    assert live_events(out_a) == live_events(out_b)
+
+
+def test_pop_mask_zero_migration_is_lossless():
+    """An all-false donor mask (no events move) keeps every live slot's data
+    and occupancy; only the ring is canonicalized."""
+    pool, _ = ev.insert(ev.empty_pool(8), ev.batch_from_rows(rows(5)))
+    popped = ev.pop_mask(pool, jnp.zeros((8,), bool))
+    check_ring_invariant(popped)
+    assert live_events(popped) == live_events(pool)
+    assert int(popped.free_count) == int(pool.free_count)
+    np.testing.assert_array_equal(np.asarray(popped.valid), np.asarray(pool.valid))

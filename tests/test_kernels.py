@@ -180,3 +180,40 @@ def test_flash_attention_matches_model_path():
     ker = ker.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
     np.testing.assert_allclose(np.asarray(xla), np.asarray(ker), atol=2e-5,
                                rtol=2e-5)
+
+
+@pytest.mark.parametrize("n,n_buckets,density,seed", [
+    (64, 4, 0.5, 0), (256, 8, 0.9, 1), (513, 3, 0.2, 2), (1024, 16, 0.0, 3),
+    (37, 1, 1.0, 4), (1, 2, 1.0, 5), (128, 128, 0.7, 6),
+])
+def test_route_rank_sweep(n, n_buckets, density, seed):
+    """Pallas predecessor-count ranks == XLA ref == engine default == the
+    sequential numpy count, exactly (the emit-routing pack of the engine's
+    all_to_all exchange and the migration re-home)."""
+    from repro.core.engine import route_rank_xla
+    from repro.kernels.event_select import route_rank as route_raw
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    dst = jax.random.randint(ks[0], (n,), 0, n_buckets).astype(jnp.int32)
+    # invalid rows route to the drop bucket (== n_buckets), as in the engine
+    valid = jax.random.bernoulli(ks[1], density, (n,))
+    dst = jnp.where(valid, dst, jnp.int32(n_buckets))
+    got = np.asarray(route_raw(dst, interpret=True))
+    want = np.asarray(ref.route_rank_ref(dst))
+    engine_default = np.asarray(route_rank_xla(dst))
+    d = np.asarray(dst)
+    seen: dict = {}
+    expect = np.zeros(n, np.int32)
+    for i in range(n):
+        expect[i] = seen.get(d[i], 0)
+        seen[d[i]] = expect[i] + 1
+    np.testing.assert_array_equal(got, expect)
+    np.testing.assert_array_equal(want, expect)
+    np.testing.assert_array_equal(engine_default, expect)
+
+
+def test_route_rank_ops_wrapper():
+    from repro.kernels.ref import route_rank_ref
+    dst = jax.random.randint(jax.random.PRNGKey(9), (200,), 0, 7)
+    dst = dst.astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(ops.route_rank(dst)),
+                                  np.asarray(route_rank_ref(dst)))

@@ -1,0 +1,88 @@
+"""Migration accounting: C_MIGRATE_OUT/C_MIGRATE_IN balance globally and
+receiving-pool overflow lands in C_DROP_POOL, loudly — on the fast vmap
+driver (single device), so the books are audited on every install."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Engine, ScenarioBuilder, events as ev
+from repro.core import monitoring as mon
+
+
+def _idle_scenario(n_idle=12, n_agents=3, pool_cap=8):
+    """n_idle bare LPs round-robined over the agents, one pending NOOP each
+    (t >= t_end, so nothing executes — the pools just hold freight for the
+    migration to move)."""
+    b = ScenarioBuilder()
+    lps = [b.add_idle_lp() for _ in range(n_idle)]
+    for i, lp in enumerate(lps):
+        b.add_event(time=50 + i, kind=ev.K_NOOP, src=lp, dst=lp)
+    return b.build(n_agents=n_agents, lookahead=1, t_end=10, pool_cap=pool_cap)
+
+
+def _counters(st):
+    return np.asarray(st.counters)
+
+
+def test_migrate_counters_balance_globally():
+    """Every event shipped by a donor is booked received somewhere:
+    sum(C_MIGRATE_OUT) == sum(C_MIGRATE_IN), both nonzero for a real move."""
+    w, o, e, s = _idle_scenario()
+    eng = Engine(w, o, e, s)
+    st = eng.init_state()
+    # move agent 2's four LPs to agent 0 (0+4 -> 8 == pool_cap: no overflow)
+    la = np.asarray(st.world.lp_agent[0])
+    new_la = np.where(la == 2, 0, la).astype(np.int32)
+    out = eng.apply_placement_local(st, jnp.asarray(new_la))
+    cnt = _counters(out)
+    assert cnt[:, mon.C_MIGRATE_OUT].sum() == cnt[:, mon.C_MIGRATE_IN].sum() == 4
+    # donors book OUT, receivers book IN — not the same rows
+    assert cnt[2, mon.C_MIGRATE_OUT] == 4 and cnt[2, mon.C_MIGRATE_IN] == 0
+    assert cnt[0, mon.C_MIGRATE_IN] == 4 and cnt[0, mon.C_MIGRATE_OUT] == 0
+    assert cnt[:, mon.C_DROP_POOL].sum() == 0
+    # the freight actually moved pools
+    occ = [int(np.asarray(out.pool.valid[a]).sum()) for a in range(3)]
+    assert occ == [8, 4, 0]
+
+
+def test_migrate_receiver_overflow_is_counted():
+    """A receiving pool that cannot hold the freight drops the excess into
+    C_DROP_POOL (never silently); the out/in books still balance because IN
+    is counted pre-insert."""
+    w, o, e, s = _idle_scenario(n_idle=12, n_agents=3, pool_cap=8)
+    eng = Engine(w, o, e, s)
+    st = eng.init_state()
+    # all 12 LPs onto agent 0: 4 resident + 8 received > pool_cap 8
+    new_la = np.zeros(12, np.int32)
+    out = eng.apply_placement_local(st, jnp.asarray(new_la))
+    cnt = _counters(out)
+    assert cnt[:, mon.C_MIGRATE_OUT].sum() == cnt[:, mon.C_MIGRATE_IN].sum() == 8
+    assert cnt[0, mon.C_DROP_POOL] == 4  # loud, on the receiver
+    assert cnt[1:, mon.C_DROP_POOL].sum() == 0  # donors drop nothing
+    assert int(np.asarray(out.pool.valid[0]).sum()) == 8  # full, not corrupt
+
+
+def test_migrate_identity_placement_moves_nothing():
+    """A no-op placement books zero migration traffic and keeps every pool's
+    live events bit-identical (only the ring is canonicalized)."""
+    w, o, e, s = _idle_scenario()
+    eng = Engine(w, o, e, s)
+    st = eng.init_state()
+    out = eng.apply_placement_local(st, st.world.lp_agent[0])
+    cnt = _counters(out)
+    assert cnt[:, mon.C_MIGRATE_OUT].sum() == 0
+    assert cnt[:, mon.C_MIGRATE_IN].sum() == 0
+    assert cnt[:, mon.C_DROP_POOL].sum() == 0
+    np.testing.assert_array_equal(
+        np.asarray(out.pool.valid), np.asarray(st.pool.valid)
+    )
+    np.testing.assert_array_equal(np.asarray(out.pool.time), np.asarray(st.pool.time))
+
+
+def test_migrate_counters_are_registered():
+    """The new counters ride the declarative registry: names resolve and the
+    monitoring constants agree with the registered order."""
+    names = [n for n, _ in mon.BUILTIN_COUNTERS]
+    assert names.index("MIGRATE_OUT") == mon.C_MIGRATE_OUT
+    assert names.index("MIGRATE_IN") == mon.C_MIGRATE_IN
+    assert mon.N_COUNTERS == len(names)
