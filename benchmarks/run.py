@@ -67,7 +67,7 @@ def emit(name: str, us: float, derived: str = ""):
 
 
 def t0t1(wan_bw, n_flows=48, interval=8, n_agents=1, lookahead=2,
-         flow_mb=100.0, pool_cap=1024):
+         flow_mb=100.0, pool_cap=1024, exec_cap=None):
     b = ScenarioBuilder(max_cpu=4, queue_cap=32, max_link=4, max_flow=64)
     t0 = b.add_regional_center(n_cpu=2, cpu_power=10.0, disk=20000.0,
                                tape=200000.0, tape_rate=5.0)
@@ -78,8 +78,9 @@ def t0t1(wan_bw, n_flows=48, interval=8, n_agents=1, lookahead=2,
                     payload=[flow_mb, 0, -1, -1, t1["farm"], ev.K_JOB_SUBMIT,
                              t1["storage"], ev.K_DATA_WRITE],
                     interval=interval, count=n_flows)
+    kw = {} if exec_cap is None else dict(exec_cap=exec_cap)
     return b.build(n_agents=n_agents, lookahead=lookahead, t_end=200_000,
-                   pool_cap=pool_cap, work_per_mb=2.0)
+                   pool_cap=pool_cap, work_per_mb=2.0, **kw)
 
 
 def run_engine(built, max_windows=100_000):
@@ -557,6 +558,62 @@ def bench_cache_churn(pool_caps=(4096,), width=256, n_keys=4, lookahead=4):
              f"speedup={rates['batched'] / rates['sequential']:.2f}x")
 
 
+def bench_trace_stream(n_flows=32, n_agents=2, ring=64, drain_every=8,
+                       exec_cap=32):
+    """PR 7 host-streaming trace drain: events/s with the device-side ring +
+    io_callback drain vs (a) tracing off and (b) a big in-device buffer.
+
+    Same scenario three ways, one process, one host — the gated ``speedup``
+    is the stream/off throughput ratio (<= 1; it prices the whole streaming
+    path: the host-stepped window driver replacing the fused while_loop, the
+    per-window drain callback, and the host-side span reassembly).
+    ``stream_vs_buffer`` prices the drain against in-device tracing under
+    the same driver economics. Correctness rides along: the streamed trace
+    must reassemble byte-identical to the in-device buffer's merge with
+    C_TRACE_DROP == 0 — the ring (``ring`` rows, far below the run's total)
+    wraps many times over.
+    """
+    from repro.core import TraceStream, merged_engine_trace
+
+    built = t0t1(4.0, n_flows=n_flows, interval=4, n_agents=n_agents,
+                 exec_cap=exec_cap)
+
+    def timed(trace_cap, stream=None):
+        world, own, init_ev, spec = built
+        kw = dict(trace_cap=trace_cap)
+        if stream is not None:
+            kw.update(trace_stream=stream, drain_every=drain_every)
+        eng = Engine(world, own, init_ev, spec, **kw)
+        jax.block_until_ready(eng.run_local().counters)   # compile
+        t0 = time.perf_counter()
+        st = eng.run_local()
+        jax.block_until_ready(st.counters)
+        return st, time.perf_counter() - t0
+
+    st_off, dt_off = timed(0)
+    st_buf, dt_buf = timed(1 << 16)
+    ts = TraceStream()
+    st_str, dt_str = timed(ring, stream=ts)
+
+    c = np.asarray(st_str.counters)
+    n = int(c[:, mon.C_EVENTS].sum())
+    assert n == int(np.asarray(st_off.counters)[:, mon.C_EVENTS].sum())
+    drop = int(c[:, mon.C_TRACE_DROP].sum())
+    assert drop == 0, f"streaming dropped {drop} trace rows"
+    assert int(np.asarray(st_str.trace_n).max()) > ring, "ring never wrapped"
+    want = merged_engine_trace(np.asarray(st_buf.trace),
+                               np.asarray(st_buf.trace_n))
+    assert ts.merged() == want, "streamed trace != in-device buffer"
+
+    emit("trace_stream", dt_str * 1e6,
+         f"events={n};streamed={ts.n_streamed};ring={ring};"
+         f"windows={int(np.asarray(st_str.windows)[0])};trace_drop={drop};"
+         f"events_s_off={n / dt_off:.0f};events_s_buffer={n / dt_buf:.0f};"
+         f"events_s_stream={n / dt_str:.0f};"
+         f"stream_vs_buffer={dt_buf / dt_str:.2f};"
+         f"speedup={dt_off / dt_str:.2f}")
+
+
 def bench_shard_scaling(n_agents=64, n_ticks=32, lookahead=2):
     """Distributed scale-out: events/s at 64 packed agents, 4 host devices vs
     1 (the shard_map x vmap driver; K = 16 vs 64 lanes per shard).
@@ -740,6 +797,7 @@ def main() -> None:
         bench_insert_churn(pool_caps=(4096,))
         bench_adaptive_exec()
         bench_cache_churn(pool_caps=(4096,))
+        bench_trace_stream()
         bench_scheduler()
         bench_kernels()
         bench_workload_sim()
@@ -756,6 +814,7 @@ def main() -> None:
         bench_insert_churn()
         bench_adaptive_exec()
         bench_cache_churn()
+        bench_trace_stream()
         bench_shard_scaling()
         bench_kernels()
         bench_workload_sim()

@@ -23,6 +23,7 @@ from repro.core.components import (BUILTIN, LPK_FARM, LPK_GEN, LPK_IDLE,
 from repro.core.engine import (AXIS, Engine, EngineState, ShardAxes,
                                lexsort_time_seq)
 from repro.core.handlers import WorldDelta
+from repro.core.monitoring import MetricsStream, TraceStream
 from repro.core.policy import ExecPolicy
 from repro.core.oracle import merged_engine_trace, run_sequential
 from repro.core.registry import (FieldSpec, PayloadSpec, Registry,
@@ -31,9 +32,10 @@ from repro.core.registry import (FieldSpec, PayloadSpec, Registry,
 __all__ = [
     "AXIS", "BUILTIN", "Engine", "EngineState", "ExecPolicy", "FieldSpec",
     "LPK_FARM", "LPK_GEN", "LPK_IDLE", "LPK_NET", "LPK_STORAGE",
+    "MetricsStream",
     "PayloadSpec", "Registry", "RegistryError", "ScenarioBuilder",
-    "ScenarioSpec", "ShardAxes", "World", "WorldDelta", "WorldOwnership",
-    "events",
+    "ScenarioSpec", "ShardAxes", "TraceStream", "World", "WorldDelta",
+    "WorldOwnership", "events",
     "handlers", "lexsort_time_seq", "merged_engine_trace", "monitoring",
     "network", "oracle", "policy", "registry", "registry_of",
     "run_sequential", "scheduler", "sync", "sync_world",

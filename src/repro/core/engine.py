@@ -80,6 +80,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import io_callback
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import events as ev
@@ -189,7 +190,11 @@ class EngineState(NamedTuple):
     done: jax.Array       # bool scalar (globally uniform)
     windows: jax.Array    # i32 scalar
     trace: jax.Array      # i32 (trace_cap, 4): processed (time, seq, kind, dst)
-    trace_n: jax.Array    # i32 scalar
+    trace_n: jax.Array    # i32 scalar — total rows ever written
+    trace_tail: jax.Array  # i32 scalar — rows already drained to host
+    #                       (streaming mode: the buffer is a ring holding
+    #                       positions [trace_tail, trace_n) at index % cap;
+    #                       bounded mode keeps it 0)
 
 
 class Engine:
@@ -202,12 +207,35 @@ class Engine:
                  | None = None,
                  group_fn: Callable[[jax.Array, jax.Array], tuple]
                  | None = None,
-                 route_fn: Callable[[jax.Array], jax.Array] | None = None):
+                 route_fn: Callable[[jax.Array], jax.Array] | None = None,
+                 trace_fn: Callable[[jax.Array], jax.Array] | None = None,
+                 trace_stream: "mon.TraceStream | None" = None,
+                 metrics_stream: "mon.MetricsStream | None" = None,
+                 drain_every: int = 16):
         self.world = world
         self.own = own
         self.init_events = init_events
         self.spec = spec
         self.trace_cap = trace_cap
+        # host-streaming observability (docs/architecture.md, "Streaming
+        # trace"): with a TraceStream attached, trace_cap sizes a device-side
+        # *ring* drained to the host through an unordered io_callback at
+        # window boundaries (every `drain_every` windows, plus forced drains
+        # whenever the next window could overrun the ring), so runs of any
+        # length keep C_TRACE_DROP == 0 and the streamed trace byte-identical
+        # to the sequential oracle. A MetricsStream ships every window's
+        # counter vector the same way (periodic JSON-lines snapshots). Either
+        # stream switches run_local/run_distributed to a host-stepped window
+        # loop — io_callback is unsupported inside a vmapped while_loop — the
+        # same driver shape run_adaptive always uses.
+        self.trace_stream = trace_stream
+        self.metrics_stream = metrics_stream
+        self.drain_every = int(drain_every)
+        if self.drain_every < 1:
+            raise ValueError(f"drain_every must be >= 1, got {drain_every}")
+        if trace_stream is not None and trace_cap <= 0:
+            raise ValueError(
+                "a TraceStream needs a device-side ring: pass trace_cap > 0")
         # the registry that generated this world's model: the source of the
         # dispatch table, the kind->table map, and the sync/delta schemas —
         # extended models (BUILTIN.extend()) plug in with zero engine edits
@@ -226,6 +254,11 @@ class Engine:
         # point for the Pallas predecessor-count kernel
         # (kernels.ops.route_rank); default is the XLA sort-based rank.
         self.route_fn = route_fn or route_rank_xla
+        # trace_fn(mask) -> exclusive prefix ranks: the trace-append position
+        # math (events.trace_append). Hook point for the Pallas prefix-sum
+        # kernel (kernels.ops.trace_rank); default is the XLA cumsum inside
+        # trace_append (None passes through).
+        self.trace_fn = trace_fn
         if spec.merge_mode not in ("delta", "dense"):
             raise ValueError(
                 f"spec.merge_mode must be 'delta' or 'dense', got "
@@ -280,18 +313,54 @@ class Engine:
             windows=jnp.zeros((A,), jnp.int32),
             trace=jnp.zeros((A, tc, 4), jnp.int32),
             trace_n=jnp.zeros((A,), jnp.int32),
+            trace_tail=jnp.zeros((A,), jnp.int32),
         )
 
     # ------------------------------------------------------------- superstep
     def _superstep(self, st: EngineState, axis: "str | ShardAxes | None",
-                   exec_cap: int | None = None) -> EngineState:
+                   exec_cap: int | None = None,
+                   stream: bool = False) -> EngineState:
         """One conservative window. ``exec_cap`` overrides the spec's static
         width — the adaptive driver (``run_adaptive``) traces one program per
         ladder rung through this hook. ``axis`` is the vmap axis name, a
         :class:`ShardAxes` pair under the shard_map x vmap driver, or None
-        for a single agent."""
+        for a single agent. ``stream`` (static) bakes the host-streaming
+        hooks into the program: the window-boundary trace-ring drain and the
+        metrics snapshot io_callbacks — only the host-stepped window drivers
+        may set it (io_callback cannot live inside a vmapped while_loop)."""
         spec = self.spec
         world, pool, counters = st.world, st.pool, st.counters
+        xcap = max(min(exec_cap if exec_cap is not None else spec.exec_cap,
+                       spec.pool_cap), 1)
+        stream_trace = stream and self.trace_stream is not None
+        stream_metrics = stream and self.metrics_stream is not None
+        if stream_trace or stream_metrics:
+            # the global agent id tags every callback payload: under vmap it
+            # is the lane, under shard_map x vmap the shard-major state row —
+            # so host-side reassembly is driver-independent (and pad agents,
+            # whose spans are always empty, are simply ignored)
+            me = (jax.lax.axis_index(axis_names(axis)) if axis is not None
+                  else jnp.int32(0))
+        if stream_trace:
+            # window-boundary drain (before this window's writes): ship the
+            # un-drained span [trace_tail, trace_n) when the cadence hits or
+            # when this window's worst case (xcap rows) could overrun the
+            # ring. The callback fires every window — a vmapped cond would
+            # run both branches anyway — but a masked count of 0 makes the
+            # non-drain windows host-side no-ops; the span tag (me, start)
+            # keeps delivery order-independent and duplicates idempotent.
+            # Post-drain invariant: trace_n - trace_tail + xcap <= trace_cap,
+            # so the ring never overwrites an un-drained row (C_TRACE_DROP
+            # stays 0) as long as the ring holds one window (checked by the
+            # streaming drivers).
+            tcap = st.trace.shape[0]
+            pending = st.trace_n - st.trace_tail
+            do = ((pending + jnp.int32(xcap) > tcap)
+                  | (st.windows % jnp.int32(self.drain_every) == 0))
+            io_callback(self._on_trace_drain, None, me, st.trace_tail,
+                        jnp.where(do, pending, 0), st.trace, ordered=False)
+            st = st._replace(trace_tail=jnp.where(do, st.trace_n,
+                                                  st.trace_tail))
 
         # 1-2. GVT + safe mask (C2)
         lmin = sync.local_min_per_ctx(pool, spec.n_ctx)
@@ -303,8 +372,6 @@ class Engine:
         # 3. order (time, seq) + compact: unsafe slots sort to the back, and only
         # the first exec_cap gather indices (the earliest safe slots) are kept
         time_key = jnp.where(safe, pool.time, ev.T_INF)
-        xcap = max(min(exec_cap if exec_cap is not None else spec.exec_cap,
-                       spec.pool_cap), 1)
         exec_idx = self.select_fn(time_key, pool.seq, xcap)
         exec_safe = sync.exec_selection_ring(safe, exec_idx)
         cand = ev.gather(pool, exec_idx)
@@ -315,7 +382,18 @@ class Engine:
         execute = (self._execute_batched if spec.batched_dispatch
                    else self._execute_scan)
         world, counters, emits, trace, trace_n = execute(
-            world, counters, cand, exec_safe, st.trace, st.trace_n)
+            world, counters, cand, exec_safe, st.trace, st.trace_n,
+            ring=stream_trace)
+        if stream_trace:
+            # ring overwrite accounting: rows written this window on top of
+            # un-drained ones (structurally 0 under the drain invariant above;
+            # exact when a caller bypasses the ring-size check)
+            pb = st.trace_n - st.trace_tail
+            pa = trace_n - st.trace_tail
+            tcap = st.trace.shape[0]
+            counters = mon.bump(
+                counters, mon.C_TRACE_DROP,
+                jnp.maximum(pa - tcap, 0) - jnp.maximum(pb - tcap, 0))
 
         n_processed = jnp.sum(exec_safe.astype(jnp.int32))
         n_spill = jnp.sum(safe.astype(jnp.int32)) - n_processed
@@ -348,13 +426,21 @@ class Engine:
         counters = mon.gauge(counters, mon.C_POOL_OCC, ev.occupancy(pool))
         counters = mon.gauge(counters, mon.C_POOL_FREE, pool.free_count)
 
+        if stream_metrics:
+            # end-of-window metrics snapshot: every agent ships its counter
+            # vector; the host sink assembles a fleet view per window and
+            # emits JSON lines on the configured cadence
+            io_callback(self._on_metrics, None, me, st.windows + 1,
+                        jnp.max(horizon), counters, ordered=False)
+
         return EngineState(world=world, pool=pool, counters=counters,
                            t_now=jnp.max(horizon), done=done,
-                           windows=st.windows + 1, trace=trace, trace_n=trace_n)
+                           windows=st.windows + 1, trace=trace,
+                           trace_n=trace_n, trace_tail=st.trace_tail)
 
     # ------------------------------------------------- step 4: sequential fold
     def _execute_scan(self, world, counters, cand: ev.EventBatch,
-                      exec_safe: jax.Array, trace, trace_n):
+                      exec_safe: jax.Array, trace, trace_n, ring: bool = False):
         """PR 1 path: lax.scan over the gathered slots in (time, seq) order."""
         ecap = self.spec.emit_cap
         emit0 = ev.empty_batch(ecap)
@@ -400,16 +486,22 @@ class Engine:
             counters = mon.bump(counters, mon.C_DROP_POOL,
                                 jnp.sum((val & ~ok).astype(jnp.int32)))
 
-            # trace (fixed cap; for oracle-equivalence tests). Overflow is
-            # counted (C_TRACE_DROP), never silent — merged_engine_trace
-            # refuses to return a truncated trace.
+            # trace (bounded buffer, or ring under the streaming drain).
+            # Bounded overflow is counted (C_TRACE_DROP), never silent —
+            # merged_engine_trace refuses to return a truncated trace; ring
+            # overwrites are accounted at the window boundary (_superstep).
             tcap = trace.shape[0]
             trow = jnp.stack([e.time, e.seq, e.kind, e.dst])
-            tidx = jnp.where(is_safe & (trace_n < tcap), trace_n, tcap)
-            trace = trace.at[tidx].set(trow, mode="drop")
-            if self.trace_cap > 0:
-                counters = mon.bump(counters, mon.C_TRACE_DROP,
-                                    jnp.where(is_safe & (trace_n >= tcap), 1, 0))
+            if ring:
+                tidx = jnp.where(is_safe, trace_n % tcap, tcap)
+                trace = trace.at[tidx].set(trow, mode="drop")
+            else:
+                tidx = jnp.where(is_safe & (trace_n < tcap), trace_n, tcap)
+                trace = trace.at[tidx].set(trow, mode="drop")
+                if self.trace_cap > 0:
+                    counters = mon.bump(
+                        counters, mon.C_TRACE_DROP,
+                        jnp.where(is_safe & (trace_n >= tcap), 1, 0))
             trace_n = trace_n + jnp.where(is_safe, 1, 0)
             return (world, counters, emits, emit_n, trace, trace_n), None
 
@@ -420,7 +512,8 @@ class Engine:
 
     # -------------------------------------------- step 4: vectorized dispatch
     def _execute_batched(self, world, counters, cand: ev.EventBatch,
-                         exec_safe: jax.Array, trace, trace_n):
+                         exec_safe: jax.Array, trace, trace_n,
+                         ring: bool = False):
         """Grouped vectorized dispatch (see module docstring).
 
         Conflict-free slots run in one vmapped handler call per window; slots
@@ -510,18 +603,14 @@ class Engine:
             cond, body, (jnp.int32(0), world, counters, emit_mat))
 
         # trace in (time, seq) window order — independent of execution order.
-        # Overflow is counted (C_TRACE_DROP), never silent.
-        tcap = trace.shape[0]
-        offs = jnp.cumsum(exec_safe.astype(jnp.int32)) - 1
-        tpos = trace_n + offs
-        tidx = jnp.where(exec_safe & (tpos < tcap), tpos, tcap)
+        # events.trace_append holds the position math (ring writes wrap under
+        # the streaming drain; bounded overflow is counted, never silent).
         rows4 = jnp.stack([cand.time, cand.seq, cand.kind, cand.dst], axis=1)
-        trace = trace.at[tidx].set(rows4, mode="drop")
-        if self.trace_cap > 0:
-            counters = mon.bump(
-                counters, mon.C_TRACE_DROP,
-                jnp.sum((exec_safe & (tpos >= tcap)).astype(jnp.int32)))
-        trace_n = trace_n + jnp.sum(exec_safe.astype(jnp.int32))
+        trace, trace_n, clipped = ev.trace_append(
+            trace, trace_n, rows4, exec_safe, ring=ring,
+            rank_fn=self.trace_fn)
+        if not ring and self.trace_cap > 0:
+            counters = mon.bump(counters, mon.C_TRACE_DROP, clipped)
 
         # segmented emit merge: flatten the per-slot matrix row-major (== the
         # sequential append order) and compact into the window emit buffer
@@ -634,6 +723,87 @@ class Engine:
         counters = mon.bump(counters, mon.C_DROP_POOL, dropped)
         return pool, counters
 
+    # -------------------------------------------------- host-streaming layer
+    @property
+    def _streaming(self) -> bool:
+        return self.trace_stream is not None or self.metrics_stream is not None
+
+    def _on_trace_drain(self, agent, start, count, ring):
+        """io_callback target (host thread): forward a drained span."""
+        ts = self.trace_stream
+        if ts is not None:
+            ts.on_drain(agent, start, count, ring)
+
+    def _on_metrics(self, agent, window, gvt, counters):
+        """io_callback target (host thread): forward a window snapshot."""
+        ms = self.metrics_stream
+        if ms is not None:
+            ms.on_window(agent, window, gvt, counters)
+
+    def _begin_streams(self, widths) -> None:
+        """Arm the attached streams for a run using exec widths ``widths``.
+
+        The zero-drop invariant needs the ring to hold at least one window's
+        worst case, so the widest rung bounds the minimum ``trace_cap``."""
+        if self.trace_stream is not None:
+            need = max(max(min(int(w), self.spec.pool_cap), 1)
+                       for w in widths)
+            if self.trace_cap < need:
+                raise ValueError(
+                    f"streaming trace ring too small: trace_cap="
+                    f"{self.trace_cap} must hold one window's writes (max "
+                    f"exec width {need}) or the drain cannot keep "
+                    f"C_TRACE_DROP == 0")
+            self.trace_stream.begin(self.spec.n_agents)
+        if self.metrics_stream is not None:
+            self.metrics_stream.begin(self.spec.n_agents, self.registry)
+
+    def _finalize_streams(self, st: EngineState) -> EngineState:
+        """Drain outstanding callbacks and flush the in-state tail spans.
+
+        ``st`` must be the unpadded (A, ...) final state. effects_barrier
+        makes every in-flight io_callback land before reassembly."""
+        if not self._streaming:
+            return st
+        getattr(jax, "effects_barrier", lambda: None)()
+        if self.trace_stream is not None:
+            self.trace_stream.finalize(np.asarray(st.trace),
+                                       np.asarray(st.trace_n),
+                                       np.asarray(st.trace_tail))
+        if self.metrics_stream is not None:
+            self.metrics_stream.finalize(np.asarray(st.counters),
+                                         np.asarray(st.windows),
+                                         np.asarray(st.t_now))
+        return st
+
+    def _run_stream(self, max_windows: int,
+                    state: EngineState | None = None,
+                    mesh: Mesh | None = None) -> EngineState:
+        """Host-stepped static-width run with the streaming hooks live.
+
+        ``run_local``/``run_distributed`` land here when a stream is
+        attached: the whole-run while_loop cannot carry io_callbacks under
+        vmap, so the driver steps the jit-cached window program from the
+        host (the run_adaptive shape) and the drains fire inside each
+        window program at its boundary."""
+        width = self.spec.exec_cap
+        self._begin_streams([width])
+        if mesh is None:
+            st = self.init_state() if state is None else state
+            fn = self._window_fn(width)
+        else:
+            axes = self._dist_axes(mesh)
+            st = self._pad_state(self.init_state() if state is None else state,
+                                 axes.size)
+            fn = self._dist_window_fn(mesh, width)
+        for _ in range(max_windows):
+            if bool(np.asarray(st.done).all()):
+                break
+            st = fn(st)
+        if mesh is not None:
+            st = self._slice_state(st)
+        return self._finalize_streams(st)
+
     # ------------------------------------------------------------------- run
     def _run_fn(self, axis: "str | ShardAxes | None", max_windows: int):
         def cond(st: EngineState):
@@ -652,7 +822,13 @@ class Engine:
         """Single-device multi-agent execution (vmap over the agents axis).
 
         ``state`` resumes from a prior EngineState (e.g. after a placement
-        migration) instead of ``init_state()``."""
+        migration) instead of ``init_state()``.
+
+        With a trace/metrics stream attached the run is host-stepped (see
+        :meth:`_run_stream`) — the whole-run while_loop cannot carry the
+        drain io_callbacks under a batched predicate."""
+        if self._streaming:
+            return self._run_stream(max_windows, state=state)
         st = self.init_state() if state is None else state
         key = ("run_local", max_windows, jit)
         fn = self._jit_cache.get(key)
@@ -714,6 +890,7 @@ class Engine:
             windows=rep0(st.windows),
             trace=zero(st.trace),
             trace_n=zero(st.trace_n),
+            trace_tail=zero(st.trace_tail),
         )
 
     def _slice_state(self, st: EngineState) -> EngineState:
@@ -747,7 +924,13 @@ class Engine:
         shard-major receive order — results are byte-identical to
         ``run_local`` (down to pool slot layouts) and hence to the
         sequential oracle. ``state`` resumes from a prior (unpadded)
-        EngineState."""
+        EngineState.
+
+        With a trace/metrics stream attached the run is host-stepped (see
+        :meth:`_run_stream`); per-shard rings drain independently and the
+        host merge is shard-major, matching ``merged_engine_trace``."""
+        if self._streaming:
+            return self._run_stream(max_windows, state=state, mesh=mesh)
         axes = self._dist_axes(mesh)
         st = self._pad_state(self.init_state() if state is None else state,
                              axes.size)
@@ -827,13 +1010,14 @@ class Engine:
     def _window_fn(self, width: int):
         """One jitted window program at a fixed exec width (cached per rung,
         so the adaptive ladder recompiles nothing after first use)."""
-        key = ("window", width)
+        stream = self._streaming
+        key = ("window_stream" if stream else "window", width)
         fn = self._jit_cache.get(key)
         if fn is None:
             fn = jax.jit(jax.vmap(
                 lambda s: self._superstep(
                     s, AXIS if self.spec.n_agents > 1 else None,
-                    exec_cap=width),
+                    exec_cap=width, stream=stream),
                 axis_name=AXIS))
             self._jit_cache[key] = fn
         return fn
@@ -858,6 +1042,7 @@ class Engine:
         from a prior EngineState.
         """
         p = pol.normalize(self.spec.exec_policy if policy is None else policy)
+        self._begin_streams(p.ladder)
         st = self.init_state() if state is None else state
         rung = p.init_rung
         prev = np.asarray(st.counters)
@@ -872,18 +1057,20 @@ class Engine:
             rung = pol.choose_rung(p, rung, stats)
             prev = cur
         self.adaptive_rungs = tuple(rungs)
-        return st
+        return self._finalize_streams(st)
 
     def _dist_window_fn(self, mesh: Mesh, width: int):
         """One jitted shard_map x vmap window program at a fixed exec width
         (cached per (mesh, rung) — lockstep adaptation recompiles nothing
         after each rung's first use)."""
-        key = ("dist_window", mesh, width)
+        stream = self._streaming
+        key = ("dist_window_stream" if stream else "dist_window", mesh, width)
         fn = self._jit_cache.get(key)
         if fn is None:
             axes = self._dist_axes(mesh)
             inner = jax.vmap(
-                lambda s: self._superstep(s, axes, exec_cap=width),
+                lambda s: self._superstep(s, axes, exec_cap=width,
+                                          stream=stream),
                 axis_name=axes.lane)
             fn = jax.jit(_shard_map(inner, mesh=mesh, in_specs=P(axes.shard),
                                     out_specs=P(axes.shard)))
@@ -909,6 +1096,7 @@ class Engine:
         unconditional (spilling is oracle-exact for any width sequence). The
         trajectory lands in ``self.adaptive_rungs``."""
         p = pol.normalize(self.spec.exec_policy if policy is None else policy)
+        self._begin_streams(p.ladder)
         axes = self._dist_axes(mesh)
         A = self.spec.n_agents
         st = self._pad_state(self.init_state() if state is None else state,
@@ -927,4 +1115,4 @@ class Engine:
             rung = pol.choose_rung_lockstep(p, rung, stats)
             prev = cur
         self.adaptive_rungs = tuple(rungs)
-        return self._slice_state(st)
+        return self._finalize_streams(self._slice_state(st))

@@ -368,6 +368,45 @@ def compact_batch(batch: EventBatch, cap: int):
     return out, n_valid, n_valid - n_kept
 
 
+def trace_append(trace: jax.Array, trace_n: jax.Array, rows4: jax.Array,
+                 mask: jax.Array, *, ring: bool = False, rank_fn=None):
+    """Append a window's processed-event rows to the (cap, 4) trace buffer.
+
+    ``rows4`` is the window's (n, 4) candidate rows ``(time, seq, kind, dst)``
+    and ``mask`` the processed lanes, in (time, seq) window order. The r-th
+    masked row lands at absolute trace position ``trace_n + r``; ``rank_fn``
+    is the hook computing that exclusive prefix rank of the mask (Pallas twin
+    ``kernels.ops.trace_rank``; default XLA cumsum — the two are swept against
+    each other in tests).
+
+    Two write disciplines share the math:
+
+    * bounded (``ring=False``, the historical buffer): positions past ``cap``
+      are clipped out and counted — returns their number so the caller books
+      ``C_TRACE_DROP``;
+    * ring (``ring=True``, the streaming-trace device ring): positions wrap
+      modulo ``cap`` and *every* row is written. Overwrite of un-drained rows
+      is the caller's accounting (the drain keeps ``trace_n - trace_tail +
+      width <= cap``, so it never happens between window-boundary drains) —
+      the returned drop count is 0 here.
+
+    Returns ``(trace, trace_n', n_clipped)``.
+    """
+    cap = trace.shape[0]
+    n = mask.shape[0]
+    w = mask.astype(jnp.int32)
+    rank = (jnp.cumsum(w) - w) if rank_fn is None else rank_fn(mask)
+    tpos = trace_n + rank
+    if ring:
+        tidx = jnp.where(mask, tpos % cap, n + cap)  # OOB -> dropped write
+        clipped = jnp.int32(0)
+    else:
+        tidx = jnp.where(mask & (tpos < cap), tpos, n + cap)
+        clipped = jnp.sum((mask & (tpos >= cap)).astype(jnp.int32))
+    trace = trace.at[tidx].set(rows4, mode="drop")
+    return trace, trace_n + jnp.sum(w), clipped
+
+
 def extract(pool: EventPool, mask: jax.Array) -> EventBatch:
     """Pool rows as a routable batch: valid exactly where live and masked.
 

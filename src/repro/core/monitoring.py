@@ -8,11 +8,22 @@ the superstep: a per-agent counter vector plus derived *performance values*.
 
 Counters are per-agent and local (never auto-synced); ``gather_counters`` exposes the
 fleet view to the scheduler and to ``ft.straggler``.
+
+The host-streaming observability layer also lives here (paper §4.1's LISA
+coupling, MONARC's dedicated monitoring layer): :class:`TraceStream` is the
+host sink of the engine's device-side trace-ring drain
+(``jax.experimental.io_callback`` at window boundaries — see
+docs/architecture.md, "Streaming trace"), and :class:`MetricsStream` turns the
+per-window counter vectors into periodic JSON-lines snapshots named by the
+registry's declared counter table.
 """
 from __future__ import annotations
 
+import json
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # Counter indices.
 C_EVENTS = 0          # events processed
@@ -71,34 +82,50 @@ POOL_DIAG_COUNTERS = (C_RING_WRAP,)
 # docs/scenario_api.md — and size the engine's counter vector through
 # ``Registry.n_counters``.
 BUILTIN_COUNTERS = (
-    ("EVENTS", "events processed"),
-    ("MSGS_REMOTE", "events routed to another agent"),
-    ("STALE", "stale (interrupted) flow-completion events"),
-    ("INTERRUPTS", "bandwidth-share recomputations"),
+    ("EVENTS", "events processed (all execution paths)"),
+    ("MSGS_REMOTE", "emits routed to another agent"),
+    ("STALE", "stale (interrupted) flow-completion events — the paper's "
+              "Fig-2 cost driver"),
+    ("INTERRUPTS", "bandwidth-share recomputations (max-min refair)"),
     ("JOBS_SUBMITTED", "jobs accepted by a compute farm"),
     ("JOBS_DONE", "jobs completed"),
     ("FLOWS_STARTED", "WAN transfers started"),
     ("FLOWS_DONE", "WAN transfers completed"),
     ("MB_TRANSFERRED", "completed-flow megabytes (rounded to int)"),
-    ("DROP_POOL", "event-pool overflow"),
+    ("DROP_POOL", "event-pool overflow (including oversubscribed init "
+                  "seeds)"),
     ("DROP_ROUTE", "routing-buffer overflow"),
-    ("DROP_FLOW", "flow-table overflow"),
-    ("DROP_QUEUE", "job-queue overflow"),
-    ("WINDOWS", "conservative windows executed (sync rounds)"),
+    ("DROP_FLOW", "flow-table overflow (flow start refused)"),
+    ("DROP_QUEUE", "job-queue overflow (job refused)"),
+    ("WINDOWS", "conservative windows executed (collective sync rounds)"),
     ("MIGRATIONS", "disk -> tape migrations"),
     ("WRITES", "storage writes"),
     ("MB_WRITTEN", "written megabytes (rounded to int)"),
-    ("LP_LOCAL", "events destined to locally-owned LPs"),
+    ("LP_LOCAL", "emits destined to locally-owned LPs (scheduler locality "
+                 "signal)"),
     ("EXEC_SPILL", "safe events deferred past exec_cap to the next window"),
-    ("BATCH_EXEC", "events executed through grouped vectorized dispatch"),
-    ("BATCH_FALLBACK", "conflicted events via the sequential fallback"),
-    ("BATCH_ROWS", "component-table rows scattered by the batched merge"),
-    ("TRACE_DROP", "trace records lost to the fixed-cap trace buffer"),
-    ("RING_WRAP", "free-ring cursor wraps (head on insert, tail on release)"),
-    ("POOL_OCC", "GAUGE: live pool slots at window end"),
-    ("POOL_FREE", "GAUGE: free pool slots at window end"),
-    ("MIGRATE_OUT", "pending events shipped to another agent by migration"),
-    ("MIGRATE_IN", "migrated events received from another agent"),
+    ("BATCH_EXEC", "events executed through the grouped vectorized dispatch"),
+    ("BATCH_FALLBACK", "conflicted events executed via the sequential "
+                       "fallback"),
+    ("BATCH_ROWS", "component-table rows scattered by the batched merge — "
+                   "the per-window scatter-volume signal for the adaptive "
+                   "exec width"),
+    ("TRACE_DROP", "trace records lost to the fixed-cap trace buffer, or "
+                   "overwritten un-drained ring rows under streaming; "
+                   "oracle.merged_engine_trace and TraceStream refuse a "
+                   "truncated trace, so oracle-equivalence checks fail "
+                   "loudly instead of passing on a prefix"),
+    ("RING_WRAP", "free-ring cursor wraps (head on insert, tail on release) "
+                  "— pool-recycling pressure"),
+    ("POOL_OCC", "live pool slots at window end — the saturation signal the "
+                 "adaptive exec policy grows on"),
+    ("POOL_FREE", "free pool slots at window end (insert headroom)"),
+    ("MIGRATE_OUT", "events shipped to another agent by a placement change "
+                    "(donor side, post route-cap)"),
+    ("MIGRATE_IN", "migrated events received (counted pre-insert, so "
+                   "sum(OUT) == sum(IN) globally even when the receiving "
+                   "pool overflows — the excess then lands in DROP_POOL on "
+                   "the receiver)"),
 )
 assert len(BUILTIN_COUNTERS) == N_COUNTERS
 
@@ -161,3 +188,221 @@ def performance_value(counters: jax.Array, n_owned_lps: jax.Array,
             + 4.0 * remote_ratio
             + 0.5 * n_owned_lps.astype(jnp.float32)
             + 2.0 * pool_occupancy.astype(jnp.float32))
+
+
+# ------------------------------------------------------- host-streaming layer
+def counter_class(idx: int) -> str:
+    """The counter class of a builtin index: how a fleet snapshot should read
+    it (``gauge`` = per-window level, everything else accumulates) and which
+    equivalence contracts exempt it (``pool-diag`` / ``batch-diag``)."""
+    if idx in GAUGE_COUNTERS:
+        return "gauge"
+    if idx in DROP_COUNTERS:
+        return "drop"
+    if idx in POOL_DIAG_COUNTERS:
+        return "pool-diag"
+    if idx in BATCH_DIAG_COUNTERS:
+        return "batch-diag"
+    return "counter"
+
+
+def snapshot(counters, registry=None) -> dict:
+    """Named view of a counter vector: ``{counter name: int total}``.
+
+    ``counters`` is an (n,) vector or an (A, n) stacked fleet (summed over
+    agents — gauges included, so a gauge reads as the fleet-total level).
+    ``registry`` supplies the name table for extended models; the default is
+    the builtin table.
+    """
+    names = (registry.counters if registry is not None
+             else {name: i for i, (name, _doc) in enumerate(BUILTIN_COUNTERS)})
+    c = np.asarray(counters)
+    if c.ndim == 2:
+        c = c.sum(axis=0)
+    return {name: int(c[i]) for name, i in names.items()}
+
+
+class TraceStream:
+    """Host sink for the engine's device-side trace-ring drain.
+
+    The engine appends processed-event rows ``(time, seq, kind, dst)`` to a
+    per-agent ring of ``trace_cap`` rows and, at window boundaries, ships the
+    un-drained span ``[tail, trace_n)`` through an unordered
+    ``jax.experimental.io_callback`` tagged with the global agent id and the
+    span start. Tagged spans are order-independent and idempotent, so callback
+    arrival order (and duplicate delivery) cannot corrupt the stream: segments
+    key on ``(agent, start)`` and reassembly verifies contiguous coverage of
+    ``[0, trace_n)`` per agent. ``merged()`` reproduces
+    ``oracle.merged_engine_trace`` — global (time, seq) order over all agents,
+    shard-major under the distributed driver (the global agent id *is* the
+    shard-major state row) — byte-identical to the sequential heapq oracle
+    whenever ``C_TRACE_DROP == 0``.
+    """
+
+    def __init__(self):
+        self._segments: dict[int, dict[int, np.ndarray]] = {}
+        self._trace_n: np.ndarray | None = None
+
+    def begin(self, n_agents: int) -> None:
+        """Reset for a run of ``n_agents`` (the engine calls this)."""
+        self.n_agents = n_agents
+        self._segments = {}
+        self._trace_n = None
+
+    def on_drain(self, agent, start, count, ring) -> None:
+        """The io_callback target: one drained span of one agent's ring.
+
+        ``ring`` is the raw (cap, 4) ring; rows are unrolled from positions
+        ``(start + i) % cap``. A ``count`` of 0 (nothing pending, or a pad
+        agent under the distributed driver) is a no-op.
+        """
+        agent = np.asarray(agent)
+        if agent.ndim:  # batched delivery: unroll per lane
+            for i in range(agent.shape[0]):
+                self.on_drain(agent[i], np.asarray(start)[i],
+                              np.asarray(count)[i], np.asarray(ring)[i])
+            return
+        n = int(count)
+        if n <= 0:
+            return
+        ring = np.asarray(ring)
+        idx = (int(start) + np.arange(n)) % ring.shape[0]
+        self._segments.setdefault(int(agent), {})[int(start)] = ring[idx].copy()
+
+    def finalize(self, trace, trace_n, trace_tail) -> None:
+        """Flush the never-drained tail spans out of a finished EngineState
+        and record the per-agent row counts (the engine calls this after
+        ``jax.effects_barrier()``)."""
+        trace = np.asarray(trace)
+        self._trace_n = np.asarray(trace_n).copy()
+        tail = np.asarray(trace_tail)
+        for a in range(trace.shape[0]):
+            n = int(self._trace_n[a]) - int(tail[a])
+            if n > 0:
+                idx = (int(tail[a]) + np.arange(n)) % trace.shape[1]
+                self._segments.setdefault(a, {})[int(tail[a])] = (
+                    trace[a, idx].copy())
+
+    @property
+    def n_streamed(self) -> int:
+        """Total rows streamed (requires ``finalize``)."""
+        if self._trace_n is None:
+            raise RuntimeError("TraceStream not finalized — run the engine "
+                               "with the stream attached first")
+        return int(self._trace_n.sum())
+
+    def agent_rows(self, agent: int) -> np.ndarray:
+        """Agent's full (trace_n, 4) trace, reassembled from drained spans.
+
+        Raises if the spans do not contiguously cover ``[0, trace_n)`` — a
+        lost callback or an overwritten (dropped) span; ``C_TRACE_DROP``
+        counts the latter.
+        """
+        if self._trace_n is None:
+            raise RuntimeError("TraceStream not finalized — run the engine "
+                               "with the stream attached first")
+        n = int(self._trace_n[agent])
+        segs = self._segments.get(agent, {})
+        out, pos = [], 0
+        for start in sorted(segs):
+            seg = segs[start]
+            if start != pos:
+                raise RuntimeError(
+                    f"trace stream gap for agent {agent}: have rows "
+                    f"[0, {pos}), next span starts at {start}")
+            out.append(seg)
+            pos += seg.shape[0]
+        if pos != n:
+            raise RuntimeError(
+                f"trace stream incomplete for agent {agent}: streamed {pos} "
+                f"of {n} rows")
+        if not out:
+            return np.zeros((0, 4), np.int32)
+        return np.concatenate(out, axis=0)
+
+    def merged(self) -> list:
+        """Global (time, seq)-ordered trace — ``merged_engine_trace``'s exact
+        shape: a list of ``(time, seq, kind, dst)`` int tuples."""
+        rows = []
+        assert self._trace_n is not None
+        for a in range(self._trace_n.shape[0]):
+            rows.extend(tuple(int(x) for x in r) for r in self.agent_rows(a))
+        rows.sort(key=lambda r: (r[0], r[1]))
+        return rows
+
+
+class MetricsStream:
+    """Periodic fleet metrics snapshots fed by the registry counter table.
+
+    The engine ships every agent's ``(window, gvt, counters)`` through the
+    same window-boundary io_callback path as the trace drain; once all agents
+    of a window whose index is a multiple of ``interval`` have reported, one
+    JSON line lands on ``out`` (and in ``self.lines``):
+
+        {"window": W, "gvt": T, "agents": A, "counters": {name: total}}
+
+    Counter names and order come from the registry declaration (extension
+    counters included); ``counter_class``/``Registry.counter_docs`` give the
+    class and docstring of each name for richer consumers. A final snapshot
+    (``"final": true``) is emitted when the run finishes, whatever the
+    cadence.
+    """
+
+    def __init__(self, interval: int = 32, out=None):
+        if interval <= 0:
+            raise ValueError(f"interval must be positive, got {interval}")
+        self.interval = int(interval)
+        self.out = out
+        self.lines: list[dict] = []
+        self.latest: dict | None = None
+
+    def begin(self, n_agents: int, registry=None) -> None:
+        """Reset for a run (the engine calls this with its registry)."""
+        self.n_agents = n_agents
+        self._names = (registry.counters if registry is not None else {
+            name: i for i, (name, _doc) in enumerate(BUILTIN_COUNTERS)})
+        self._pending: dict[int, dict[int, tuple]] = {}
+        self.lines = []
+        self.latest = None
+
+    def on_window(self, agent, window, gvt, counters) -> None:
+        """The io_callback target: one agent's end-of-window counter vector."""
+        agent = np.asarray(agent)
+        if agent.ndim:
+            for i in range(agent.shape[0]):
+                self.on_window(agent[i], np.asarray(window)[i],
+                               np.asarray(gvt)[i], np.asarray(counters)[i])
+            return
+        a, w = int(agent), int(window)
+        if a >= self.n_agents or w % self.interval:
+            return
+        got = self._pending.setdefault(w, {})
+        got[a] = (int(gvt), np.asarray(counters).copy())
+        if len(got) == self.n_agents:
+            self._emit(w, self._pending.pop(w))
+
+    def _emit(self, window: int, got: dict, final: bool = False) -> None:
+        total = np.sum([c for _gvt, c in got.values()], axis=0)
+        rec = {
+            "window": window,
+            "gvt": max(g for g, _c in got.values()),
+            "agents": self.n_agents,
+            "counters": {name: int(total[i])
+                         for name, i in self._names.items()},
+        }
+        if final:
+            rec["final"] = True
+        self.latest = rec
+        self.lines.append(rec)
+        if self.out is not None:
+            self.out.write(json.dumps(rec) + "\n")
+            self.out.flush()
+
+    def finalize(self, counters, windows, t_now) -> None:
+        """Emit the end-of-run snapshot from the finished EngineState."""
+        counters = np.asarray(counters)
+        windows = np.asarray(windows)
+        t_now = np.asarray(t_now)
+        got = {a: (int(t_now[a]), counters[a])
+               for a in range(min(self.n_agents, counters.shape[0]))}
+        self._emit(int(windows[0]), got, final=True)

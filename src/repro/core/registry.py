@@ -299,6 +299,12 @@ class Registry:
         # vector with Registry.n_counters.
         self._counters: dict[str, int] = {
             name: i for i, (name, _doc) in enumerate(_mon.BUILTIN_COUNTERS)}
+        # counter name -> docstring: the documentation half of the counter
+        # table. tools/gen_counter_docs.py renders it into
+        # docs/architecture.md and monitoring.MetricsStream labels snapshots
+        # with it, so declared docs are load-bearing, not decoration.
+        self._counter_docs: dict[str, str] = {
+            name: doc for name, doc in _mon.BUILTIN_COUNTERS}
         self._sealed = False
         # modules whose import registers handlers onto this registry (lets
         # components.py declare the model without importing handlers.py)
@@ -438,15 +444,20 @@ class Registry:
         if name in self._counters:
             raise RegistryError(f"duplicate counter {name!r} "
                                 f"(index {self._counters[name]})")
-        del doc  # carried for documentation tooling; the index is the API
         idx = len(self._counters)
         self._counters[name] = idx
+        self._counter_docs[name] = doc
         return idx
 
     @property
     def counters(self) -> dict:
         """counter name -> index (builtin engine counters first)."""
         return dict(self._counters)
+
+    @property
+    def counter_docs(self) -> dict:
+        """counter name -> declared docstring (same keys as :attr:`counters`)."""
+        return dict(self._counter_docs)
 
     @property
     def n_counters(self) -> int:
@@ -486,6 +497,7 @@ class Registry:
         child._kinds = list(self._kinds)
         child._handlers = dict(self._handlers)
         child._counters = dict(self._counters)
+        child._counter_docs = dict(self._counter_docs)
         return child
 
     # ----------------------------------------------------------------- freeze

@@ -245,6 +245,44 @@ def ring_slots(free_ring: jax.Array, head: jax.Array, want: jax.Array, *,
     return out[0, :nb]
 
 
+def _trace_rank_kernel(want_ref, out_ref, *, n: int):
+    """Exclusive prefix rank of the processed mask: the r-th masked window
+    lane writes absolute trace position ``trace_n + r``. Same log-step
+    shift-add prefix sum as the ring-slot kernel, without the ring gather —
+    the write itself is a plain XLA scatter on the (cap, 4) trace buffer."""
+    want = want_ref[0]                     # (n,) int32 0/1
+    x = want
+    s = 1
+    while s < n:
+        x = x + jnp.concatenate([jnp.zeros((s,), jnp.int32), x[:-s]])
+        s *= 2
+    out_ref[0] = x - want                  # exclusive prefix
+
+
+def trace_rank(mask: jax.Array, *, interpret=False):
+    """(n,) processed mask -> (n,) exclusive prefix ranks (int32).
+
+    The trace-ring append's position math (``events.trace_append`` rank_fn
+    hook): masked row r's trace slot is ``(trace_n + rank[r]) % trace_cap``.
+    Matches ``kernels.ref.trace_rank_ref`` on every row (unmasked rows carry
+    the running count like the XLA cumsum — the append masks them out).
+    """
+    nb = mask.shape[0]
+    n = 1 << max((nb - 1).bit_length(), 1)
+    wpad = jnp.zeros((n,), jnp.int32).at[:nb].set(
+        mask.astype(jnp.int32))[None]
+    kernel = functools.partial(_trace_rank_kernel, n=n)
+    out = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.int32),
+        interpret=interpret,
+    )(wpad)
+    return out[0, :nb]
+
+
 def _route_rank_kernel(dst_ref, rank_ref, *, n: int, chunk: int):
     """Within-bucket routing ranks: chunked predecessor-count, all in VMEM.
 

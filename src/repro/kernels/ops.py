@@ -85,6 +85,20 @@ def ring_slots(free_ring, head, want):
 
 
 @jax.jit
+def trace_rank(mask):
+    """(n,) processed mask -> (n,) exclusive prefix ranks.
+
+    The trace-ring append's position math (streaming-trace drain, PR 5 ring
+    idiom): masked window lane r writes trace slot ``(trace_n + rank[r]) %
+    trace_cap``. Hook it into the engine with ``Engine(...,
+    trace_fn=ops.trace_rank)``; the default XLA cumsum inside
+    ``events.trace_append`` is the reference (kernels.ref.trace_rank_ref —
+    tests sweep kernel vs reference).
+    """
+    return _es.trace_rank(mask, interpret=_interpret())
+
+
+@jax.jit
 def route_rank(dst_agent):
     """(n,) destination buckets -> (n,) stable within-bucket ranks.
 

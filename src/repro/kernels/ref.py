@@ -56,6 +56,13 @@ def ring_slots_ref(free_ring: jax.Array, head: jax.Array,
     return free_ring[(jnp.asarray(head, jnp.int32) + rank) % cap]
 
 
+def trace_rank_ref(mask: jax.Array) -> jax.Array:
+    """Exclusive prefix rank of the processed mask — XLA reference for
+    kernels.event_select.trace_rank (the trace-ring append position math)."""
+    w = mask.astype(jnp.int32)
+    return jnp.cumsum(w) - w
+
+
 def route_rank_ref(dst_agent: jax.Array) -> jax.Array:
     """Stable within-bucket routing ranks — XLA reference for
     kernels.event_select.route_rank (the emit-routing pack inside

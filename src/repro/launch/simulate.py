@@ -16,8 +16,43 @@ import argparse
 import glob
 import json
 import os
+import sys
 
 import numpy as np
+
+
+def _stream_args(p):
+    """The host-streaming observability knobs (t0t1 + distributed modes)."""
+    p.add_argument("--stream-trace", type=int, default=None, metavar="CAP",
+                   help="stream the full event trace to the host through a "
+                        "CAP-row device-side ring drained at window "
+                        "boundaries (keeps C_TRACE_DROP == 0 for runs of any "
+                        "length; CAP must be >= the exec width)")
+    p.add_argument("--metrics-interval", type=int, default=None, metavar="N",
+                   help="emit a fleet metrics snapshot as one JSON line on "
+                        "stdout every N windows (registry-declared counter "
+                        "names; a final snapshot is always emitted)")
+    p.add_argument("--drain-every", type=int, default=16, metavar="N",
+                   help="trace-ring drain cadence in windows (forced drains "
+                        "still fire whenever the next window could overrun "
+                        "the ring; default 16)")
+
+
+def _build_streams(args):
+    """(engine kwargs, TraceStream | None, MetricsStream | None) from the
+    CLI knobs — empty kwargs when streaming is off."""
+    kw = {}
+    ts = ms = None
+    if args.stream_trace is not None:
+        from repro.core.monitoring import TraceStream
+        ts = TraceStream()
+        kw.update(trace_cap=args.stream_trace, trace_stream=ts,
+                  drain_every=args.drain_every)
+    if args.metrics_interval is not None:
+        from repro.core.monitoring import MetricsStream
+        ms = MetricsStream(interval=args.metrics_interval, out=sys.stdout)
+        kw.update(metrics_stream=ms, drain_every=args.drain_every)
+    return kw, ts, ms
 
 
 def _exec_policy_args(args, pool_cap):
@@ -64,17 +99,22 @@ def run_t0t1(args):
             batched_dispatch=args.batched_dispatch,
             merge_mode=args.merge_mode, insert_mode=args.insert_mode,
             **_exec_policy_args(args, pool_cap))
-        eng = Engine(world, own, init_ev, spec)
+        stream_kw, ts, _ms = _build_streams(args)
+        eng = Engine(world, own, init_ev, spec, **stream_kw)
         if args.adaptive_exec:
             st = eng.run_adaptive(max_windows=200_000)
         else:
             st = eng.run_local(max_windows=200_000)
         c = np.asarray(st.counters).sum(axis=0)
+        extra = ""
+        if ts is not None:
+            extra = (f" streamed={ts.n_streamed}"
+                     f" trace_drop={int(c[mon.C_TRACE_DROP])}")
         print(f"[t0t1] bw={bw:7.3f} MB/tick  events={int(c[mon.C_EVENTS]):6d} "
               f"stale={int(c[mon.C_STALE]):5d} "
               f"interrupts={int(c[mon.C_INTERRUPTS]):5d} "
               f"MB={int(c[mon.C_MB_TRANSFERRED])} "
-              f"windows={int(np.asarray(st.windows)[0])}")
+              f"windows={int(np.asarray(st.windows)[0])}" + extra)
 
 
 def run_workload(args):
@@ -117,7 +157,7 @@ def run_distributed(args):
                         size=40.0, l0=0, notify_lp=t1["farm"],
                         notify_kind=JOB_SUBMIT.id, notify2_lp=t1["storage"],
                         notify2_kind=DATA_WRITE.id),
-                    interval=15, count=24)
+                    interval=15, count=args.flows)
     pool_cap = 512
     world, own, init_ev, spec = b.build(n_agents=n, lookahead=2,
                                         t_end=100_000, pool_cap=pool_cap,
@@ -126,7 +166,10 @@ def run_distributed(args):
                                         merge_mode=args.merge_mode,
                                         insert_mode=args.insert_mode,
                                         **_exec_policy_args(args, pool_cap))
-    eng = Engine(world, own, init_ev, spec)
+    if args.stream_check and args.stream_trace is None:
+        raise SystemExit("--stream-check needs --stream-trace CAP")
+    stream_kw, ts, _ms = _build_streams(args)
+    eng = Engine(world, own, init_ev, spec, **stream_kw)
     mesh = make_sim_mesh(n_dev)
     state = None
     if args.migrate and n > 1:
@@ -153,10 +196,46 @@ def run_distributed(args):
                  f" migrate_in={int(c[mon.C_MIGRATE_IN])}")
     if args.adaptive_exec:
         extra += f" rungs={sorted(set(eng.adaptive_rungs))}"
+    if ts is not None:
+        extra += (f" streamed={ts.n_streamed}"
+                  f" trace_drop={int(c[mon.C_TRACE_DROP])}")
     print(f"[distributed] agents={n} devices={n_dev} "
           f"events={int(c[mon.C_EVENTS])} "
           f"windows={int(np.asarray(st.windows)[0])} "
           f"remote_msgs={int(c[mon.C_MSGS_REMOTE])}" + extra)
+    if args.stream_check:
+        # end-to-end streaming gate (CI): the streamed trace must (1) have
+        # dropped nothing, (2) actually exceed the in-device ring (the run
+        # would fit in the buffer otherwise and the check would be vacuous),
+        # and (3) be byte-identical to an un-streamed reference run with a
+        # buffer big enough to hold everything — which PR 6 pinned to the
+        # sequential oracle, closing the chain stream == buffer == oracle.
+        from repro.core import merged_engine_trace
+        drop = int(c[mon.C_TRACE_DROP])
+        if drop:
+            raise SystemExit(f"stream-check FAILED: C_TRACE_DROP={drop}")
+        tn = np.asarray(st.trace_n)
+        if int(tn.max()) <= args.stream_trace:
+            raise SystemExit(
+                f"stream-check vacuous: per-agent trace_n max {int(tn.max())}"
+                f" never exceeded the ring cap {args.stream_trace} — lower "
+                f"--stream-trace or raise the event count")
+        ref_eng = Engine(world, own, init_ev, spec, trace_cap=1 << 16)
+        if args.adaptive_exec:
+            ref = ref_eng.run_distributed_adaptive(mesh, max_windows=200_000,
+                                                   state=state)
+        else:
+            ref = ref_eng.run_distributed(mesh, max_windows=200_000,
+                                          state=state)
+        want = merged_engine_trace(np.asarray(ref.trace),
+                                   np.asarray(ref.trace_n))
+        got = ts.merged()
+        if got != want:
+            raise SystemExit(
+                f"stream-check FAILED: streamed trace ({len(got)} rows) != "
+                f"in-device reference ({len(want)} rows)")
+        print(f"[stream-check] OK: {len(got)} rows streamed through a "
+              f"{args.stream_trace}-row ring == reference, trace_drop=0")
 
 
 def main():
@@ -188,6 +267,7 @@ def main():
     p1.add_argument("--exec-ladder", type=int, nargs="+", default=None,
                     help="explicit width ladder for --adaptive-exec "
                          "(default: policy.default_ladder(pool_cap))")
+    _stream_args(p1)
     p2 = sub.add_parser("workload")
     p2.add_argument("--results", default="results/dryrun")
     p2.add_argument("--cell", default="")
@@ -223,6 +303,17 @@ def main():
     p3.add_argument("--insert-mode", choices=("ring", "ref"), default="ring",
                     help="event-pool lifecycle: free-list ring (default) or "
                          "the retained O(pool_cap) insert_ref scan")
+    p3.add_argument("--flows", type=int, default=24,
+                    help="generator flow count (drives total event volume — "
+                         "raise it to push runs past any in-device trace cap)")
+    _stream_args(p3)
+    p3.add_argument("--stream-check", action="store_true",
+                    help="end-to-end streaming gate (CI): after the streamed "
+                         "run, assert C_TRACE_DROP == 0, that the trace "
+                         "actually exceeded the ring cap, and that the "
+                         "streamed trace is byte-identical to an un-streamed "
+                         "big-buffer reference run; exit nonzero on any "
+                         "mismatch")
     args = ap.parse_args()
     dict(t0t1=run_t0t1, workload=run_workload,
          distributed=run_distributed)[args.mode](args)

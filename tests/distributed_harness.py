@@ -43,7 +43,7 @@ N_DEVICES = {n}
 
 def t0t1_build(n_agents, *, pool_cap=256, n_flows=12, interval=25,
                flow_mb=40.0, lookahead=2, t_end=5000, second_gen=False,
-               exec_policy=None):
+               exec_policy=None, exec_cap=None):
     b = ScenarioBuilder(max_cpu=4, queue_cap=8, max_link=4, max_flow=16)
     t0 = b.add_regional_center(n_cpu=2, cpu_power=10.0, disk=500.0,
                                tape=5000.0, tape_rate=5.0)
@@ -64,6 +64,8 @@ def t0t1_build(n_agents, *, pool_cap=256, n_flows=12, interval=25,
               pool_cap=pool_cap, work_per_mb=2.0)
     if exec_policy is not None:
         kw["exec_policy"] = exec_policy
+    if exec_cap is not None:
+        kw["exec_cap"] = exec_cap
     return b.build(**kw)
 
 

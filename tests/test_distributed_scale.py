@@ -100,3 +100,51 @@ print(json.dumps({
     assert len(res["rungs_used"]) > 1, res
     assert res["full_state_equal"]
     assert res["trace_is_oracle"]
+
+
+@pytest.mark.slow
+def test_streaming_trace_distributed_past_cap():
+    """The PR 7 streaming contract on the 4-device driver: a 32-row
+    device-side ring on a run whose per-agent traces overflow it completes
+    with C_TRACE_DROP == 0, and the host-merged streamed trace (per-shard
+    rings drained independently, global agent id = shard-major state row) is
+    byte-identical to the sequential oracle AND to the big-buffer in-device
+    run — on both the static and the lockstep-adaptive driver."""
+    res = run_distributed_child(r"""
+bkw = dict(n_flows=24, t_end=20000, exec_cap=16)
+otrace = oracle_trace(**bkw)
+mesh = Mesh(np.array(jax.devices()), ("agents",))
+w, o, e, s = t0t1_build(6, **bkw)
+ref = Engine(w, o, e, s, trace_cap=4096).run_distributed(mesh)
+ref_trace = engine_trace(ref)
+
+ts = mon.TraceStream()
+ms = mon.MetricsStream(interval=32)
+eng = Engine(w, o, e, s, trace_cap=32, trace_stream=ts, metrics_stream=ms,
+             drain_every=8)
+st = eng.run_distributed(mesh)
+cnt = np.asarray(st.counters)
+
+bkw_a = dict(n_flows=24, t_end=20000)
+w2, o2, e2, s2 = t0t1_build(6, **bkw_a)
+ts2 = mon.TraceStream()
+eng2 = Engine(w2, o2, e2, s2, trace_cap=32, trace_stream=ts2, drain_every=8)
+st2 = eng2.run_distributed_adaptive(
+    mesh, policy=ExecPolicy(ladder=(4, 8, 16)))
+cnt2 = np.asarray(st2.counters)
+print(json.dumps({
+    "past_cap": int(np.asarray(st.trace_n).max()) > 32,
+    "drop": int(cnt[:, mon.C_TRACE_DROP].sum()),
+    "streamed_is_oracle": ts.merged() == otrace,
+    "streamed_is_buffered": ts.merged() == ref_trace,
+    "n": len(otrace),
+    "metrics_final": ms.latest["counters"]["EVENTS"],
+    "adaptive_drop": int(cnt2[:, mon.C_TRACE_DROP].sum()),
+    "adaptive_streamed_is_oracle": ts2.merged() == otrace,
+}))
+""")
+    assert res["past_cap"], res
+    assert res["drop"] == 0 and res["adaptive_drop"] == 0
+    assert res["streamed_is_oracle"] and res["streamed_is_buffered"]
+    assert res["adaptive_streamed_is_oracle"]
+    assert res["metrics_final"] == res["n"] > 0

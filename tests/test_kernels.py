@@ -217,3 +217,28 @@ def test_route_rank_ops_wrapper():
     dst = dst.astype(jnp.int32)
     np.testing.assert_array_equal(np.asarray(ops.route_rank(dst)),
                                   np.asarray(route_rank_ref(dst)))
+
+
+@pytest.mark.parametrize("n,density,seed", [
+    (64, 0.5, 0), (256, 0.9, 1), (513, 0.2, 2), (1024, 0.0, 3),
+    (37, 1.0, 4), (1, 1.0, 5), (128, 0.03, 6),
+])
+def test_trace_rank_sweep(n, density, seed):
+    """Pallas prefix-sum trace ranks == XLA ref == the sequential numpy
+    exclusive count, exactly (the trace-ring append position math of the
+    streaming drain)."""
+    from repro.kernels.event_select import trace_rank as trace_raw
+    mask = jax.random.bernoulli(jax.random.PRNGKey(seed), density, (n,))
+    got = np.asarray(trace_raw(mask, interpret=True))
+    want = np.asarray(ref.trace_rank_ref(mask))
+    m = np.asarray(mask)
+    expect = np.cumsum(m.astype(np.int32)) - m.astype(np.int32)
+    np.testing.assert_array_equal(got, expect)
+    np.testing.assert_array_equal(want, expect)
+
+
+def test_trace_rank_ops_wrapper():
+    from repro.kernels.ref import trace_rank_ref
+    mask = jax.random.bernoulli(jax.random.PRNGKey(11), 0.6, (200,))
+    np.testing.assert_array_equal(np.asarray(ops.trace_rank(mask)),
+                                  np.asarray(trace_rank_ref(mask)))
