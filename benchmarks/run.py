@@ -31,6 +31,9 @@
                      on 4 forced host devices vs 1 (shard_map x vmap driver;
                      subprocesses, trajectory entry — no gate on shared-CPU
                      "devices")
+  ensemble_throughput — PR 8 vmap-over-seeds ensembles: one fused 128-replica
+                     run_ensemble launch vs a sequential run_local loop
+                     (replicas/s; trajectory entry — no gate)
   kernels          — µs/call for each Pallas kernel's XLA reference path
   workload_sim     — DESIGN.md §2: DES-predicted step time vs analytic roofline
 
@@ -614,6 +617,62 @@ def bench_trace_stream(n_flows=32, n_agents=2, ring=64, drain_every=8,
          f"speedup={dt_off / dt_str:.2f}")
 
 
+def bench_ensemble_throughput(replicas=128, seq_sample=8):
+    """PR 8 vmap-over-seeds ensembles: replicas/s for one fused
+    ``run_ensemble`` launch vs a sequential ``run_local`` loop over
+    individually seeded states (``seq_sample`` runs extrapolated to a rate).
+
+    The scenario is the failure-injection farm — its ``fp_rng`` LCG is what
+    the default seed jump decorrelates, so the replicas genuinely diverge
+    (different window counts) rather than re-running one trajectory R times.
+    Correctness rides along: a sampled replica's full state slice must be
+    byte-identical to its individual seeded run (the while_loop batching
+    freezes finished replicas, it never lets them keep stepping). Recorded
+    as a baseline.json *trajectory* entry — no gate; the speedup on
+    shared-CPU "devices" prices launch amortization, not real parallel
+    silicon.
+    """
+    from repro.core.engine import seed_rng_fields
+    from repro.scenarios.failures import build_failure_scenario
+
+    built, _info = build_failure_scenario(n_farms=2, pool_cap=128)
+    eng = Engine(*built)
+    seeds = np.arange(replicas, dtype=np.int32)
+    jax.block_until_ready(eng.run_ensemble(seeds).counters)      # compile
+    t0 = time.perf_counter()
+    out = eng.run_ensemble(seeds)
+    jax.block_until_ready(out.counters)
+    dt_ens = time.perf_counter() - t0
+
+    solo = Engine(*built)
+    seed_one = jax.jit(seed_rng_fields)
+    init = solo.init_state()
+    jax.block_until_ready(
+        solo.run_local(state=seed_one(init, np.int32(0))).counters)  # compile
+    t0 = time.perf_counter()
+    for s in range(seq_sample):
+        st = solo.run_local(state=seed_one(init, np.int32(s)))
+        jax.block_until_ready(st.counters)
+    dt_seq = time.perf_counter() - t0
+
+    r = replicas - 1
+    one = solo.run_local(state=seed_one(init, np.int32(r)))
+    same = jax.tree.all(jax.tree.map(
+        lambda x, y: bool((np.asarray(x)[r] == np.asarray(y)).all()),
+        out, one))
+    assert bool(same), "ensemble replica != individual seeded run"
+
+    rate_ens = replicas / dt_ens
+    rate_seq = seq_sample / dt_seq
+    n_events = int(np.asarray(out.counters)[:, :, mon.C_EVENTS].sum())
+    n_windows = len({int(w) for w in np.asarray(out.windows)[:, 0]})
+    emit("ensemble_throughput", dt_ens * 1e6,
+         f"replicas={replicas};events={n_events};"
+         f"distinct_window_counts={n_windows};"
+         f"replicas_s_ensemble={rate_ens:.1f};replicas_s_seq={rate_seq:.1f};"
+         f"speedup={rate_ens / rate_seq:.2f}")
+
+
 def bench_shard_scaling(n_agents=64, n_ticks=32, lookahead=2):
     """Distributed scale-out: events/s at 64 packed agents, 4 host devices vs
     1 (the shard_map x vmap driver; K = 16 vs 64 lanes per shard).
@@ -788,6 +847,10 @@ def main() -> None:
                     help="also run the multi-device shard_scaling benchmark "
                          "(subprocesses with forced host device counts; run "
                          "by the dedicated distributed CI job)")
+    ap.add_argument("--ensemble", action="store_true",
+                    help="also run the ensemble_throughput benchmark "
+                         "(128-replica vmap-over-seeds launch vs a "
+                         "sequential loop; run by the distributed CI job)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.quick:
@@ -816,10 +879,13 @@ def main() -> None:
         bench_cache_churn()
         bench_trace_stream()
         bench_shard_scaling()
+        bench_ensemble_throughput()
         bench_kernels()
         bench_workload_sim()
     if args.shard_scaling and args.quick:
         bench_shard_scaling()
+    if args.ensemble and args.quick:
+        bench_ensemble_throughput()
     if args.json:
         write_json(args.json)
 

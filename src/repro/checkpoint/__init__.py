@@ -1,1 +1,12 @@
-"""repro.checkpoint subpackage."""
+"""Checkpoint/resume of simulation and training state (atomic, resume-exact).
+
+:class:`Checkpointer` saves any pytree; :class:`SimCheckpointer` is the
+engine-aware layer — full ``EngineState`` snapshots at GVT-aligned window
+boundaries, restorable into any of the four drivers on any device count.
+``tools/check_api.py`` gates the saved key layout against the
+registry-generated structs.
+"""
+from repro.checkpoint.checkpointer import (Checkpointer, SimCheckpoint,
+                                           SimCheckpointer, tree_keys)
+
+__all__ = ["Checkpointer", "SimCheckpoint", "SimCheckpointer", "tree_keys"]

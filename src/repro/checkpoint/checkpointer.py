@@ -2,41 +2,92 @@
 
 Layout (one step):
   <dir>/step_000123.tmp/            written first
-      host_<k>.npz                  this host's param/opt shards (flattened tree)
-      manifest.json                 treedef + shapes + dtypes + step + mesh
+      host_<k>.npz                  this host's tree leaves (flattened)
+      manifest.json                 keys + shapes + dtypes + step (+ sim aux)
   <dir>/step_000123/                atomic rename on completion (commit point)
 
 Restart picks the highest committed step, validates the manifest against the
-current tree structure, and re-shards automatically (arrays are saved unsharded
-per host slice; on mesh change ft/elastic.py derives the new slicing). The async
-writer runs in a daemon thread; ``wait()`` joins before the next save or exit.
+current tree structure, and casts leaves back to the template dtypes. The
+async writer runs in a daemon thread; ``wait()`` joins before the next save
+or exit. A 1000-node deployment maps host_<k> to the process index; here
+(single process) k == 0 holds the full tree, which keeps tests exact without
+loss of generality.
 
-A 1000-node deployment maps host_<k> to the process index; here (single process)
-k == 0 holds the full tree, which keeps tests exact without loss of generality.
+Two layers live here:
+
+* :class:`Checkpointer` — the generic tree saver (any pytree: training
+  params/opt tuples, raw arrays). Leaf keys come from
+  ``jax.tree_util.tree_flatten_with_path`` via :func:`tree_keys`, so
+  registry-generated NamedTuple structs (``World``, ``EngineState``) produce
+  stable human-readable names like ``world/lp_agent`` — the layout
+  ``tools/check_api.py`` gates against the regenerated structs.
+* :class:`SimCheckpointer` — the engine-aware layer: ``save_sim`` captures a
+  full ``EngineState`` at a GVT-aligned window boundary (event pool ring +
+  cursors, world tables incl. in-handler RNG/LCG state, counters, trace
+  ring + ``trace_tail``) plus the adaptive policy rung and the host-side
+  drained :class:`~repro.core.monitoring.TraceStream` spans, so a resumed
+  run — on any of the four drivers, on a *different* device count — is
+  byte-identical to the uninterrupted one. Sim saves are blocking and the
+  rename is the commit point, so a SIGKILL at any instant leaves either the
+  previous checkpoint or the new one, never a torn file.
 """
 from __future__ import annotations
 
 import json
 import os
 import shutil
+import signal
 import threading
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
+def _keystr(path) -> str:
+    """One tree-path entry -> a stable, readable key segment.
+
+    Registry-generated structs are NamedTuples, whose path entries are
+    ``GetAttrKey`` (``.name``); dicts give ``DictKey`` (``.key``), tuples and
+    lists ``SequenceKey`` (``.idx``). The pre-PR 4 code fell through to
+    ``str(p)`` for NamedTuples, producing ``.world/.lp_agent``-style keys —
+    the seed API drift this PR fixes.
+    """
+    parts = []
+    for p in path:
+        if hasattr(p, "name"):       # GetAttrKey (NamedTuple fields)
+            parts.append(str(p.name))
+        elif hasattr(p, "key"):      # DictKey / FlattenedIndexKey
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):      # SequenceKey
+            parts.append(str(p.idx))
+        else:  # pragma: no cover - future key types
+            parts.append(str(p).strip("."))
+    return "/".join(parts)
+
+
 def _tree_paths(tree) -> list[tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    out = []
-    for path, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        out.append((key, leaf))
-    return out
+    return [(_keystr(path), leaf) for path, leaf in flat]
+
+
+def tree_keys(tree) -> list[str]:
+    """The flattened leaf key names a tree saves under (checkpoint layout).
+
+    For an ``EngineState`` this is ``world/<field>`` for every
+    registry-generated ``World`` field, ``pool/<field>`` for the event pool
+    (free ring + cursors included), and the top-level scalars (``counters``,
+    ``t_now``, ``done``, ``windows``, ``trace``, ``trace_n``,
+    ``trace_tail``). ``tools/check_api.py`` regenerates this list from a
+    fresh registry and fails on drift.
+    """
+    return [k for k, _leaf in _tree_paths(tree)]
 
 
 class Checkpointer:
+    """Generic atomic tree checkpointing (see module docstring)."""
+
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
@@ -44,15 +95,11 @@ class Checkpointer:
         self._thread: threading.Thread | None = None
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, tree, *, host: int = 0, blocking: bool = False):
+    def _write_step(self, step: int, arrays: dict[str, np.ndarray],
+                    manifest: dict, *, host: int = 0,
+                    blocking: bool = False) -> None:
+        """Atomic commit of one step: tmp dir -> rename (the commit point)."""
         self.wait()
-        arrays = {k: np.asarray(v) for k, v in _tree_paths(tree)}
-        manifest = {
-            "step": step,
-            "keys": sorted(arrays),
-            "shapes": {k: list(v.shape) for k, v in arrays.items()},
-            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
-        }
 
         def write():
             tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
@@ -71,6 +118,16 @@ class Checkpointer:
         else:
             self._thread = threading.Thread(target=write, daemon=True)
             self._thread.start()
+
+    def save(self, step: int, tree, *, host: int = 0, blocking: bool = False):
+        arrays = {k: np.asarray(v) for k, v in _tree_paths(tree)}
+        manifest = {
+            "step": step,
+            "keys": sorted(arrays),
+            "shapes": {k: list(v.shape) for k, v in arrays.items()},
+            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        }
+        self._write_step(step, arrays, manifest, host=host, blocking=blocking)
 
     def wait(self):
         if self._thread is not None:
@@ -95,8 +152,8 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, tree_like, step: int | None = None, *, host: int = 0):
-        """Restore into the structure of ``tree_like``. Returns (step, tree)."""
+    def _read_step(self, step: int | None, *, host: int = 0):
+        """(step, npz blob, manifest) of a committed step (default latest)."""
         self.wait()
         if step is None:
             step = self.latest_step()
@@ -106,6 +163,11 @@ class Checkpointer:
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
         blob = np.load(os.path.join(path, f"host_{host}.npz"))
+        return step, blob, manifest
+
+    def restore(self, tree_like, step: int | None = None, *, host: int = 0):
+        """Restore into the structure of ``tree_like``. Returns (step, tree)."""
+        step, blob, manifest = self._read_step(step, host=host)
         want = {k for k, _ in _tree_paths(tree_like)}
         have = set(manifest["keys"])
         if want != have:
@@ -120,3 +182,125 @@ class Checkpointer:
             leaves.append(jnp.asarray(arr, dtype=proto.dtype if hasattr(
                 proto, "dtype") else arr.dtype))
         return step, jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ------------------------------------------------------------ engine layer
+_STATE = "state/"        # EngineState leaves
+_TRACE_SEG = "trace_seg/"  # drained TraceStream spans: trace_seg/<agent>/<start>
+
+
+class SimCheckpoint(NamedTuple):
+    """One restored simulation checkpoint.
+
+    ``state`` is the unpadded (A, ...) ``EngineState`` — pass it to any
+    driver's ``state=``; the distributed drivers re-pad for whatever mesh
+    they are given, so a checkpoint taken on D devices restores onto D'.
+    ``rung`` is the adaptive ladder rung chosen for the *next* window at
+    save time (None for the static drivers) — pass it to
+    ``run_adaptive``/``run_distributed_adaptive``'s ``rung=``.
+    """
+
+    step: int
+    state: Any
+    rung: int | None
+
+
+class SimCheckpointer(Checkpointer):
+    """Engine-aware checkpointing at GVT-aligned window boundaries.
+
+    Attach to an :class:`~repro.core.engine.Engine` (``checkpointer=``):
+    every ``every`` windows the engine hands the unpadded ``EngineState``
+    (plus the adaptive rung, if any) to :meth:`save_sim`. Saves are
+    blocking — the window boundary is the only point where the device
+    state, the host-side drained trace spans, and the policy rung are
+    mutually consistent, so the save must complete before the next window
+    mutates any of them.
+
+    ``kill_after`` is the crash-harness knob: SIGKILL this process right
+    after the first *committed* checkpoint at a window >= ``kill_after``
+    (a real, unhandled kill — the atomic-rename commit point is what makes
+    the resulting checkpoint directory trustworthy).
+    """
+
+    def __init__(self, directory: str, every: int = 0, keep: int = 3,
+                 kill_after: int | None = None):
+        super().__init__(directory, keep=keep)
+        if every < 0:
+            raise ValueError(f"every must be >= 0, got {every}")
+        self.every = int(every)
+        self.kill_after = kill_after
+
+    def due(self, window: int) -> bool:
+        """Does the cadence call for a save at this window boundary?"""
+        return self.every > 0 and window > 0 and window % self.every == 0
+
+    # ------------------------------------------------------------------ save
+    def save_sim(self, window: int, state, *, engine=None,
+                 rung: int | None = None) -> None:
+        """Save one window-boundary snapshot (blocking, atomic).
+
+        ``state`` must be the unpadded (A, ...) ``EngineState``. With
+        ``engine`` given, the attached :class:`TraceStream`'s drained spans
+        ride along (after an ``effects_barrier`` so every in-flight drain
+        callback has landed) — a streamed run resumed from this checkpoint
+        reassembles the full ``[0, trace_n)`` trace.
+        """
+        arrays = {_STATE + k: np.asarray(v) for k, v in _tree_paths(state)}
+        ts = getattr(engine, "trace_stream", None)
+        if ts is not None:
+            getattr(jax, "effects_barrier", lambda: None)()
+            for k, rows in ts.state_dict().items():
+                arrays[_TRACE_SEG + k] = rows
+        manifest = {
+            "step": window,
+            "sim": True,
+            "rung": rung,
+            "n_agents": int(np.asarray(state.t_now).shape[0]),
+            "keys": sorted(arrays),
+            "shapes": {k: list(v.shape) for k, v in arrays.items()},
+            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        }
+        self._write_step(window, arrays, manifest, blocking=True)
+        if self.kill_after is not None and window >= int(self.kill_after):
+            os.kill(os.getpid(), signal.SIGKILL)  # the crash harness
+
+    # --------------------------------------------------------------- restore
+    def restore_sim(self, engine, step: int | None = None) -> SimCheckpoint:
+        """Restore a checkpoint into ``engine``'s state structure.
+
+        Validates every leaf against ``engine.init_state()`` (same scenario
+        spec => same unpadded shapes regardless of device count) and loads
+        the saved drained-trace spans into ``engine.trace_stream`` (they are
+        consumed by the stream's next ``begin()``, i.e. when a driver runs).
+        Returns a :class:`SimCheckpoint`; feed ``state``/``rung`` to any
+        driver.
+        """
+        step, blob, manifest = self._read_step(step)
+        template = engine.init_state()
+        flat, treedef = jax.tree_util.tree_flatten(template)
+        keyed = _tree_paths(template)
+        want = {_STATE + k for k, _ in keyed}
+        have = {k for k in manifest["keys"] if k.startswith(_STATE)}
+        if want != have:
+            raise ValueError(
+                f"checkpoint does not match this engine's EngineState: "
+                f"missing {sorted(want - have)[:5]} "
+                f"unexpected {sorted(have - want)[:5]}")
+        leaves = []
+        for (k, _), proto in zip(keyed, flat):
+            arr = blob[_STATE + k]
+            if tuple(arr.shape) != tuple(np.shape(proto)):
+                raise ValueError(
+                    f"checkpoint leaf {k!r} has shape {arr.shape}, engine "
+                    f"expects {np.shape(proto)} — same scenario spec "
+                    f"(n_agents, pool_cap, trace_cap) required to resume")
+            leaves.append(jnp.asarray(arr, dtype=proto.dtype))
+        state = jax.tree_util.tree_unflatten(treedef, leaves)
+        segs = {k[len(_TRACE_SEG):]: np.asarray(blob[k])
+                for k in manifest["keys"] if k.startswith(_TRACE_SEG)}
+        ts = getattr(engine, "trace_stream", None)
+        if ts is not None and segs:
+            ts.load_state(segs)
+        rung = manifest.get("rung")
+        return SimCheckpoint(step=step, state=state,
+                             rung=None if rung is None else int(rung))

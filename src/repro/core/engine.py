@@ -211,7 +211,8 @@ class Engine:
                  trace_fn: Callable[[jax.Array], jax.Array] | None = None,
                  trace_stream: "mon.TraceStream | None" = None,
                  metrics_stream: "mon.MetricsStream | None" = None,
-                 drain_every: int = 16):
+                 drain_every: int = 16,
+                 checkpointer=None):
         self.world = world
         self.own = own
         self.init_events = init_events
@@ -230,6 +231,18 @@ class Engine:
         # same driver shape run_adaptive always uses.
         self.trace_stream = trace_stream
         self.metrics_stream = metrics_stream
+        # durable checkpoint/resume (docs/architecture.md, "Checkpoint /
+        # resume"): a repro.checkpoint.SimCheckpointer saves the full
+        # unpadded EngineState (pool ring + cursors, world tables incl. LCG
+        # fields, counters, trace ring + trace_tail) every
+        # `checkpointer.every` windows. The window boundary is the GVT sync
+        # point, so the snapshot is globally consistent by construction; a
+        # restored state re-enters any of the four drivers via their
+        # ``state=`` (and ``rung=``) arguments — on a different device
+        # count, since the distributed drivers re-pad for whatever mesh
+        # they get. Like streaming, an attached checkpointer switches the
+        # static drivers to the host-stepped window loop.
+        self.checkpointer = checkpointer
         self.drain_every = int(drain_every)
         if self.drain_every < 1:
             raise ValueError(f"drain_every must be >= 1, got {drain_every}")
@@ -728,6 +741,42 @@ class Engine:
     def _streaming(self) -> bool:
         return self.trace_stream is not None or self.metrics_stream is not None
 
+    # ------------------------------------------------------ checkpoint layer
+    @property
+    def _checkpointing(self) -> bool:
+        ck = self.checkpointer
+        return ck is not None and getattr(ck, "every", 0) > 0
+
+    def _checkpoint_window(self, st: EngineState, rung: int | None = None,
+                           padded: bool = False) -> None:
+        """Window-boundary checkpoint hook (host-stepped drivers).
+
+        Saves the *unpadded* state when the cadence is due: a checkpoint is
+        device-layout-free, so restore re-pads for whatever mesh the resumed
+        driver gets. ``rung`` is the adaptive rung already chosen for the
+        next window (the adaptive loops call this after ``choose_rung``), so
+        a resumed trajectory continues exactly."""
+        ck = self.checkpointer
+        if ck is None:
+            return
+        w = int(np.asarray(st.windows).reshape(-1)[0])
+        if not ck.due(w):
+            return
+        ck.save_sim(w, self._slice_state(st) if padded else st,
+                    engine=self, rung=rung)
+
+    def restore(self, step: int | None = None):
+        """Load a checkpoint written by this engine's checkpointer.
+
+        Returns a ``SimCheckpoint(step, state, rung)``: pass ``state=`` (and
+        for the adaptive drivers ``rung=``) to any driver to resume. Also
+        reloads the checkpoint's drained trace spans into the attached
+        :class:`TraceStream`, so a resumed streamed run reassembles the full
+        ``[0, trace_n)`` trace with zero drops."""
+        if self.checkpointer is None:
+            raise ValueError("no checkpointer attached to this engine")
+        return self.checkpointer.restore_sim(self, step=step)
+
     def _on_trace_drain(self, agent, start, count, ring):
         """io_callback target (host thread): forward a drained span."""
         ts = self.trace_stream
@@ -776,16 +825,18 @@ class Engine:
                                          np.asarray(st.t_now))
         return st
 
-    def _run_stream(self, max_windows: int,
+    def _run_hosted(self, max_windows: int,
                     state: EngineState | None = None,
                     mesh: Mesh | None = None) -> EngineState:
-        """Host-stepped static-width run with the streaming hooks live.
+        """Host-stepped static-width run with the host hooks live.
 
-        ``run_local``/``run_distributed`` land here when a stream is
-        attached: the whole-run while_loop cannot carry io_callbacks under
-        vmap, so the driver steps the jit-cached window program from the
-        host (the run_adaptive shape) and the drains fire inside each
-        window program at its boundary."""
+        ``run_local``/``run_distributed`` land here when a stream or a
+        checkpointer is attached: the whole-run while_loop can carry neither
+        io_callbacks under vmap nor a mid-run host save, so the driver steps
+        the jit-cached window program from the host (the run_adaptive shape).
+        Stream drains fire inside each window program at its boundary; the
+        checkpoint hook runs between window programs — the GVT-aligned
+        boundary where the state is globally consistent."""
         width = self.spec.exec_cap
         self._begin_streams([width])
         if mesh is None:
@@ -800,6 +851,7 @@ class Engine:
             if bool(np.asarray(st.done).all()):
                 break
             st = fn(st)
+            self._checkpoint_window(st, padded=mesh is not None)
         if mesh is not None:
             st = self._slice_state(st)
         return self._finalize_streams(st)
@@ -824,11 +876,12 @@ class Engine:
         ``state`` resumes from a prior EngineState (e.g. after a placement
         migration) instead of ``init_state()``.
 
-        With a trace/metrics stream attached the run is host-stepped (see
-        :meth:`_run_stream`) — the whole-run while_loop cannot carry the
-        drain io_callbacks under a batched predicate."""
-        if self._streaming:
-            return self._run_stream(max_windows, state=state)
+        With a trace/metrics stream or a checkpointer attached the run is
+        host-stepped (see :meth:`_run_hosted`) — the whole-run while_loop
+        cannot carry the drain io_callbacks under a batched predicate, nor
+        pause for a mid-run checkpoint save."""
+        if self._streaming or self._checkpointing:
+            return self._run_hosted(max_windows, state=state)
         st = self.init_state() if state is None else state
         key = ("run_local", max_windows, jit)
         fn = self._jit_cache.get(key)
@@ -926,11 +979,13 @@ class Engine:
         sequential oracle. ``state`` resumes from a prior (unpadded)
         EngineState.
 
-        With a trace/metrics stream attached the run is host-stepped (see
-        :meth:`_run_stream`); per-shard rings drain independently and the
-        host merge is shard-major, matching ``merged_engine_trace``."""
-        if self._streaming:
-            return self._run_stream(max_windows, state=state, mesh=mesh)
+        With a trace/metrics stream or a checkpointer attached the run is
+        host-stepped (see :meth:`_run_hosted`); per-shard rings drain
+        independently and the host merge is shard-major, matching
+        ``merged_engine_trace``. Checkpoints save the unpadded state, so a
+        resumed run may use a different mesh."""
+        if self._streaming or self._checkpointing:
+            return self._run_hosted(max_windows, state=state, mesh=mesh)
         axes = self._dist_axes(mesh)
         st = self._pad_state(self.init_state() if state is None else state,
                              axes.size)
@@ -1024,7 +1079,8 @@ class Engine:
 
     def run_adaptive(self, max_windows: int = 10_000,
                      policy: "pol.ExecPolicy | int | None" = None,
-                     state: EngineState | None = None) -> EngineState:
+                     state: EngineState | None = None,
+                     rung: int | None = None) -> EngineState:
         """Monitoring-driven execution (vmap driver): the per-window LISA
         loop of core/policy.py.
 
@@ -1039,12 +1095,15 @@ class Engine:
 
         ``policy`` overrides ``spec.exec_policy`` (a bare int means a
         single-rung ladder, i.e. the static behavior); ``state`` resumes
-        from a prior EngineState.
+        from a prior EngineState and ``rung`` from a checkpointed rung
+        (checkpoints save the rung *after* ``choose_rung``, and the restored
+        counters are exactly the save-time ``cur``, so a resumed trajectory
+        concatenates byte-identically with the prefix).
         """
         p = pol.normalize(self.spec.exec_policy if policy is None else policy)
         self._begin_streams(p.ladder)
         st = self.init_state() if state is None else state
-        rung = p.init_rung
+        rung = p.init_rung if rung is None else int(rung)
         prev = np.asarray(st.counters)
         rungs: list[int] = []
         for _ in range(max_windows):
@@ -1056,6 +1115,7 @@ class Engine:
             stats = pol.window_stats(prev, cur, self.spec.pool_cap)
             rung = pol.choose_rung(p, rung, stats)
             prev = cur
+            self._checkpoint_window(st, rung=rung)
         self.adaptive_rungs = tuple(rungs)
         return self._finalize_streams(st)
 
@@ -1079,8 +1139,8 @@ class Engine:
 
     def run_distributed_adaptive(self, mesh: Mesh, max_windows: int = 10_000,
                                  policy: "pol.ExecPolicy | int | None" = None,
-                                 state: EngineState | None = None
-                                 ) -> EngineState:
+                                 state: EngineState | None = None,
+                                 rung: int | None = None) -> EngineState:
         """Monitoring-driven distributed execution: ``run_adaptive``'s LISA
         loop over the shard_map x vmap driver.
 
@@ -1094,14 +1154,16 @@ class Engine:
         the max-reduced stats, the lockstep rung trajectory is byte-identical
         to ``run_adaptive``'s on the same scenario, and exactness is
         unconditional (spilling is oracle-exact for any width sequence). The
-        trajectory lands in ``self.adaptive_rungs``."""
+        trajectory lands in ``self.adaptive_rungs``. ``state``/``rung``
+        resume from a checkpoint — on any mesh, since checkpoints hold the
+        unpadded state and this driver re-pads for the mesh it is given."""
         p = pol.normalize(self.spec.exec_policy if policy is None else policy)
         self._begin_streams(p.ladder)
         axes = self._dist_axes(mesh)
         A = self.spec.n_agents
         st = self._pad_state(self.init_state() if state is None else state,
                              axes.size)
-        rung = p.init_rung
+        rung = p.init_rung if rung is None else int(rung)
         prev = np.asarray(st.counters)
         rungs: list[int] = []
         for _ in range(max_windows):
@@ -1114,5 +1176,79 @@ class Engine:
                                            axes.n_shards)
             rung = pol.choose_rung_lockstep(p, rung, stats)
             prev = cur
+            self._checkpoint_window(st, rung=rung, padded=True)
         self.adaptive_rungs = tuple(rungs)
         return self._finalize_streams(self._slice_state(st))
+
+    # ------------------------------------------------------- ensemble driver
+    def run_ensemble(self, seeds, max_windows: int = 10_000,
+                     seed_fn=None) -> EngineState:
+        """Monte Carlo vmap-over-seeds driver: R replicas, one fused launch.
+
+        Stacks R copies of the initial state, perturbs each with
+        ``seed_fn(state, seed)`` (default :func:`seed_rng_fields`, which
+        jumps every ``*_rng`` world field — the in-handler LCG states), and
+        runs the whole-run while_loop under an outer replica vmap, so
+        hundreds of replicas execute as one XLA program. jax's while_loop
+        batching rule freezes finished replicas with a per-lane select, so
+        each replica's slice of the (R, A, ...) result is byte-identical to
+        a ``run_local`` of the same seeded state. With a MetricsStream
+        attached, per-replica counter totals are reduced into
+        ``metrics_stream`` (``replica_counters`` + a summary JSON line).
+
+        "Millions of users" traffic in the paper's terms is exactly this:
+        one launch sweeping seeds, not one hand-built spec per run.
+        """
+        if self.trace_stream is not None:
+            raise ValueError(
+                "run_ensemble cannot stream traces (io_callback is "
+                "unsupported under the nested replica vmap); use a bounded "
+                "trace_cap for per-replica traces")
+        if self._checkpointing:
+            raise ValueError(
+                "run_ensemble is one fused program with no window "
+                "boundaries on the host; checkpoint cadence applies to the "
+                "single-run drivers")
+        seeds = jnp.asarray(seeds, jnp.int32).reshape(-1)
+        sfn = seed_fn or seed_rng_fields
+        skey = ("ensemble_seed", sfn)
+        seed_all = self._jit_cache.get(skey)
+        if seed_all is None:
+            seed_all = jax.jit(jax.vmap(sfn, in_axes=(None, 0)))
+            self._jit_cache[skey] = seed_all
+        key = ("run_ensemble", max_windows)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            inner = jax.vmap(self._run_fn(AXIS if self.spec.n_agents > 1
+                                          else None, max_windows),
+                             axis_name=AXIS)
+            fn = jax.jit(jax.vmap(inner))
+            self._jit_cache[key] = fn
+        out = fn(seed_all(self.init_state(), seeds))
+        ms = self.metrics_stream
+        if ms is not None:
+            ms.begin(self.spec.n_agents, self.registry)
+            ms.ensemble(np.asarray(seeds), np.asarray(out.counters),
+                        np.asarray(out.windows), np.asarray(out.t_now))
+        return out
+
+
+def seed_rng_fields(state: EngineState, seed) -> EngineState:
+    """Default ensemble ``seed_fn``: decorrelate one replica's RNG streams.
+
+    Folds the replica seed into every integer world field named ``rng`` or
+    ``*_rng`` — the registry convention for in-handler LCG state (e.g. the
+    failure LP's ``fp_rng``) — using the same affine jump the scenario
+    builders use to space per-row streams. Any int32 is a valid LCG state,
+    so the perturbed replica is exact under the sequential oracle with the
+    same world. A model with no RNG fields yields identical replicas
+    (still useful for throughput measurement)."""
+    upd = {}
+    for name in state.world._fields:
+        if name != "rng" and not name.endswith("_rng"):
+            continue
+        f = getattr(state.world, name)
+        if jnp.issubdtype(f.dtype, jnp.integer):
+            upd[name] = f + jnp.asarray(seed, f.dtype) * jnp.asarray(
+                7919, f.dtype)
+    return state._replace(world=state.world._replace(**upd)) if upd else state

@@ -242,12 +242,36 @@ class TraceStream:
     def __init__(self):
         self._segments: dict[int, dict[int, np.ndarray]] = {}
         self._trace_n: np.ndarray | None = None
+        self._resume: dict[int, dict[int, np.ndarray]] | None = None
 
     def begin(self, n_agents: int) -> None:
-        """Reset for a run of ``n_agents`` (the engine calls this)."""
+        """Reset for a run of ``n_agents`` (the engine calls this).
+
+        If :meth:`load_state` staged checkpointed spans, they seed the
+        segment map instead of an empty one — a resumed run's ring only
+        re-drains ``[trace_tail, ...)``, so the pre-checkpoint prefix must
+        come from the checkpoint for coverage of ``[0, trace_n)`` to close."""
         self.n_agents = n_agents
-        self._segments = {}
+        self._segments = self._resume if self._resume is not None else {}
+        self._resume = None
         self._trace_n = None
+
+    # --------------------------------------------------- checkpoint support
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Drained spans as flat serializable arrays (``"<agent>/<start>"``
+        keys) — what :class:`repro.checkpoint.SimCheckpointer` persists
+        alongside the EngineState (call after ``jax.effects_barrier()``)."""
+        return {f"{a}/{start}": seg
+                for a, spans in self._segments.items()
+                for start, seg in spans.items()}
+
+    def load_state(self, segments: dict[str, np.ndarray]) -> None:
+        """Stage checkpointed spans for the next ``begin()`` (restore path)."""
+        staged: dict[int, dict[int, np.ndarray]] = {}
+        for key, seg in segments.items():
+            a, start = key.split("/")
+            staged.setdefault(int(a), {})[int(start)] = np.asarray(seg)
+        self._resume = staged
 
     def on_drain(self, agent, start, count, ring) -> None:
         """The io_callback target: one drained span of one agent's ring.
@@ -406,3 +430,46 @@ class MetricsStream:
         got = {a: (int(t_now[a]), counters[a])
                for a in range(min(self.n_agents, counters.shape[0]))}
         self._emit(int(windows[0]), got, final=True)
+
+    # ------------------------------------------------------ ensemble support
+    def ensemble(self, seeds, counters, windows, t_now) -> dict:
+        """Reduce an ``Engine.run_ensemble`` result into the stream.
+
+        ``counters`` is the (R, A, N) stacked counter table of R replicas;
+        each replica's per-agent vectors sum to its fleet totals, stored as
+        ``self.replica_counters`` (R, N) with ``self.replica_seeds`` — the
+        per-replica books stay individually recoverable via
+        :meth:`replica`. One summary JSON line (min/mean/max over replicas
+        per counter, plus the ensemble-wide totals) lands on ``out`` /
+        ``self.lines`` in the usual snapshot shape."""
+        seeds = np.asarray(seeds)
+        counters = np.asarray(counters)
+        windows = np.asarray(windows)
+        t_now = np.asarray(t_now)
+        self.replica_seeds = seeds.copy()
+        self.replica_counters = counters.sum(axis=1)  # (R, N): sum over agents
+        total = self.replica_counters.sum(axis=0)
+        rec = {
+            "ensemble": int(seeds.shape[0]),
+            "agents": self.n_agents,
+            "windows": [int(windows.min()), int(windows.max())],
+            "gvt": [int(t_now.min()), int(t_now.max())],
+            "counters": {name: int(total[i])
+                         for name, i in self._names.items()},
+            "per_replica": {
+                name: {"min": int(self.replica_counters[:, i].min()),
+                       "mean": float(self.replica_counters[:, i].mean()),
+                       "max": int(self.replica_counters[:, i].max())}
+                for name, i in self._names.items()},
+        }
+        self.latest = rec
+        self.lines.append(rec)
+        if self.out is not None:
+            self.out.write(json.dumps(rec) + "\n")
+            self.out.flush()
+        return rec
+
+    def replica(self, r: int) -> dict:
+        """One replica's fleet-total counters by name (post-``ensemble``)."""
+        return {name: int(self.replica_counters[r, i])
+                for name, i in self._names.items()}

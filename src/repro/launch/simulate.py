@@ -9,6 +9,17 @@ Modes:
              --agents-per-device packs multiple agent rows per shard,
              --migrate demos cross-shard event migration, --adaptive-exec
              runs the lockstep per-shard width ladder
+  ensemble   Monte Carlo vmap-over-seeds sweep of the failure scenario:
+             hundreds of replicas per launch (Engine.run_ensemble), with
+             per-replica counters reduced into a MetricsStream summary
+
+The t0t1 and distributed modes take durable checkpoint/resume knobs:
+``--checkpoint-dir D --checkpoint-every W`` saves the full EngineState at
+every W-th GVT-aligned window boundary; ``--resume`` restores the latest
+checkpoint and continues — for distributed, onto whatever device count the
+resumed process has (the checkpoint is device-layout-free).
+``--kill-after-window W`` SIGKILLs the process right after the first
+committed checkpoint at window >= W — the CI crash harness.
 """
 from __future__ import annotations
 
@@ -55,6 +66,45 @@ def _build_streams(args):
     return kw, ts, ms
 
 
+def _checkpoint_args(p):
+    """The durable checkpoint/resume knobs (t0t1 + distributed modes)."""
+    p.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                   help="directory for durable EngineState checkpoints "
+                        "(atomic step_* subdirs; enables the other "
+                        "checkpoint knobs)")
+    p.add_argument("--checkpoint-every", type=int, default=0, metavar="W",
+                   help="save a checkpoint every W windows (GVT-aligned "
+                        "boundaries; 0 disables periodic saves)")
+    p.add_argument("--checkpoint-keep", type=int, default=3, metavar="N",
+                   help="retain the newest N checkpoints (default 3)")
+    p.add_argument("--resume", action="store_true",
+                   help="restore the latest checkpoint from "
+                        "--checkpoint-dir and continue the run from it "
+                        "(byte-identical to never having stopped)")
+    p.add_argument("--kill-after-window", type=int, default=None, metavar="W",
+                   help="SIGKILL this process right after the first "
+                        "committed checkpoint at window >= W (crash-harness "
+                        "knob; needs --checkpoint-every)")
+
+
+def _build_checkpointer(args):
+    """A SimCheckpointer from the CLI knobs, or None when checkpointing is
+    off — with the cross-knob validation in one place."""
+    if args.checkpoint_dir is None:
+        if (args.checkpoint_every or args.resume
+                or args.kill_after_window is not None):
+            raise SystemExit("--checkpoint-every/--resume/--kill-after-window "
+                             "need --checkpoint-dir DIR")
+        return None
+    if args.kill_after_window is not None and not args.checkpoint_every:
+        raise SystemExit("--kill-after-window needs --checkpoint-every W "
+                         "(the kill fires after a committed checkpoint)")
+    from repro.checkpoint import SimCheckpointer
+    return SimCheckpointer(args.checkpoint_dir, every=args.checkpoint_every,
+                           keep=args.checkpoint_keep,
+                           kill_after=args.kill_after_window)
+
+
 def _exec_policy_args(args, pool_cap):
     """(exec_cap | exec_policy) build kwargs from the CLI knobs.
 
@@ -78,6 +128,10 @@ def run_t0t1(args):
     from repro.core import monitoring as mon
     from repro.core.components import DATA_WRITE, FLOW_START, JOB_SUBMIT
 
+    ck = _build_checkpointer(args)
+    if ck is not None and len(args.bandwidths) > 1:
+        raise SystemExit("checkpointing needs a single-point sweep: pass one "
+                         "--bandwidths value with --checkpoint-dir")
     for bw in args.bandwidths:
         b = ScenarioBuilder(max_cpu=4, queue_cap=16, max_link=4, max_flow=32)
         t0 = b.add_regional_center(n_cpu=2, cpu_power=10.0, disk=2000.0,
@@ -100,11 +154,16 @@ def run_t0t1(args):
             merge_mode=args.merge_mode, insert_mode=args.insert_mode,
             **_exec_policy_args(args, pool_cap))
         stream_kw, ts, _ms = _build_streams(args)
-        eng = Engine(world, own, init_ev, spec, **stream_kw)
+        eng = Engine(world, own, init_ev, spec, checkpointer=ck, **stream_kw)
+        state, rung = None, None
+        if args.resume:
+            rec = eng.restore()
+            state, rung = rec.state, rec.rung
+            print(f"[resume] window {rec.step} from {args.checkpoint_dir}")
         if args.adaptive_exec:
-            st = eng.run_adaptive(max_windows=200_000)
+            st = eng.run_adaptive(max_windows=200_000, state=state, rung=rung)
         else:
-            st = eng.run_local(max_windows=200_000)
+            st = eng.run_local(max_windows=200_000, state=state)
         c = np.asarray(st.counters).sum(axis=0)
         extra = ""
         if ts is not None:
@@ -168,8 +227,12 @@ def run_distributed(args):
                                         **_exec_policy_args(args, pool_cap))
     if args.stream_check and args.stream_trace is None:
         raise SystemExit("--stream-check needs --stream-trace CAP")
+    ck = _build_checkpointer(args)
+    if args.resume and args.migrate:
+        raise SystemExit("--resume and --migrate conflict: the checkpoint "
+                         "already contains the (possibly migrated) state")
     stream_kw, ts, _ms = _build_streams(args)
-    eng = Engine(world, own, init_ev, spec, **stream_kw)
+    eng = Engine(world, own, init_ev, spec, checkpointer=ck, **stream_kw)
     mesh = make_sim_mesh(n_dev)
     state = None
     if args.migrate and n > 1:
@@ -184,11 +247,17 @@ def run_distributed(args):
         new_la = np.where(la == src, dst,
                           np.where(la == dst, src, la)).astype(np.int32)
         state = eng.apply_placement_distributed(st0, new_la, mesh)
+    run_state, run_rung = state, None
+    if args.resume:
+        rec = eng.restore()
+        run_state, run_rung = rec.state, rec.rung
+        print(f"[resume] window {rec.step} from {args.checkpoint_dir} "
+              f"onto {n_dev} devices")
     if args.adaptive_exec:
         st = eng.run_distributed_adaptive(mesh, max_windows=200_000,
-                                          state=state)
+                                          state=run_state, rung=run_rung)
     else:
-        st = eng.run_distributed(mesh, max_windows=200_000, state=state)
+        st = eng.run_distributed(mesh, max_windows=200_000, state=run_state)
     c = np.asarray(st.counters).sum(axis=0)
     extra = ""
     if args.migrate:
@@ -210,6 +279,10 @@ def run_distributed(args):
         # and (3) be byte-identical to an un-streamed reference run with a
         # buffer big enough to hold everything — which PR 6 pinned to the
         # sequential oracle, closing the chain stream == buffer == oracle.
+        # Under --resume the reference still replays the FULL run from
+        # scratch (state is the initial state, not the restored one), so the
+        # equality proves the killed-and-resumed streamed trace is exactly
+        # the never-interrupted trace.
         from repro.core import merged_engine_trace
         drop = int(c[mon.C_TRACE_DROP])
         if drop:
@@ -236,6 +309,26 @@ def run_distributed(args):
                 f"in-device reference ({len(want)} rows)")
         print(f"[stream-check] OK: {len(got)} rows streamed through a "
               f"{args.stream_trace}-row ring == reference, trace_drop=0")
+
+
+def run_ensemble(args):
+    from repro.core import Engine
+    from repro.core.monitoring import MetricsStream
+    from repro.scenarios.failures import build_failure_scenario
+
+    built, _info = build_failure_scenario(n_farms=args.farms,
+                                          pool_cap=args.pool_cap)
+    ms = MetricsStream(interval=1_000_000, out=sys.stdout)
+    eng = Engine(*built, metrics_stream=ms)
+    seeds = np.arange(args.seed0, args.seed0 + args.replicas, dtype=np.int32)
+    eng.run_ensemble(seeds)
+    ev_stats = ms.latest["per_replica"]["EVENTS"]
+    fail_stats = ms.latest["per_replica"]["CPU_FAILS"]
+    print(f"[ensemble] replicas={args.replicas} farms={args.farms} "
+          f"windows={ms.latest['windows']} "
+          f"events/replica min={ev_stats['min']} mean={ev_stats['mean']:.1f} "
+          f"max={ev_stats['max']} "
+          f"fails/replica min={fail_stats['min']} max={fail_stats['max']}")
 
 
 def main():
@@ -268,6 +361,7 @@ def main():
                     help="explicit width ladder for --adaptive-exec "
                          "(default: policy.default_ladder(pool_cap))")
     _stream_args(p1)
+    _checkpoint_args(p1)
     p2 = sub.add_parser("workload")
     p2.add_argument("--results", default="results/dryrun")
     p2.add_argument("--cell", default="")
@@ -314,9 +408,19 @@ def main():
                          "streamed trace is byte-identical to an un-streamed "
                          "big-buffer reference run; exit nonzero on any "
                          "mismatch")
+    _checkpoint_args(p3)
+    p4 = sub.add_parser("ensemble")
+    p4.add_argument("--replicas", type=int, default=128,
+                    help="Monte Carlo replicas per launch (one fused "
+                         "vmap-over-seeds program; default 128)")
+    p4.add_argument("--farms", type=int, default=4,
+                    help="failure-scenario farm count (scenario size knob)")
+    p4.add_argument("--pool-cap", type=int, default=256)
+    p4.add_argument("--seed0", type=int, default=0,
+                    help="first replica seed (replica r runs seed0 + r)")
     args = ap.parse_args()
-    dict(t0t1=run_t0t1, workload=run_workload,
-         distributed=run_distributed)[args.mode](args)
+    dict(t0t1=run_t0t1, workload=run_workload, distributed=run_distributed,
+         ensemble=run_ensemble)[args.mode](args)
 
 
 if __name__ == "__main__":

@@ -37,6 +37,7 @@ from repro.core import Engine, ScenarioBuilder, events as ev, \\
     merged_engine_trace, run_sequential
 from repro.core import monitoring as mon
 from repro.core.policy import ExecPolicy
+from repro.checkpoint import SimCheckpointer
 
 N_DEVICES = {n}
 
@@ -106,3 +107,23 @@ def run_distributed_child(
     )
     assert out.returncode == 0, out.stderr[-2000:]
     return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run_killed_child(
+    body: str, n_devices: int = N_DEVICES, timeout: int = 600
+) -> subprocess.CompletedProcess:
+    """Run a child that is *expected to die by SIGKILL* (kill-and-resume
+    harness): same plumbing as :func:`run_distributed_child`, but the raw
+    CompletedProcess comes back instead of parsed JSON — the caller asserts
+    ``returncode == -signal.SIGKILL`` and then resumes from whatever the
+    child checkpointed before it was killed."""
+    code = HEADER.format(n=n_devices) + "\n" + body
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    return subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+    )

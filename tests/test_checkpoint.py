@@ -1,0 +1,377 @@
+"""Checkpoint/resume correctness: crash-exact by construction, proven here.
+
+The contract (docs/architecture.md, "Checkpoint / resume"): a
+:class:`SimCheckpointer` snapshot at a GVT-aligned window boundary captures
+the *entire* run — event pool ring + cursors, world tables (including the
+in-handler LCG fields), counters, trace ring + ``trace_tail``, the host-side
+drained trace spans, and the adaptive policy rung — so a resumed run is
+byte-identical to the uninterrupted one and hence to the sequential heapq
+oracle, on any of the four drivers, after a real SIGKILL, and onto a
+different device count. The fast tests drive the in-process drivers through
+randomized checkpoint windows; the slow tests add the subprocess
+kill-and-resume scaffold (``tests/distributed_harness.py``) with forced host
+devices.
+"""
+
+import signal
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import t0t1_builder
+from distributed_harness import run_distributed_child, run_killed_child
+from repro.checkpoint import Checkpointer, SimCheckpointer, tree_keys
+from repro.core import Engine, TraceStream, merged_engine_trace, run_sequential
+from repro.core import monitoring as mon
+from repro.core.policy import ExecPolicy
+
+try:
+    from hypothesis import example, given, settings
+    from hypothesis import strategies as st_
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - the no-hypothesis CI job
+    HAVE_HYPOTHESIS = False
+
+
+def build(n_agents, *, pool_cap=256, exec_cap=None, exec_policy=None):
+    b, kw = t0t1_builder()
+    kw["pool_cap"] = pool_cap
+    if exec_cap is not None:
+        kw["exec_cap"] = exec_cap
+    if exec_policy is not None:
+        kw["exec_policy"] = exec_policy
+    return b.build(n_agents=n_agents, **kw)
+
+
+def tree_eq(a, b):
+    return bool(
+        jax.tree.all(
+            jax.tree.map(
+                lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()), a, b
+            )
+        )
+    )
+
+
+@pytest.fixture(scope="module")
+def oracle(t0t1_oracle):
+    _w, _c, trace = t0t1_oracle
+    return trace
+
+
+# ------------------------------------------------------------ layout + API
+def test_checkpoint_keys_are_registry_struct_names():
+    """Leaf keys come from the registry-generated NamedTuple fields — the
+    seed's pre-PR 4 keystr fallback produced '.world'-style strings."""
+    w, o, e, s = build(2)
+    state = Engine(w, o, e, s).init_state()
+    keys = tree_keys(state)
+    for f in state.world._fields:
+        assert f"world/{f}" in keys
+    for f in state.pool._fields:
+        assert f"pool/{f}" in keys
+    for f in (
+        "counters",
+        "t_now",
+        "done",
+        "windows",
+        "trace",
+        "trace_n",
+        "trace_tail",
+    ):
+        assert f in keys
+    assert len(keys) == len(set(keys))
+    assert not any(k.startswith(".") or "GetAttrKey" in k for k in keys)
+
+
+def test_generic_checkpointer_roundtrip_engine_state(tmp_path):
+    """The generic tree layer round-trips a full EngineState bit-exact and
+    refuses a structure mismatch."""
+    w, o, e, s = build(3, exec_cap=8)
+    eng = Engine(w, o, e, s, trace_cap=512)
+    st = eng.step_local(eng.init_state())
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, st, blocking=True)
+    step, back = ck.restore(eng.init_state())
+    assert step == 7 and tree_eq(back, st)
+    with pytest.raises(ValueError, match="mismatch"):
+        ck.restore({"not": np.zeros(3)})
+
+
+def test_sim_checkpointer_validates_shapes(tmp_path):
+    """Restoring into a different scenario spec is loud, not silent."""
+    w, o, e, s = build(2, exec_cap=8)
+    ck = SimCheckpointer(str(tmp_path), every=4)
+    eng = Engine(w, o, e, s, trace_cap=512, checkpointer=ck)
+    eng.run_local()
+    other = Engine(*build(3, exec_cap=8), trace_cap=512)
+    with pytest.raises(ValueError, match="shape"):
+        ck.restore_sim(other)
+
+
+def test_sim_checkpointer_gc_keeps_newest(tmp_path):
+    w, o, e, s = build(2, exec_cap=8)
+    ck = SimCheckpointer(str(tmp_path), every=3, keep=2)
+    eng = Engine(w, o, e, s, trace_cap=512, checkpointer=ck)
+    eng.run_local()
+    steps = ck.all_steps()
+    assert len(steps) == 2 and steps[-1] - steps[-2] == 3
+
+
+# ------------------------------------------------- resume == uninterrupted
+def test_resume_local_byte_identical(oracle, tmp_path):
+    """Static driver: restore from every saved window into a *fresh* engine
+    and finish with run_local — final state bytes == the uninterrupted
+    while_loop run == the oracle trace."""
+    built = build(4, exec_cap=16)
+    ref = Engine(*built, trace_cap=4096).run_local()
+    ref_trace = merged_engine_trace(np.asarray(ref.trace), np.asarray(ref.trace_n))
+    assert ref_trace == oracle
+    ck = SimCheckpointer(str(tmp_path), every=11, keep=99)
+    eng = Engine(*built, trace_cap=4096, checkpointer=ck)
+    full = eng.run_local()
+    assert tree_eq(full, ref)  # host-stepped loop == while_loop driver
+    steps = ck.all_steps()
+    assert len(steps) >= 3
+    for step in steps[:3]:
+        eng2 = Engine(
+            *built,
+            trace_cap=4096,
+            checkpointer=SimCheckpointer(str(tmp_path)),
+        )
+        rec = eng2.restore(step=step)
+        assert rec.step == step and rec.rung is None
+        assert tree_eq(eng2.run_local(state=rec.state), ref)
+
+
+def test_resume_adaptive_rung_trajectory(oracle, tmp_path):
+    """Adaptive driver: the checkpoint carries the post-choose_rung rung, so
+    prefix + resumed rung trajectories concatenate to the uninterrupted
+    trajectory exactly, and the state bytes match."""
+    ladder = ExecPolicy(ladder=(4, 8, 32))
+    built = build(4, exec_policy=ladder)
+    ref_eng = Engine(*built, trace_cap=4096)
+    ref = ref_eng.run_adaptive()
+    ref_trace = merged_engine_trace(np.asarray(ref.trace), np.asarray(ref.trace_n))
+    assert ref_trace == oracle
+    ck = SimCheckpointer(str(tmp_path), every=7, keep=99)
+    eng = Engine(*built, trace_cap=4096, checkpointer=ck)
+    full = eng.run_adaptive()
+    assert tree_eq(full, ref)
+    assert eng.adaptive_rungs == ref_eng.adaptive_rungs
+    step = ck.all_steps()[1]
+    eng2 = Engine(
+        *built,
+        trace_cap=4096,
+        checkpointer=SimCheckpointer(str(tmp_path)),
+    )
+    rec = eng2.restore(step=step)
+    assert rec.rung is not None
+    res = eng2.run_adaptive(state=rec.state, rung=rec.rung)
+    assert tree_eq(res, ref)
+    resumed_rungs = ref_eng.adaptive_rungs[:step] + eng2.adaptive_rungs
+    assert resumed_rungs == ref_eng.adaptive_rungs
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        every=st_.integers(min_value=2, max_value=13),
+        n_agents=st_.sampled_from([1, 3]),
+        driver=st_.sampled_from(["local", "adaptive"]),
+        streaming=st_.booleans(),
+        pick=st_.integers(min_value=0, max_value=7),
+    )
+    @example(every=5, n_agents=3, driver="adaptive", streaming=True, pick=2)
+    @example(every=2, n_agents=1, driver="local", streaming=True, pick=7)
+    def test_checkpoint_resume_property(every, n_agents, driver, streaming, pick):
+        """Checkpoint at a random window cadence, resume from a random saved
+        step, on both in-process drivers, with and without the streaming
+        trace drain: resumed final state == uninterrupted == oracle."""
+        exec_policy = ExecPolicy(ladder=(4, 16)) if driver == "adaptive" else None
+        built = build(
+            n_agents,
+            exec_policy=exec_policy,
+            exec_cap=16 if exec_policy is None else None,
+        )
+        w, o, e, s = built
+        _w, _c, otrace = run_sequential(w, o, e, s)
+
+        def make_engine(ck):
+            kw = dict(checkpointer=ck)
+            if streaming:
+                kw.update(trace_cap=24, drain_every=3, trace_stream=TraceStream())
+            else:
+                kw.update(trace_cap=4096)
+            return Engine(*built, **kw)
+
+        def run(eng, state=None, rung=None):
+            if driver == "adaptive":
+                return eng.run_adaptive(state=state, rung=rung)
+            return eng.run_local(state=state)
+
+        def merged(eng, st):
+            if streaming:
+                return eng.trace_stream.merged()
+            return merged_engine_trace(np.asarray(st.trace), np.asarray(st.trace_n))
+
+        with tempfile.TemporaryDirectory() as tmp:
+            ck = SimCheckpointer(tmp, every=every, keep=99)
+            eng = make_engine(ck)
+            full = run(eng)
+            assert merged(eng, full) == otrace
+            steps = ck.all_steps()
+            assert steps, "run too short for the chosen cadence"
+            step = steps[pick % len(steps)]
+            eng2 = make_engine(SimCheckpointer(tmp))
+            rec = eng2.restore(step=step)
+            res = run(eng2, state=rec.state, rung=rec.rung)
+            assert tree_eq(res, full)
+            assert merged(eng2, res) == otrace
+            if streaming:
+                drop = int(np.asarray(res.counters)[:, mon.C_TRACE_DROP].sum())
+                assert drop == 0
+
+
+# ------------------------------------------- subprocess kill-and-resume
+_KILL_BODY = r"""
+tmp = {tmp!r}
+world, own, init_ev, spec = t0t1_build(5, pool_cap=128, exec_cap=8,
+                                       n_flows=16, second_gen=True)
+ts = mon.TraceStream()
+ck = SimCheckpointer(tmp, every=6, keep=99, kill_after=18)
+eng = Engine(world, own, init_ev, spec, trace_cap=32, drain_every=4,
+             trace_stream=ts, checkpointer=ck)
+mesh = Mesh(np.array(jax.devices()), ("agents",))
+eng.run_distributed(mesh)
+print(json.dumps({{"survived": True}}))
+"""
+
+_RESUME_BODY = r"""
+tmp = {tmp!r}
+world, own, init_ev, spec = t0t1_build(5, pool_cap=128, exec_cap=8,
+                                       n_flows=16, second_gen=True)
+otrace = oracle_trace(pool_cap=128, exec_cap=8, n_flows=16, second_gen=True)
+ts = mon.TraceStream()
+eng = Engine(world, own, init_ev, spec, trace_cap=32, drain_every=4,
+             trace_stream=ts, checkpointer=SimCheckpointer(tmp))
+mesh = Mesh(np.array(jax.devices()), ("agents",))  # 2 devices now
+rec = eng.restore()
+st = eng.run_distributed(mesh, state=rec.state)
+# the reference never crashed: a from-scratch streamed run on the SAME
+# 2-device mesh — full state bytes (ring content included) must match
+ref_ts = mon.TraceStream()
+ref_eng = Engine(world, own, init_ev, spec, trace_cap=32, drain_every=4,
+                 trace_stream=ref_ts)
+ref = ref_eng.run_distributed(mesh)
+print(json.dumps({{
+    "resumed_step": rec.step,
+    "stream_eq_oracle": ts.merged() == otrace,
+    "ref_eq_oracle": ref_ts.merged() == otrace,
+    "state_eq_ref": tree_eq(st, ref),
+    "trace_drop": int(np.asarray(st.counters)[:, mon.C_TRACE_DROP].sum()),
+}}))
+"""
+
+
+@pytest.mark.slow
+def test_sigkill_and_resume_on_fewer_devices(tmp_path):
+    """The headline crash harness: a 4-device streamed+checkpointed run is
+    SIGKILLed mid-run (a real, unhandled kill fired right after a committed
+    checkpoint); a fresh 2-device process restores the latest checkpoint and
+    finishes. The resumed streamed trace must equal the oracle, and the
+    world/pool/counter bytes must equal an uninterrupted 2-device run —
+    crash, resume, AND reshard, with zero divergence."""
+    tmp = str(tmp_path)
+    dead = run_killed_child(_KILL_BODY.format(tmp=tmp), n_devices=4)
+    assert dead.returncode == -signal.SIGKILL, (dead.returncode, dead.stderr[-2000:])
+    assert "survived" not in dead.stdout
+    steps = SimCheckpointer(tmp).all_steps()
+    assert steps and max(steps) >= 18
+    res = run_distributed_child(_RESUME_BODY.format(tmp=tmp), n_devices=2)
+    assert res["resumed_step"] >= 18, res
+    assert res["stream_eq_oracle"] is True, res
+    assert res["ref_eq_oracle"] is True, res
+    assert res["state_eq_ref"] is True, res
+    assert res["trace_drop"] == 0, res
+
+
+_RESHARD_BODY = r"""
+import tempfile
+n = params["n_agents"]
+pol_kw = dict(exec_policy=ExecPolicy(ladder=(4, 16))) if params["adaptive"] \
+    else dict(exec_cap=8)
+built = t0t1_build(n, pool_cap=128, n_flows=16, second_gen=True, **pol_kw)
+world, own, init_ev, spec = built
+otrace = oracle_trace(pool_cap=128, n_flows=16, second_gen=True, **pol_kw)
+mesh_save = Mesh(np.array(jax.devices()[:params["d_save"]]), ("agents",))
+mesh_res = Mesh(np.array(jax.devices()[:params["d_resume"]]), ("agents",))
+
+
+def run(eng, mesh, state=None, rung=None):
+    if params["adaptive"]:
+        return eng.run_distributed_adaptive(mesh, state=state, rung=rung)
+    return eng.run_distributed(mesh, state=state)
+
+
+ref_eng = Engine(world, own, init_ev, spec, trace_cap=4096)
+ref = run(ref_eng, mesh_res)
+with tempfile.TemporaryDirectory() as tmp:
+    ck = SimCheckpointer(tmp, every=params["every"], keep=99)
+    eng = Engine(world, own, init_ev, spec, trace_cap=4096, checkpointer=ck)
+    full = run(eng, mesh_save)
+    steps = ck.all_steps()
+    step = steps[len(steps) // 2]
+    eng2 = Engine(world, own, init_ev, spec, trace_cap=4096,
+                  checkpointer=SimCheckpointer(tmp))
+    rec = eng2.restore(step=step)
+    res = run(eng2, mesh_res, state=rec.state, rung=rec.rung)
+print(json.dumps({
+    "full_eq_ref": tree_eq(full, ref),
+    "res_eq_ref": tree_eq(res, ref),
+    "ref_eq_oracle": engine_trace(ref) == otrace,
+    "res_eq_oracle": engine_trace(res) == otrace,
+    "rungs_eq": (not params["adaptive"])
+                or (ref_eng.adaptive_rungs[:step] + eng2.adaptive_rungs
+                    == ref_eng.adaptive_rungs),
+    "info_steps": len(steps),
+}))
+"""
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=3, deadline=None)
+    @given(
+        n_agents=st_.sampled_from([4, 5, 6]),
+        d_save=st_.sampled_from([3, 4]),
+        d_resume=st_.sampled_from([1, 2, 4]),
+        adaptive=st_.booleans(),
+        every=st_.integers(min_value=3, max_value=9),
+    )
+    @example(n_agents=5, d_save=4, d_resume=2, adaptive=True, every=4)
+    @example(n_agents=6, d_save=3, d_resume=4, adaptive=False, every=7)
+    def test_distributed_checkpoint_reshard_property(
+        n_agents, d_save, d_resume, adaptive, every
+    ):
+        """Distributed drivers under randomized cadence, adaptive ladders,
+        non-divisible shard packings, and a device-count change between save
+        and resume (both meshes live in one 4-device child): resumed ==
+        uninterrupted == oracle, byte-identical."""
+        params = dict(
+            n_agents=n_agents,
+            d_save=d_save,
+            d_resume=d_resume,
+            adaptive=adaptive,
+            every=every,
+        )
+        body = f"params = {params!r}\n" + _RESHARD_BODY
+        res = run_distributed_child(body, n_devices=4)
+        assert res["full_eq_ref"] is True, res
+        assert res["res_eq_ref"] is True, res
+        assert res["ref_eq_oracle"] is True, res
+        assert res["res_eq_oracle"] is True, res
+        assert res["rungs_eq"] is True, res

@@ -1,10 +1,15 @@
 """Migration accounting: C_MIGRATE_OUT/C_MIGRATE_IN balance globally and
 receiving-pool overflow lands in C_DROP_POOL, loudly — on the fast vmap
-driver (single device), so the books are audited on every install."""
+driver (single device), so the books are audited on every install, and
+across a checkpoint/restore boundary (the resumed run may reshard onto a
+different device count; the books must still balance globally)."""
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from distributed_harness import run_distributed_child
+from repro.checkpoint import SimCheckpointer
 from repro.core import Engine, ScenarioBuilder, events as ev
 from repro.core import monitoring as mon
 
@@ -77,6 +82,75 @@ def test_migrate_identity_placement_moves_nothing():
         np.asarray(out.pool.valid), np.asarray(st.pool.valid)
     )
     np.testing.assert_array_equal(np.asarray(out.pool.time), np.asarray(st.pool.time))
+
+
+def test_migrate_books_survive_checkpoint_restore(tmp_path):
+    """A checkpoint taken right after the migration install (the all_to_all
+    stages' window) round-trips the books bit-exact: the restored state's
+    OUT/IN sums still balance and a second placement on the restored state
+    keeps balancing cumulatively."""
+    w, o, e, s = _idle_scenario()
+    eng = Engine(w, o, e, s)
+    st = eng.init_state()
+    la = np.asarray(st.world.lp_agent[0])
+    new_la = np.where(la == 2, 0, la).astype(np.int32)
+    out = eng.apply_placement_local(st, jnp.asarray(new_la))
+    ck = SimCheckpointer(str(tmp_path))
+    ck.save_sim(0, out, engine=eng)
+    eng2 = Engine(w, o, e, s, checkpointer=SimCheckpointer(str(tmp_path)))
+    rec = eng2.restore()
+    cnt = _counters(rec.state)
+    assert cnt[:, mon.C_MIGRATE_OUT].sum() == cnt[:, mon.C_MIGRATE_IN].sum() == 4
+    # migrate back on the restored state: cumulative books stay balanced
+    back = eng2.apply_placement_local(rec.state, st.world.lp_agent[0])
+    cnt2 = _counters(back)
+    assert (cnt2[:, mon.C_MIGRATE_OUT].sum()
+            == cnt2[:, mon.C_MIGRATE_IN].sum() == 8)
+
+
+_RESHARD_BOOKS_BODY = r"""
+otrace = oracle_trace()
+world, own, init_ev, spec = t0t1_build(4)
+eng = Engine(world, own, init_ev, spec, trace_cap=4096)
+mesh4 = Mesh(np.array(jax.devices()), ("agents",))
+st0 = eng.init_state()
+la = np.asarray(st0.world.lp_agent[0])
+src = int(np.asarray(st0.pool.valid).sum(axis=1).argmax())
+dst = 0 if src != 0 else 3
+new_la = np.where(la == src, dst,
+                  np.where(la == dst, src, la)).astype(np.int32)
+migrated = eng.apply_placement_distributed(st0, new_la, mesh4)
+ck = SimCheckpointer(tmp)
+ck.save_sim(0, migrated, engine=eng)  # between migration and continuation
+eng2 = Engine(world, own, init_ev, spec, trace_cap=4096,
+              checkpointer=SimCheckpointer(tmp))
+rec = eng2.restore()
+mesh2 = Mesh(np.array(jax.devices()[:2]), ("agents",))  # reshard 4 -> 2
+st = eng2.run_distributed(mesh2, state=rec.state)
+cnt = np.asarray(st.counters)
+out_sum = int(cnt[:, mon.C_MIGRATE_OUT].sum())
+in_sum = int(cnt[:, mon.C_MIGRATE_IN].sum())
+print(json.dumps({
+    "books_balance": out_sum == in_sum,
+    "moved_something": out_sum > 0,
+    "trace_eq_oracle": engine_trace(st) == otrace,
+    "info_out": out_sum,
+}))
+"""
+
+
+@pytest.mark.slow
+def test_migrate_books_balance_across_reshard_subprocess(tmp_path):
+    """Satellite of the checkpoint PR: a 4-device run whose placement was
+    migrated through the staged all_to_all is checkpointed between the
+    migration window and the continuation; the resumed run reshards onto 2
+    devices. The global OUT/IN books must still balance (and be nonzero),
+    and the continuation must execute the exact oracle trace."""
+    body = f"tmp = {str(tmp_path)!r}\n" + _RESHARD_BOOKS_BODY
+    res = run_distributed_child(body, n_devices=4)
+    assert res["books_balance"] is True, res
+    assert res["moved_something"] is True, res
+    assert res["trace_eq_oracle"] is True, res
 
 
 def test_migrate_counters_are_registered():

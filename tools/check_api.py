@@ -67,8 +67,7 @@ def check() -> list[str]:
     expect(
         "builtin counter table",
         {name: idx for name, idx in fresh.counters.items()},
-        {name: getattr(mon, f"C_{name}")
-         for name, _doc in mon.BUILTIN_COUNTERS},
+        {name: getattr(mon, f"C_{name}") for name, _doc in mon.BUILTIN_COUNTERS},
     )
     expect("n_counters (builtin)", fresh.n_counters, mon.N_COUNTERS)
 
@@ -89,6 +88,39 @@ def check() -> list[str]:
     missing = [n for n in public if not hasattr(core, n)]
     if missing:
         errors.append(f"repro.core.__all__ names missing attributes: {missing}")
+
+    # checkpoint surface: the saved-leaf layout is derived from the
+    # registry-generated structs, so every World/EngineState field must
+    # appear under its struct-field name (the pre-PR 8 checkpointer used a
+    # str(path) fallback that produced '.world'-style keys and silently
+    # drifted from the PR 4 registry structs)
+    import repro.checkpoint as ckpkg
+    from repro.checkpoint import tree_keys
+    from repro.core.engine import EngineState
+
+    missing = [n for n in ckpkg.__all__ if not hasattr(ckpkg, n)]
+    if missing:
+        errors.append(f"repro.checkpoint.__all__ names missing attributes: {missing}")
+    scalar_fields = (
+        "counters",
+        "t_now",
+        "done",
+        "windows",
+        "trace",
+        "trace_n",
+        "trace_tail",
+    )
+    want_keys = sorted(
+        [f"world/{f}" for f in fresh.world_struct()._fields]
+        + [f"pool/{f}" for f in events.EventPool._fields]
+        + list(scalar_fields)
+    )
+    template = EngineState(
+        world=fresh.world_struct()(*[0] * len(fresh.world_struct()._fields)),
+        pool=events.EventPool(*[0] * len(events.EventPool._fields)),
+        **{f: 0 for f in scalar_fields},
+    )
+    expect("checkpoint leaf keys", sorted(tree_keys(template)), want_keys)
     return errors
 
 
