@@ -1,6 +1,6 @@
 """Benchmark regression gate for CI.
 
-Usage: python benchmarks/check_regression.py RESULTS.json BASELINE.json
+Usage: python benchmarks/check_regression.py RESULTS.json BASELINE.json [--all]
 
 Reads the machine-readable output of ``benchmarks/run.py --json`` and fails
 (exit 1) when any gated benchmark metric regresses more than its ``tolerance``
@@ -14,6 +14,12 @@ single-gate object, the pre-PR 3 format, is also accepted):
     {"gates": [{"benchmark": <row name>, "metric": <derived key>,
                 "gate_speedup": <floor>, "tolerance": <fraction>,
                 "reference": {...dev measurement, informational...}}, ...]}
+
+A gate may carry ``"requires": "<ci-job>"`` when only one CI job runs its
+benchmark (e.g. ensemble_throughput runs in the distributed job only). The
+default invocation *skips* those gates — a missing row would otherwise fail
+the jobs that never produce it — and the producing job passes ``--all`` to
+check every gate against its complete results.
 """
 
 import json
@@ -43,20 +49,32 @@ def check_gate(gate: dict, rows: dict, results_path: str) -> bool:
 
 
 def main() -> int:
-    if len(sys.argv) != 3:
+    run_all = "--all" in sys.argv[1:]
+    paths = [a for a in sys.argv[1:] if a != "--all"]
+    if len(paths) != 2:
         print(__doc__)
         return 2
-    with open(sys.argv[1]) as f:
+    with open(paths[0]) as f:
         results = json.load(f)
-    with open(sys.argv[2]) as f:
+    with open(paths[1]) as f:
         baseline = json.load(f)
 
     gates = baseline["gates"] if "gates" in baseline else [baseline]
+    skipped = 0
+    if not run_all:
+        only = [g for g in gates if not g.get("requires")]
+        skipped = len(gates) - len(only)
+        for g in gates:
+            if g.get("requires"):
+                print(f"SKIP: {g['benchmark']} (requires the "
+                      f"{g['requires']!r} CI job; pass --all there)")
+        gates = only
     rows = {row["name"]: row["derived"] for row in results["rows"]}
-    ok = all([check_gate(g, rows, sys.argv[1]) for g in gates])
+    ok = all([check_gate(g, rows, paths[0]) for g in gates])
     if not ok:
         return 1
-    print(f"OK: no regression ({len(gates)} gate(s))")
+    print(f"OK: no regression ({len(gates)} gate(s)"
+          + (f", {skipped} skipped" if skipped else "") + ")")
     return 0
 
 

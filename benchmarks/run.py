@@ -33,7 +33,11 @@
                      "devices")
   ensemble_throughput — PR 8 vmap-over-seeds ensembles: one fused 128-replica
                      run_ensemble launch vs a sequential run_local loop
-                     (replicas/s; trajectory entry — no gate)
+                     (replicas/s; gated in the distributed CI job since
+                     PR 9 — "requires": "distributed" in baseline.json)
+  fleet_resume     — PR 9 elastic orchestration: orchestrated preempt+resume
+                     wall vs uninterrupted (resume_overhead ratio; trajectory
+                     entry — no gate)
   kernels          — µs/call for each Pallas kernel's XLA reference path
   workload_sim     — DESIGN.md §2: DES-predicted step time vs analytic roofline
 
@@ -739,6 +743,53 @@ print(json.dumps({"events": int(c[:, mon.C_EVENTS].sum()), "s": dt,
          f"events_s_d1={eps[1]:.0f};speedup={eps[4] / eps[1]:.2f}")
 
 
+def bench_fleet_resume(preempt_window=16, every=8):
+    """PR 9 elastic fleet orchestration: the price of surviving a preemption.
+
+    Same checkpointed scenario twice through the Orchestrator on one host:
+    uninterrupted, and preempted mid-run (injected shard-loss probe at
+    window ``preempt_window``) with automatic resume from the latest
+    committed checkpoint. ``resume_overhead`` is the wall ratio
+    preempted/uninterrupted — it prices the second attempt's engine
+    rebuild + re-jit + checkpoint restore + replayed windows. Trajectory
+    entry, no gate: the overhead is dominated by recompilation, which real
+    fleets amortize across much longer runs. Byte-equality of the two final
+    states is asserted inside (the orchestrator's core promise)."""
+    import tempfile
+
+    from repro.fleet import FleetPolicy, Orchestrator
+
+    built = t0t1(2.0, n_flows=32, interval=8, pool_cap=512, exec_cap=64)
+
+    def orchestrated(preempt, tmp):
+        pol = FleetPolicy(checkpoint_dir=tmp, checkpoint_every=every)
+        orch = Orchestrator(pol, preempt=preempt)
+        t0 = time.perf_counter()
+        res = orch.run(built, devices=jax.devices()[:1])
+        jax.block_until_ready(res.state.counters)
+        return res, time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as tmp:       # compile warmup
+        orchestrated(None, tmp)
+    with tempfile.TemporaryDirectory() as tmp:
+        res_u, dt_u = orchestrated(None, tmp)
+    with tempfile.TemporaryDirectory() as tmp:
+        res_p, dt_p = orchestrated(
+            lambda w, a: 1 if a == 0 and w >= preempt_window else None, tmp)
+    same = jax.tree.all(jax.tree.map(
+        lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()),
+        res_p.state, res_u.state))
+    assert bool(same), "preempted+resumed state != uninterrupted"
+    assert res_p.counts["PREEMPT"] == 1 and res_p.counts["RESUME"] == 1
+    n = int(np.asarray(res_u.state.counters)[:, mon.C_EVENTS].sum())
+    emit("fleet_resume", dt_p * 1e6,
+         f"events={n};windows={int(np.asarray(res_u.state.windows)[0])};"
+         f"preempt_window={preempt_window};checkpoint_every={every};"
+         f"attempts={res_p.attempts};"
+         f"s_uninterrupted={dt_u:.3f};s_preempted={dt_p:.3f};"
+         f"resume_overhead={dt_p / dt_u:.2f}")
+
+
 def bench_kernels():
     from repro.kernels import ops
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
@@ -851,6 +902,10 @@ def main() -> None:
                     help="also run the ensemble_throughput benchmark "
                          "(128-replica vmap-over-seeds launch vs a "
                          "sequential loop; run by the distributed CI job)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="also run the fleet_resume benchmark (orchestrated "
+                         "preempt+resume wall vs uninterrupted; run by the "
+                         "distributed CI job)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.quick:
@@ -880,12 +935,15 @@ def main() -> None:
         bench_trace_stream()
         bench_shard_scaling()
         bench_ensemble_throughput()
+        bench_fleet_resume()
         bench_kernels()
         bench_workload_sim()
     if args.shard_scaling and args.quick:
         bench_shard_scaling()
     if args.ensemble and args.quick:
         bench_ensemble_throughput()
+    if args.fleet and args.quick:
+        bench_fleet_resume()
     if args.json:
         write_json(args.json)
 

@@ -187,6 +187,7 @@ class Checkpointer:
 # ------------------------------------------------------------ engine layer
 _STATE = "state/"        # EngineState leaves
 _TRACE_SEG = "trace_seg/"  # drained TraceStream spans: trace_seg/<agent>/<start>
+_METRICS = "metrics/"    # MetricsStream interval records: metrics/lines
 
 
 class SimCheckpoint(NamedTuple):
@@ -241,16 +242,23 @@ class SimCheckpointer(Checkpointer):
 
         ``state`` must be the unpadded (A, ...) ``EngineState``. With
         ``engine`` given, the attached :class:`TraceStream`'s drained spans
-        ride along (after an ``effects_barrier`` so every in-flight drain
+        and the attached :class:`MetricsStream`'s emitted interval records
+        ride along (after an ``effects_barrier`` so every in-flight window
         callback has landed) — a streamed run resumed from this checkpoint
-        reassembles the full ``[0, trace_n)`` trace.
+        reassembles the full ``[0, trace_n)`` trace and a metrics record
+        sequence that concatenates exactly onto the uninterrupted run's.
         """
         arrays = {_STATE + k: np.asarray(v) for k, v in _tree_paths(state)}
         ts = getattr(engine, "trace_stream", None)
-        if ts is not None:
+        ms = getattr(engine, "metrics_stream", None)
+        if ts is not None or ms is not None:
             getattr(jax, "effects_barrier", lambda: None)()
+        if ts is not None:
             for k, rows in ts.state_dict().items():
                 arrays[_TRACE_SEG + k] = rows
+        if ms is not None:
+            for k, rows in ms.state_dict().items():
+                arrays[_METRICS + k] = rows
         manifest = {
             "step": window,
             "sim": True,
@@ -270,7 +278,8 @@ class SimCheckpointer(Checkpointer):
 
         Validates every leaf against ``engine.init_state()`` (same scenario
         spec => same unpadded shapes regardless of device count) and loads
-        the saved drained-trace spans into ``engine.trace_stream`` (they are
+        the saved drained-trace spans into ``engine.trace_stream`` and the
+        saved metrics records into ``engine.metrics_stream`` (both are
         consumed by the stream's next ``begin()``, i.e. when a driver runs).
         Returns a :class:`SimCheckpoint`; feed ``state``/``rung`` to any
         driver.
@@ -301,6 +310,11 @@ class SimCheckpointer(Checkpointer):
         ts = getattr(engine, "trace_stream", None)
         if ts is not None and segs:
             ts.load_state(segs)
+        recs = {k[len(_METRICS):]: np.asarray(blob[k])
+                for k in manifest["keys"] if k.startswith(_METRICS)}
+        ms = getattr(engine, "metrics_stream", None)
+        if ms is not None and recs:
+            ms.load_state(recs)
         rung = manifest.get("rung")
         return SimCheckpoint(step=step, state=state,
                              rung=None if rung is None else int(rung))

@@ -212,7 +212,9 @@ class Engine:
                  trace_stream: "mon.TraceStream | None" = None,
                  metrics_stream: "mon.MetricsStream | None" = None,
                  drain_every: int = 16,
-                 checkpointer=None):
+                 checkpointer=None,
+                 window_hook: Callable[[int, EngineState], None]
+                 | None = None):
         self.world = world
         self.own = own
         self.init_events = init_events
@@ -243,6 +245,15 @@ class Engine:
         # they get. Like streaming, an attached checkpointer switches the
         # static drivers to the host-stepped window loop.
         self.checkpointer = checkpointer
+        # host observation point for the fleet orchestrator
+        # (repro.fleet.Orchestrator): called as ``window_hook(window, state)``
+        # after every host-stepped window, *after* any due checkpoint save —
+        # so an exception raised here (e.g. an injected shard-loss probe)
+        # always leaves the latest due checkpoint committed. Only the
+        # host-stepped drivers fire it (run_adaptive and, with a stream or
+        # checkpointer attached, run_local/run_distributed); the fused
+        # while_loop drivers have no host window boundary to hook.
+        self.window_hook = window_hook
         self.drain_every = int(drain_every)
         if self.drain_every < 1:
             raise ValueError(f"drain_every must be >= 1, got {drain_every}")
@@ -771,8 +782,10 @@ class Engine:
         Returns a ``SimCheckpoint(step, state, rung)``: pass ``state=`` (and
         for the adaptive drivers ``rung=``) to any driver to resume. Also
         reloads the checkpoint's drained trace spans into the attached
-        :class:`TraceStream`, so a resumed streamed run reassembles the full
-        ``[0, trace_n)`` trace with zero drops."""
+        :class:`TraceStream` (so a resumed streamed run reassembles the full
+        ``[0, trace_n)`` trace with zero drops) and its emitted metrics
+        records into the attached :class:`MetricsStream` (so the interval
+        record sequence concatenates exactly across the boundary)."""
         if self.checkpointer is None:
             raise ValueError("no checkpointer attached to this engine")
         return self.checkpointer.restore_sim(self, step=step)
@@ -852,9 +865,19 @@ class Engine:
                 break
             st = fn(st)
             self._checkpoint_window(st, padded=mesh is not None)
+            self._fire_window_hook(st)
         if mesh is not None:
             st = self._slice_state(st)
         return self._finalize_streams(st)
+
+    def _fire_window_hook(self, st: EngineState) -> None:
+        """Invoke the orchestrator's host observation point, if any.
+
+        Runs after ``_checkpoint_window`` so a hook that aborts the run
+        (raising e.g. ``repro.fleet.PreemptionError``) never outruns the
+        latest due checkpoint."""
+        if self.window_hook is not None:
+            self.window_hook(int(np.asarray(st.windows).reshape(-1)[0]), st)
 
     # ------------------------------------------------------------------- run
     def _run_fn(self, axis: "str | ShardAxes | None", max_windows: int):
@@ -1116,6 +1139,7 @@ class Engine:
             rung = pol.choose_rung(p, rung, stats)
             prev = cur
             self._checkpoint_window(st, rung=rung)
+            self._fire_window_hook(st)
         self.adaptive_rungs = tuple(rungs)
         return self._finalize_streams(st)
 
@@ -1177,6 +1201,7 @@ class Engine:
             rung = pol.choose_rung_lockstep(p, rung, stats)
             prev = cur
             self._checkpoint_window(st, rung=rung, padded=True)
+            self._fire_window_hook(st)
         self.adaptive_rungs = tuple(rungs)
         return self._finalize_streams(self._slice_state(st))
 

@@ -61,9 +61,21 @@ C_MIGRATE_OUT = 26    # pending events shipped to another agent by placement
 C_MIGRATE_IN = 27     # migrated events received from another agent (counted
                       # pre-insert, so sum(out) == sum(in) globally; receiving
                       # pool overflow lands in C_DROP_POOL, never silent)
-N_COUNTERS = 28
+C_PREEMPT = 28        # FLEET: shard-loss preemptions observed by the
+                      # orchestrator (host-side, never bumped in-graph)
+C_RESUME = 29         # FLEET: automatic checkpoint resumes completed
+C_RESHARD = 30        # FLEET: resumes that repacked onto a different
+                      # device count (the unpadded-checkpoint reshard path)
+N_COUNTERS = 31
 
 DROP_COUNTERS = (C_DROP_POOL, C_DROP_ROUTE, C_DROP_FLOW, C_DROP_QUEUE)
+
+# Fleet-orchestration counters: booked host-side by repro.fleet.Orchestrator
+# (MetricsStream.book) and surfaced in its emitted records — NEVER bumped
+# in-graph, so they are zero in any single engine run's counter state. That
+# is deliberate: a preempted-and-resumed run's EngineState stays byte-
+# identical to the uninterrupted run's, preemption bookkeeping included.
+FLEET_COUNTERS = (C_PREEMPT, C_RESUME, C_RESHARD)
 
 # Gauges: overwritten (not accumulated) every window — the pool-lifecycle
 # occupancy signals the adaptive exec policy (core/policy.py) reads alongside
@@ -126,6 +138,12 @@ BUILTIN_COUNTERS = (
                    "sum(OUT) == sum(IN) globally even when the receiving "
                    "pool overflows — the excess then lands in DROP_POOL on "
                    "the receiver)"),
+    ("PREEMPT", "shard-loss preemptions the fleet orchestrator detected "
+                "(injected probe or a process death discovered at restart)"),
+    ("RESUME", "automatic checkpoint resumes the orchestrator completed "
+               "after a preemption"),
+    ("RESHARD", "resumes that repacked the unpadded checkpoint onto a "
+                "different device count than it was saved from"),
 )
 assert len(BUILTIN_COUNTERS) == N_COUNTERS
 
@@ -203,6 +221,8 @@ def counter_class(idx: int) -> str:
         return "pool-diag"
     if idx in BATCH_DIAG_COUNTERS:
         return "batch-diag"
+    if idx in FLEET_COUNTERS:
+        return "fleet"
     return "counter"
 
 
@@ -379,15 +399,53 @@ class MetricsStream:
         self.out = out
         self.lines: list[dict] = []
         self.latest: dict | None = None
+        self._booked: dict[str, int] = {}
+        self._resume: list[dict] | None = None
 
     def begin(self, n_agents: int, registry=None) -> None:
-        """Reset for a run (the engine calls this with its registry)."""
+        """Reset for a run (the engine calls this with its registry).
+
+        If :meth:`load_state` staged checkpointed records, they seed
+        ``self.lines`` instead of an empty list (without re-writing them to
+        ``out``) — a resumed run only emits records for post-checkpoint
+        windows, so the pre-checkpoint prefix must come from the checkpoint
+        for the record sequence to concatenate exactly onto an uninterrupted
+        run's. ``_booked`` fleet counters deliberately survive the reset:
+        they are host-side orchestration bookkeeping that spans engine runs.
+        """
         self.n_agents = n_agents
         self._names = (registry.counters if registry is not None else {
             name: i for i, (name, _doc) in enumerate(BUILTIN_COUNTERS)})
         self._pending: dict[int, dict[int, tuple]] = {}
-        self.lines = []
-        self.latest = None
+        self.lines = list(self._resume) if self._resume is not None else []
+        self._resume = None
+        self.latest = self.lines[-1] if self.lines else None
+
+    # --------------------------------------------------- checkpoint support
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Emitted interval records as one serializable array (what
+        :class:`repro.checkpoint.SimCheckpointer` persists alongside the
+        EngineState; call after ``jax.effects_barrier()``). Mid-run there is
+        no final record yet, so the checkpoint holds exactly the interval
+        prefix a resumed run must not re-emit."""
+        payload = json.dumps(self.lines).encode("utf-8")
+        return {"lines": np.frombuffer(payload, dtype=np.uint8).copy()}
+
+    def load_state(self, arrays: dict[str, np.ndarray]) -> None:
+        """Stage checkpointed records for the next ``begin()`` (restore)."""
+        payload = bytes(np.asarray(arrays["lines"]).tobytes())
+        self._resume = json.loads(payload.decode("utf-8"))
+
+    # ------------------------------------------------ fleet-counter overlay
+    def book(self, name: str, amount: int = 1) -> None:
+        """Accumulate a host-side counter into every later emitted record.
+
+        The fleet orchestrator's preemption bookkeeping (``C_PREEMPT`` /
+        ``C_RESUME`` / ``C_RESHARD``) cannot live in the in-graph counter
+        vector — a resumed EngineState must stay byte-identical to the
+        uninterrupted run's — so it lands here and is added to the named
+        column of each record at emit time."""
+        self._booked[name] = self._booked.get(name, 0) + int(amount)
 
     def on_window(self, agent, window, gvt, counters) -> None:
         """The io_callback target: one agent's end-of-window counter vector."""
@@ -414,6 +472,9 @@ class MetricsStream:
             "counters": {name: int(total[i])
                          for name, i in self._names.items()},
         }
+        for name, v in self._booked.items():
+            if name in rec["counters"]:
+                rec["counters"][name] += v
         if final:
             rec["final"] = True
         self.latest = rec

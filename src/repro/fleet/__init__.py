@@ -1,0 +1,26 @@
+"""repro.fleet — elastic fleet orchestration (simulation-as-a-service).
+
+The host control loop that wraps the four engine drivers behind one
+``Orchestrator.run(built, devices, policy)`` entry point: GVT-aligned
+durable checkpoints, shard-loss detection (injected probe + SIGKILL
+restart discovery), automatic resume on the surviving device set through
+the device-layout-free checkpoint reshard path, retry/backoff caps, a
+degraded-mode device floor, and host-side fleet counters
+(``C_PREEMPT``/``C_RESUME``/``C_RESHARD``) surfaced through
+``MetricsStream``. See docs/architecture.md, "Elastic fleet orchestration".
+"""
+from repro.fleet.orchestrator import (
+    FleetError,
+    FleetPolicy,
+    Orchestrator,
+    OrchestratorResult,
+    PreemptionError,
+)
+
+__all__ = [
+    "FleetError",
+    "FleetPolicy",
+    "Orchestrator",
+    "OrchestratorResult",
+    "PreemptionError",
+]

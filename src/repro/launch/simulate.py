@@ -12,12 +12,21 @@ Modes:
   ensemble   Monte Carlo vmap-over-seeds sweep of the failure scenario:
              hundreds of replicas per launch (Engine.run_ensemble), with
              per-replica counters reduced into a MetricsStream summary
+  run        resolve a named catalog scenario (repro.scenarios.catalog) and
+             dispatch it through the elastic fleet orchestrator
+             (repro.fleet.Orchestrator): ``simulate run t0t1 --set wan_bw=0.5``;
+             ``simulate run --list`` prints the catalog. The orchestrator
+             knobs (--max-retries/--min-devices/--preempt-at-window ...)
+             make it the elastic-execution entry point: a preempted run
+             auto-resumes from the latest checkpoint on the survivors.
 
 The t0t1 and distributed modes take durable checkpoint/resume knobs:
 ``--checkpoint-dir D --checkpoint-every W`` saves the full EngineState at
 every W-th GVT-aligned window boundary; ``--resume`` restores the latest
 checkpoint and continues — for distributed, onto whatever device count the
-resumed process has (the checkpoint is device-layout-free).
+resumed process has (the checkpoint is device-layout-free). A multi-point
+t0t1 sweep keys per-point subdirectories (``DIR/bw_<bw>``) so every sweep
+point checkpoints and resumes independently.
 ``--kill-after-window W`` SIGKILLs the process right after the first
 committed checkpoint at window >= W — the CI crash harness.
 """
@@ -87,9 +96,10 @@ def _checkpoint_args(p):
                         "knob; needs --checkpoint-every)")
 
 
-def _build_checkpointer(args):
+def _build_checkpointer(args, directory=None):
     """A SimCheckpointer from the CLI knobs, or None when checkpointing is
-    off — with the cross-knob validation in one place."""
+    off — with the cross-knob validation in one place. ``directory``
+    overrides ``args.checkpoint_dir`` (the per-sweep-point subdir case)."""
     if args.checkpoint_dir is None:
         if (args.checkpoint_every or args.resume
                 or args.kill_after_window is not None):
@@ -100,7 +110,8 @@ def _build_checkpointer(args):
         raise SystemExit("--kill-after-window needs --checkpoint-every W "
                          "(the kill fires after a committed checkpoint)")
     from repro.checkpoint import SimCheckpointer
-    return SimCheckpointer(args.checkpoint_dir, every=args.checkpoint_every,
+    return SimCheckpointer(directory or args.checkpoint_dir,
+                           every=args.checkpoint_every,
                            keep=args.checkpoint_keep,
                            kill_after=args.kill_after_window)
 
@@ -128,11 +139,14 @@ def run_t0t1(args):
     from repro.core import monitoring as mon
     from repro.core.components import DATA_WRITE, FLOW_START, JOB_SUBMIT
 
-    ck = _build_checkpointer(args)
-    if ck is not None and len(args.bandwidths) > 1:
-        raise SystemExit("checkpointing needs a single-point sweep: pass one "
-                         "--bandwidths value with --checkpoint-dir")
+    # A multi-point sweep keys one checkpoint subdir per bandwidth so every
+    # point saves/resumes independently (a single point uses DIR itself).
+    sweep_dirs = {bw: args.checkpoint_dir for bw in args.bandwidths}
+    if args.checkpoint_dir is not None and len(args.bandwidths) > 1:
+        sweep_dirs = {bw: os.path.join(args.checkpoint_dir, f"bw_{bw:g}")
+                      for bw in args.bandwidths}
     for bw in args.bandwidths:
+        ck = _build_checkpointer(args, directory=sweep_dirs[bw])
         b = ScenarioBuilder(max_cpu=4, queue_cap=16, max_link=4, max_flow=32)
         t0 = b.add_regional_center(n_cpu=2, cpu_power=10.0, disk=2000.0,
                                    tape=20000.0, tape_rate=5.0)
@@ -159,7 +173,7 @@ def run_t0t1(args):
         if args.resume:
             rec = eng.restore()
             state, rung = rec.state, rec.rung
-            print(f"[resume] window {rec.step} from {args.checkpoint_dir}")
+            print(f"[resume] window {rec.step} from {sweep_dirs[bw]}")
         if args.adaptive_exec:
             st = eng.run_adaptive(max_windows=200_000, state=state, rung=rung)
         else:
@@ -331,6 +345,132 @@ def run_ensemble(args):
           f"fails/replica min={fail_stats['min']} max={fail_stats['max']}")
 
 
+def run_catalog(args):
+    from repro.scenarios import catalog
+
+    if args.list:
+        for name in catalog.names():
+            sd = catalog.get(name)
+            print(f"{name:15s} [{sd.driver}] {sd.doc}")
+            defaults = " ".join(f"{k}={v}" for k, v in sd.params)
+            if defaults:
+                print(f"{'':15s} params: {defaults}")
+        return
+    if args.name is None:
+        raise SystemExit("simulate run: pass a scenario name (or --list)")
+    overrides = {}
+    for item in args.set:
+        key, sep, value = item.partition("=")
+        if not sep or not key:
+            raise SystemExit(f"--set expects K=V, got {item!r}")
+        overrides[key] = value
+    try:
+        sd = catalog.get(args.name)
+        built, params = sd.resolve(overrides)
+    except catalog.CatalogError as e:
+        raise SystemExit(str(e)) from None
+
+    if args.devices is not None and args.devices > 1:
+        os.environ.setdefault("XLA_FLAGS",
+                              "--xla_force_host_platform_device_count=8")
+    import jax
+    from repro.fleet import FleetPolicy, Orchestrator
+
+    devices = None
+    if args.devices is not None:
+        have = jax.devices()
+        if args.devices > len(have):
+            raise SystemExit(f"--devices {args.devices} > available "
+                             f"{len(have)} (set XLA_FLAGS="
+                             f"--xla_force_host_platform_device_count=N)")
+        devices = have[: args.devices]
+
+    preempt = None
+    if args.preempt_at_window is not None:
+        if args.preempt_survivors is None:
+            raise SystemExit("--preempt-at-window needs --preempt-survivors K")
+        if args.checkpoint_dir is None:
+            raise SystemExit("--preempt-at-window needs --checkpoint-dir DIR "
+                             "(the resume path requires checkpoints)")
+
+        def preempt(window, attempt, *, _w=args.preempt_at_window,
+                    _k=args.preempt_survivors):
+            # one injected shard loss: the first attempt dies once it
+            # reaches window _w, leaving _k survivors; later attempts run out
+            return _k if attempt == 0 and window >= _w else None
+
+    if args.stream_check and args.stream_trace is None:
+        raise SystemExit("--stream-check needs --stream-trace CAP")
+    _stream_kw, ts, ms = _build_streams(args)
+    pol = FleetPolicy(
+        driver=sd.driver if sd.driver != "auto" else args.driver,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        checkpoint_keep=args.checkpoint_keep,
+        kill_after=args.kill_after_window,
+        max_windows=args.max_windows,
+        max_retries=args.max_retries,
+        backoff=args.backoff,
+        min_devices=args.min_devices)
+    orch = Orchestrator(pol, trace_stream=ts, metrics_stream=ms,
+                        preempt=preempt,
+                        trace_cap=args.stream_trace or 0,
+                        drain_every=args.drain_every)
+    seeds = None
+    if sd.driver == "ensemble":
+        seeds = np.arange(params["seed0"],
+                          params["seed0"] + params["replicas"],
+                          dtype=np.int32)
+    res = orch.run(built, devices=devices, seeds=seeds)
+
+    from repro.core import monitoring as mon
+    st = res.state
+    cn = np.asarray(st.counters)  # (A, N) — or (R, A, N) for ensembles
+    c = cn.sum(axis=tuple(range(cn.ndim - 1)))
+    print(f"[run] {args.name} driver={res.driver} devices={res.devices} "
+          f"attempts={res.attempts} events={int(c[mon.C_EVENTS])} "
+          f"windows={int(np.asarray(st.windows).reshape(-1)[0])} "
+          f"preempt={res.counts['PREEMPT']} resume={res.counts['RESUME']} "
+          f"reshard={res.counts['RESHARD']}")
+    if args.stream_check:
+        # the elastic streaming gate: the (possibly preempted-and-resumed)
+        # streamed trace must have dropped nothing, actually exceeded the
+        # in-device ring, and be byte-identical to an un-streamed big-buffer
+        # reference run that was never interrupted — the zero-drop oracle
+        # equality the orchestrator promises.
+        from repro.core import Engine, merged_engine_trace
+        drop = int(c[mon.C_TRACE_DROP])
+        if drop:
+            raise SystemExit(f"stream-check FAILED: C_TRACE_DROP={drop}")
+        tn = np.asarray(st.trace_n)
+        if int(tn.max()) <= args.stream_trace:
+            raise SystemExit(
+                f"stream-check vacuous: per-agent trace_n max {int(tn.max())}"
+                f" never exceeded the ring cap {args.stream_trace}")
+        ref_eng = Engine(*built, trace_cap=1 << 16)
+        if res.driver == "local":
+            ref = ref_eng.run_local(pol.max_windows)
+        elif res.driver == "adaptive":
+            ref = ref_eng.run_adaptive(pol.max_windows)
+        else:
+            from jax.sharding import Mesh
+            mesh = Mesh(np.array(jax.devices()[: res.devices]), ("agents",))
+            if res.driver == "distributed_adaptive":
+                ref = ref_eng.run_distributed_adaptive(mesh, pol.max_windows)
+            else:
+                ref = ref_eng.run_distributed(mesh, pol.max_windows)
+        want = merged_engine_trace(np.asarray(ref.trace),
+                                   np.asarray(ref.trace_n))
+        got = ts.merged()
+        if got != want:
+            raise SystemExit(
+                f"stream-check FAILED: streamed trace ({len(got)} rows) != "
+                f"uninterrupted reference ({len(want)} rows)")
+        print(f"[stream-check] OK: {len(got)} rows streamed through a "
+              f"{args.stream_trace}-row ring across {res.attempts} "
+              f"attempt(s) == uninterrupted reference, trace_drop=0")
+
+
 def main():
     ap = argparse.ArgumentParser()
     sub = ap.add_subparsers(dest="mode", required=True)
@@ -418,9 +558,69 @@ def main():
     p4.add_argument("--pool-cap", type=int, default=256)
     p4.add_argument("--seed0", type=int, default=0,
                     help="first replica seed (replica r runs seed0 + r)")
+    p5 = sub.add_parser("run")
+    p5.add_argument("name", nargs="?", default=None,
+                    help="catalog scenario name (see --list)")
+    p5.add_argument("--list", action="store_true",
+                    help="print the scenario catalog (names, drivers, "
+                         "declared parameters) and exit")
+    p5.add_argument("--set", action="append", default=[], metavar="K=V",
+                    help="override a declared scenario parameter (repeat "
+                         "for several; values are coerced to the default's "
+                         "type — undeclared keys are a loud error)")
+    p5.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="start the fleet on the first N jax devices "
+                         "(default: all; >1 needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    p5.add_argument("--driver",
+                    choices=("auto", "local", "adaptive", "distributed",
+                             "distributed_adaptive"), default="auto",
+                    help="engine driver (auto picks distributed/adaptive "
+                         "from the device count and the spec's exec policy; "
+                         "ensemble catalog entries force their own driver)")
+    p5.add_argument("--max-windows", type=int, default=10_000, metavar="W",
+                    help="per-attempt window budget (default 10000)")
+    p5.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="durable checkpoint directory (enables the elastic "
+                         "resume path; existing committed checkpoints are "
+                         "auto-resumed — the restart-after-SIGKILL contract)")
+    p5.add_argument("--checkpoint-every", type=int, default=8, metavar="W",
+                    help="save every W windows (default 8; 0 disables)")
+    p5.add_argument("--checkpoint-keep", type=int, default=3, metavar="N",
+                    help="retain the newest N checkpoints (default 3)")
+    p5.add_argument("--kill-after-window", type=int, default=None,
+                    metavar="W",
+                    help="SIGKILL the process right after the first "
+                         "committed checkpoint at window >= W (the crash "
+                         "lane; rerun the same command to auto-resume)")
+    p5.add_argument("--max-retries", type=int, default=3, metavar="N",
+                    help="preemption retry cap before FleetError (default 3)")
+    p5.add_argument("--min-devices", type=int, default=1, metavar="N",
+                    help="degraded-mode device floor: fewer survivors "
+                         "hard-fail instead of resuming (default 1)")
+    p5.add_argument("--backoff", type=float, default=0.0, metavar="S",
+                    help="base retry backoff seconds (exponential, capped; "
+                         "default 0 = immediate)")
+    p5.add_argument("--preempt-at-window", type=int, default=None,
+                    metavar="W",
+                    help="inject one shard-loss preemption once the first "
+                         "attempt reaches window W (the in-process elastic "
+                         "smoke; needs --preempt-survivors and "
+                         "--checkpoint-dir)")
+    p5.add_argument("--preempt-survivors", type=int, default=None,
+                    metavar="K",
+                    help="surviving device count after the injected "
+                         "preemption (the fleet shrinks to the first K)")
+    _stream_args(p5)
+    p5.add_argument("--stream-check", action="store_true",
+                    help="elastic streaming gate (CI): after the run, "
+                         "assert C_TRACE_DROP == 0, that the trace exceeded "
+                         "the ring cap, and that the streamed trace is "
+                         "byte-identical to an uninterrupted big-buffer "
+                         "reference run; exit nonzero on any mismatch")
     args = ap.parse_args()
     dict(t0t1=run_t0t1, workload=run_workload, distributed=run_distributed,
-         ensemble=run_ensemble)[args.mode](args)
+         ensemble=run_ensemble, run=run_catalog)[args.mode](args)
 
 
 if __name__ == "__main__":

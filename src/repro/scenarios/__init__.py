@@ -6,7 +6,12 @@ in docs/scenario_api.md. Nothing in this package edits ``repro.core``
 internals; the engine, the conflict mask, the owner-wins sync, and the
 sequential oracle pick the extended model up from the generated ``World``
 type automatically.
-"""
-from repro.scenarios import cache
 
-__all__ = ["cache"]
+The declarative scenario *catalog* also lives here (``catalog.py``): named,
+parameterized experiment declarations — ports of the workloads above plus
+the builtin T0/T1 study — that ``simulate run <name> [--set k=v]`` resolves
+and dispatches through ``repro.fleet.Orchestrator``.
+"""
+from repro.scenarios import cache, catalog
+
+__all__ = ["cache", "catalog"]

@@ -1,0 +1,147 @@
+"""Declarative scenario catalog tests: registry semantics + CLI round-trip.
+
+The contract (docs/scenario_api.md, "Scenario catalog"): a catalog entry is
+a frozen named declaration whose ``resolve(overrides)`` coerces string
+overrides to the declared defaults' types and is loud about undeclared
+keys; every registered entry round-trips ``name -> spec -> run`` through
+``simulate run <name>`` with the fleet orchestrator as the single entry
+point.
+"""
+
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import monitoring as mon
+from repro.fleet import FleetPolicy, Orchestrator
+from repro.launch import simulate
+from repro.scenarios import catalog
+from repro.scenarios.catalog import CatalogError, ScenarioDef
+
+# small override sets so every entry runs in test time
+SMALL = {
+    "t0t1": {"n_flows": "4", "t_end": "4000"},
+    "cache_churn": {"n_caches": "2", "n_rounds": "2"},
+    "failure_farm": {"n_farms": "2", "n_bursts": "2", "jobs_per_farm": "1"},
+    "ensemble_farm": {"replicas": "2", "n_bursts": "2"},
+}
+
+
+# ----------------------------------------------------------- registry API
+def test_names_sorted_and_builtin_entries_present():
+    ns = catalog.names()
+    assert list(ns) == sorted(ns)
+    for name in ("t0t1", "cache_churn", "failure_farm", "ensemble_farm"):
+        assert name in ns
+
+
+def test_get_unknown_is_loud():
+    with pytest.raises(CatalogError, match="unknown scenario"):
+        catalog.get("nope")
+
+
+def test_register_duplicate_rejected():
+    sd = ScenarioDef(name="t0t1", doc="dup", build=lambda: None)
+    with pytest.raises(CatalogError, match="already registered"):
+        catalog.register(sd)
+
+
+def test_ensemble_entry_must_declare_replicas():
+    sd = ScenarioDef(
+        name="_bad_ensemble", doc="x", build=lambda: None, driver="ensemble"
+    )
+    with pytest.raises(CatalogError, match="replicas"):
+        catalog.register(sd)
+    assert "_bad_ensemble" not in catalog.names()
+
+
+def test_override_coercion_and_rejection():
+    sd = catalog.get("t0t1")
+    built, params = sd.resolve(
+        {"wan_bw": "0.5", "n_flows": "4", "t_end": "3000"}
+    )
+    assert params["wan_bw"] == 0.5 and isinstance(params["wan_bw"], float)
+    assert params["n_flows"] == 4 and isinstance(params["n_flows"], int)
+    assert len(built) == 4  # (world, own, init_events, spec)
+    with pytest.raises(CatalogError, match="no parameter"):
+        sd.resolve({"bogus": 1})
+    with pytest.raises(CatalogError, match="cannot parse"):
+        sd.resolve({"n_flows": "abc"})
+
+
+def test_defaults_are_copies():
+    sd = catalog.get("t0t1")
+    d = sd.defaults()
+    d["wan_bw"] = -1
+    assert sd.defaults()["wan_bw"] != -1
+
+
+# --------------------------------------- name -> spec -> run round-trips
+def test_every_entry_runs_through_orchestrator():
+    """The acceptance bar: each catalog entry resolves and completes a run
+    through the orchestrator (the ensemble convention strips replicas/seed0
+    from the build kwargs and sizes the seed vector instead)."""
+    for name in catalog.names():
+        sd = catalog.get(name)
+        built, params = sd.resolve(SMALL.get(name, {}))
+        seeds = None
+        if sd.driver == "ensemble":
+            seeds = np.arange(
+                params["seed0"],
+                params["seed0"] + params["replicas"],
+                dtype=np.int32,
+            )
+        pol = FleetPolicy(driver=sd.driver)
+        res = Orchestrator(pol).run(built, seeds=seeds)
+        assert res.attempts == 1, name
+        cn = np.asarray(res.state.counters)
+        assert int(cn[..., mon.C_EVENTS].sum()) > 0, name
+        assert bool(np.asarray(res.state.done).all()), name
+
+
+# ------------------------------------------------------------------- CLI
+def _main(argv, monkeypatch):
+    monkeypatch.setattr(sys, "argv", ["simulate"] + argv)
+    simulate.main()
+
+
+def test_cli_list(capsys, monkeypatch):
+    _main(["run", "--list"], monkeypatch)
+    out = capsys.readouterr().out
+    for name in catalog.names():
+        assert name in out
+    assert "params:" in out
+
+
+def test_cli_round_trip_t0t1(capsys, monkeypatch):
+    _main(
+        ["run", "t0t1", "--set", "n_flows=4", "--set", "t_end=4000"],
+        monkeypatch,
+    )
+    out = capsys.readouterr().out
+    assert "[run] t0t1 driver=local" in out
+    assert "attempts=1" in out and "preempt=0" in out
+
+
+def test_cli_round_trip_ensemble(capsys, monkeypatch):
+    _main(
+        ["run", "ensemble_farm", "--set", "replicas=2", "--set",
+         "n_bursts=2"],
+        monkeypatch,
+    )
+    out = capsys.readouterr().out
+    assert "[run] ensemble_farm driver=ensemble" in out
+
+
+def test_cli_errors_are_systemexit(monkeypatch):
+    with pytest.raises(SystemExit, match="unknown scenario"):
+        _main(["run", "nope"], monkeypatch)
+    with pytest.raises(SystemExit, match="no parameter"):
+        _main(["run", "t0t1", "--set", "bogus=1"], monkeypatch)
+    with pytest.raises(SystemExit, match="K=V"):
+        _main(["run", "t0t1", "--set", "novalue"], monkeypatch)
+    with pytest.raises(SystemExit, match="scenario name"):
+        _main(["run"], monkeypatch)
+    with pytest.raises(SystemExit, match="preempt-survivors"):
+        _main(["run", "t0t1", "--preempt-at-window", "4"], monkeypatch)

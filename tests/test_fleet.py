@@ -1,0 +1,399 @@
+"""Elastic fleet orchestration tests: preempt, shrink, resume, byte-exact.
+
+The contract (docs/architecture.md, "Elastic fleet orchestration"): the
+:class:`~repro.fleet.Orchestrator` wraps the four engine drivers behind one
+``run(built, devices, policy)`` entry point and survives shard loss — an
+injected preemption probe or a real SIGKILL — by restoring the latest
+GVT-aligned checkpoint on the surviving device set. The orchestrator changes
+*where* the run executes, never *what* it computes: the resumed run's
+traces, counters, world, and pool must be byte-identical to the
+uninterrupted run and the sequential heapq oracle. Fleet counters
+(``C_PREEMPT``/``C_RESUME``/``C_RESHARD``) are booked host-side only — the
+in-graph rows stay zero, which is exactly what keeps the equality exact.
+
+Fast tests drive the in-process drivers with the injected probe; slow tests
+add the subprocess lanes (``tests/distributed_harness.py``): a 4-device
+injected shard loss shrinking to 2 survivors, and a real SIGKILL discovered
+at restart through the ``fleet.json`` sidecar.
+"""
+
+import json
+import os
+import signal
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import t0t1_builder
+from distributed_harness import run_distributed_child, run_killed_child
+from repro.checkpoint import SimCheckpointer
+from repro.core import Engine, MetricsStream, TraceStream
+from repro.core import monitoring as mon
+from repro.core.policy import ExecPolicy
+from repro.fleet import FleetError, FleetPolicy, Orchestrator, PreemptionError
+
+
+def build(n_agents, *, pool_cap=256, exec_cap=16, exec_policy=None):
+    b, kw = t0t1_builder()
+    kw["pool_cap"] = pool_cap
+    if exec_policy is not None:
+        kw["exec_policy"] = exec_policy
+    else:
+        kw["exec_cap"] = exec_cap
+    return b.build(n_agents=n_agents, **kw)
+
+
+def tree_eq(a, b):
+    return bool(
+        jax.tree.all(
+            jax.tree.map(
+                lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()), a, b
+            )
+        )
+    )
+
+
+def preempt_once(at_window, survivors):
+    """A probe that kills the FIRST attempt once it reaches ``at_window``."""
+
+    def probe(window, attempt):
+        return survivors if attempt == 0 and window >= at_window else None
+
+    return probe
+
+
+def fleet_rows_zero(state):
+    """The in-graph counter vector must never carry fleet bookkeeping."""
+    c = np.asarray(state.counters)
+    return int(c[..., list(mon.FLEET_COUNTERS)].sum()) == 0
+
+
+@pytest.fixture(scope="module")
+def oracle(t0t1_oracle):
+    _w, _c, trace = t0t1_oracle
+    return trace
+
+
+# ----------------------------------------------------------------- policy
+def test_policy_validation():
+    with pytest.raises(FleetError, match="unknown driver"):
+        FleetPolicy(driver="bogus")
+    with pytest.raises(FleetError, match="min_devices"):
+        FleetPolicy(min_devices=0)
+    with pytest.raises(FleetError, match="max_retries"):
+        FleetPolicy(max_retries=-1)
+    with pytest.raises(FleetError, match="checkpoint_every"):
+        FleetPolicy(checkpoint_every=-1)
+
+
+def test_preemption_error_carries_survivors():
+    e = PreemptionError(3, at_window=17)
+    assert e.survivors == 3 and e.at_window == 17
+    assert "window 17" in str(e)
+
+
+# ------------------------------------------------- one entry point, no loss
+def test_orchestrator_matches_engine_drivers():
+    """Uninterrupted orchestrated runs are the plain driver runs: same
+    bytes, one attempt, zero fleet books, auto driver resolution."""
+    built = build(3)
+    ref = Engine(*built).run_local()
+    res = Orchestrator().run(built, devices=jax.devices()[:1])
+    assert res.driver == "local" and res.attempts == 1
+    assert res.counts == {"PREEMPT": 0, "RESUME": 0, "RESHARD": 0}
+    assert tree_eq(res.state, ref)
+
+    ladder = ExecPolicy(ladder=(4, 16))
+    built_a = build(3, exec_policy=ladder)
+    ref_a = Engine(*built_a).run_adaptive()
+    res_a = Orchestrator().run(built_a, devices=jax.devices()[:1])
+    assert res_a.driver == "adaptive"
+    assert tree_eq(res_a.state, ref_a)
+
+
+def test_orchestrator_streams_oracle_exact(oracle):
+    ts = TraceStream()
+    built = build(4)
+    res = Orchestrator(trace_stream=ts, trace_cap=32, drain_every=4).run(
+        built, devices=jax.devices()[:1]
+    )
+    assert ts.merged() == oracle
+    assert int(np.asarray(res.state.counters)[:, mon.C_TRACE_DROP].sum()) == 0
+
+
+# --------------------------------------------------- injected shard loss
+def test_injected_preemption_resume_byte_identical(oracle, tmp_path):
+    """The headline in-process elastic case: attempt 0 is preempted past a
+    committed checkpoint; attempt 1 auto-resumes and finishes. Final state
+    bytes == the uninterrupted run, streamed trace == oracle, fleet books
+    land host-side only."""
+    built = build(4)
+    ref_ms = MetricsStream(interval=4)
+    ref = Engine(
+        *built,
+        trace_cap=32,
+        trace_stream=TraceStream(),
+        metrics_stream=ref_ms,
+        drain_every=4,
+    ).run_local()
+
+    ts, ms = TraceStream(), MetricsStream(interval=4)
+    pol = FleetPolicy(checkpoint_dir=str(tmp_path), checkpoint_every=4)
+    orch = Orchestrator(
+        pol,
+        trace_stream=ts,
+        metrics_stream=ms,
+        preempt=preempt_once(12, 1),
+        trace_cap=32,
+        drain_every=4,
+    )
+    res = orch.run(built, devices=jax.devices()[:1])
+    assert res.attempts == 2
+    assert res.counts == {"PREEMPT": 1, "RESUME": 1, "RESHARD": 0}
+    assert tree_eq(res.state, ref)
+    assert ts.merged() == oracle
+    assert fleet_rows_zero(res.state)
+    # metrics records concatenate to the uninterrupted run's, with the fleet
+    # books as the ONLY difference (class "fleet" is host-side by design)
+    assert len(ms.lines) == len(ref_ms.lines)
+    fleet_names = {name for name, _ in mon.BUILTIN_COUNTERS[-3:]}
+    assert fleet_names == {"PREEMPT", "RESUME", "RESHARD"}
+    for got, want in zip(ms.lines, ref_ms.lines):
+        got = dict(got, counters={k: v for k, v in got["counters"].items()
+                                  if k not in fleet_names})
+        want = dict(want, counters={k: v for k, v in want["counters"].items()
+                                    if k not in fleet_names})
+        assert got == want
+    # the booked values surface in the final record
+    assert ms.latest["counters"]["PREEMPT"] == 1
+    assert ms.latest["counters"]["RESUME"] == 1
+
+
+def test_preemption_before_first_checkpoint_restarts_fresh(tmp_path):
+    """Dying before any committed checkpoint means a clean restart (no
+    RESUME book) — and the rerun still matches the uninterrupted bytes."""
+    built = build(3)
+    ref = Engine(*built).run_local()
+    pol = FleetPolicy(checkpoint_dir=str(tmp_path), checkpoint_every=50)
+    orch = Orchestrator(pol, preempt=preempt_once(2, 1))
+    res = orch.run(built, devices=jax.devices()[:1])
+    assert res.attempts == 2
+    assert res.counts == {"PREEMPT": 1, "RESUME": 0, "RESHARD": 0}
+    assert tree_eq(res.state, ref)
+
+
+def test_degraded_floor_hard_fails(tmp_path):
+    pol = FleetPolicy(
+        checkpoint_dir=str(tmp_path), checkpoint_every=4, min_devices=1
+    )
+    orch = Orchestrator(pol, preempt=preempt_once(4, 0))
+    with pytest.raises(FleetError, match="device floor"):
+        orch.run(build(2), devices=jax.devices()[:1])
+    assert orch.counts["PREEMPT"] == 1
+
+
+def test_retry_cap_exhausted(tmp_path):
+    pol = FleetPolicy(
+        checkpoint_dir=str(tmp_path), checkpoint_every=4, max_retries=2
+    )
+    orch = Orchestrator(
+        pol, preempt=lambda window, attempt: 1 if window >= 4 else None
+    )
+    with pytest.raises(FleetError, match="retry cap"):
+        orch.run(build(2), devices=jax.devices()[:1])
+    assert orch.counts["PREEMPT"] == 3  # initial + 2 retries, all preempted
+
+
+def test_backoff_schedule(tmp_path):
+    """Exponential, capped, only between attempts."""
+    slept = []
+    pol = FleetPolicy(
+        checkpoint_dir=str(tmp_path),
+        checkpoint_every=4,
+        max_retries=3,
+        backoff=2.0,
+        backoff_cap=3.0,
+    )
+    orch = Orchestrator(
+        pol,
+        preempt=lambda w, attempt: 1 if attempt < 2 and w >= 4 else None,
+        sleep=slept.append,
+    )
+    res = orch.run(build(2), devices=jax.devices()[:1])
+    assert res.attempts == 3
+    assert slept == [2.0, 3.0]  # 2, then min(4, cap=3)
+
+
+# ------------------------------------------------ sidecar (SIGKILL lane)
+def test_sidecar_restart_discovery(tmp_path):
+    """A prior orchestrated process that died mid-run leaves committed
+    checkpoints plus an unclean ``fleet.json``; the next start books the
+    death as a preemption, restores the books, resumes, and reshard-counts
+    the device change — all without the dead process telling anyone."""
+    built = build(3)
+    ref = Engine(*built).run_local()
+
+    # simulate the dead process: checkpoints exist, sidecar is unclean
+    class _Die(RuntimeError):
+        pass
+
+    def die(window, _state):
+        if window >= 8:
+            raise _Die
+
+    eng = Engine(
+        *built,
+        checkpointer=SimCheckpointer(str(tmp_path), every=4),
+        window_hook=die,
+    )
+    with pytest.raises(_Die):
+        eng.run_local()
+    with open(os.path.join(str(tmp_path), "fleet.json"), "w") as f:
+        json.dump(
+            {
+                "n_devices": 2,
+                "clean": False,
+                "counts": {"PREEMPT": 1, "RESUME": 1, "RESHARD": 0},
+            },
+            f,
+        )
+
+    pol = FleetPolicy(checkpoint_dir=str(tmp_path), checkpoint_every=4)
+    orch = Orchestrator(pol)
+    res = orch.run(built, devices=jax.devices()[:1])
+    assert res.attempts == 1
+    # prior books restored (1,1,0) + the discovered death + this resume,
+    # which also resharded 2 -> 1
+    assert res.counts == {"PREEMPT": 2, "RESUME": 2, "RESHARD": 1}
+    assert tree_eq(res.state, ref)
+    # a completed run flips the sidecar clean: a rerun is NOT a preemption
+    with open(os.path.join(str(tmp_path), "fleet.json")) as f:
+        assert json.load(f)["clean"] is True
+
+
+# ------------------------------------------------------------- ensemble
+def test_ensemble_driver_through_orchestrator():
+    built = build(2, pool_cap=128)
+    seeds = np.arange(1, 4, dtype=np.int32)
+    ref = Engine(*built).run_ensemble(seeds)
+    res = Orchestrator(FleetPolicy(driver="ensemble")).run(built, seeds=seeds)
+    assert res.driver == "ensemble" and res.attempts == 1
+    assert tree_eq(res.state, ref)
+    with pytest.raises(FleetError, match="seed vector"):
+        Orchestrator(FleetPolicy(driver="ensemble")).run(built)
+
+
+# ------------------------------------------- subprocess elastic lanes
+_SHARD_LOSS_BODY = r"""
+import tempfile
+from repro.fleet import FleetPolicy, Orchestrator
+built = t0t1_build(5, pool_cap=128, exec_cap=8, n_flows=16, second_gen=True)
+world, own, init_ev, spec = built
+otrace = oracle_trace(pool_cap=128, exec_cap=8, n_flows=16, second_gen=True)
+ts = mon.TraceStream()
+with tempfile.TemporaryDirectory() as tmp:
+    pol = FleetPolicy(checkpoint_dir=tmp, checkpoint_every=4)
+    orch = Orchestrator(
+        pol, trace_stream=ts, trace_cap=32, drain_every=4,
+        preempt=lambda w, attempt: 2 if attempt == 0 and w >= 12 else None)
+    res = orch.run(built, devices=jax.devices())
+# the uninterrupted reference: a from-scratch streamed run on the SAME
+# 2-device survivor mesh
+ref_ts = mon.TraceStream()
+ref_eng = Engine(world, own, init_ev, spec, trace_cap=32, drain_every=4,
+                 trace_stream=ref_ts)
+ref = ref_eng.run_distributed(Mesh(np.array(jax.devices()[:2]), ("agents",)))
+fleet_idx = [mon.C_PREEMPT, mon.C_RESUME, mon.C_RESHARD]
+print(json.dumps({
+    "driver": res.driver,
+    "devices": res.devices,
+    "attempts": res.attempts,
+    "counts": res.counts,
+    "state_eq_ref": tree_eq(res.state, ref),
+    "stream_eq_oracle": ts.merged() == otrace,
+    "ref_eq_oracle": ref_ts.merged() == otrace,
+    "trace_drop": int(np.asarray(res.state.counters)[:, mon.C_TRACE_DROP].sum()),
+    "fleet_rows_zero":
+        int(np.asarray(res.state.counters)[:, fleet_idx].sum()) == 0,
+}))
+"""
+
+
+@pytest.mark.slow
+def test_injected_shard_loss_shrinks_and_matches(tmp_path):
+    """4 devices, an injected shard loss at window >= 12 leaves 2 survivors:
+    the orchestrator shrinks the mesh, resumes from the latest checkpoint,
+    and finishes byte-identical to an uninterrupted 2-device run and the
+    oracle — PREEMPT/RESUME/RESHARD each booked once, host-side only."""
+    res = run_distributed_child(_SHARD_LOSS_BODY, n_devices=4)
+    assert res["driver"] == "distributed" and res["devices"] == 2, res
+    assert res["attempts"] == 2, res
+    assert res["counts"] == {"PREEMPT": 1, "RESUME": 1, "RESHARD": 1}, res
+    assert res["state_eq_ref"] is True, res
+    assert res["stream_eq_oracle"] is True, res
+    assert res["ref_eq_oracle"] is True, res
+    assert res["trace_drop"] == 0, res
+    assert res["fleet_rows_zero"] is True, res
+
+
+_KILL_BODY = r"""
+tmp = {tmp!r}
+from repro.fleet import FleetPolicy, Orchestrator
+built = t0t1_build(5, pool_cap=128, exec_cap=8, n_flows=16, second_gen=True)
+pol = FleetPolicy(checkpoint_dir=tmp, checkpoint_every=4, kill_after=12)
+orch = Orchestrator(pol, trace_stream=mon.TraceStream(), trace_cap=32,
+                    drain_every=4)
+orch.run(built, devices=jax.devices())
+print(json.dumps({{"survived": True}}))
+"""
+
+_RESTART_BODY = r"""
+tmp = {tmp!r}
+from repro.fleet import FleetPolicy, Orchestrator
+built = t0t1_build(5, pool_cap=128, exec_cap=8, n_flows=16, second_gen=True)
+world, own, init_ev, spec = built
+otrace = oracle_trace(pool_cap=128, exec_cap=8, n_flows=16, second_gen=True)
+ts = mon.TraceStream()
+pol = FleetPolicy(checkpoint_dir=tmp, checkpoint_every=4)
+orch = Orchestrator(pol, trace_stream=ts, trace_cap=32, drain_every=4)
+res = orch.run(built, devices=jax.devices())  # 2 devices now
+ref_ts = mon.TraceStream()
+ref_eng = Engine(world, own, init_ev, spec, trace_cap=32, drain_every=4,
+                 trace_stream=ref_ts)
+ref = ref_eng.run_distributed(Mesh(np.array(jax.devices()), ("agents",)))
+print(json.dumps({{
+    "attempts": res.attempts,
+    "counts": res.counts,
+    "state_eq_ref": tree_eq(res.state, ref),
+    "stream_eq_oracle": ts.merged() == otrace,
+    "ref_eq_oracle": ref_ts.merged() == otrace,
+}}))
+"""
+
+
+@pytest.mark.slow
+def test_sigkill_restart_discovers_preemption(tmp_path):
+    """The SIGKILL lane end-to-end: an orchestrated 4-device run is killed
+    by a real, unhandled SIGKILL right after a committed checkpoint; the
+    unclean ``fleet.json`` sidecar makes the next start (a fresh 2-device
+    process rerunning the same command) book the death as a preemption and
+    auto-resume — no --resume flag, no operator. Result bytes == the
+    uninterrupted 2-device run == the oracle."""
+    tmp = str(tmp_path)
+    dead = run_killed_child(_KILL_BODY.format(tmp=tmp), n_devices=4)
+    assert dead.returncode == -signal.SIGKILL, (
+        dead.returncode,
+        dead.stderr[-2000:],
+    )
+    assert "survived" not in dead.stdout
+    with open(os.path.join(tmp, "fleet.json")) as f:
+        side = json.load(f)
+    assert side["clean"] is False and side["n_devices"] == 4
+    assert SimCheckpointer(tmp).latest_step() >= 12
+    res = run_distributed_child(_RESTART_BODY.format(tmp=tmp), n_devices=2)
+    assert res["attempts"] == 1, res
+    assert res["counts"] == {"PREEMPT": 1, "RESUME": 1, "RESHARD": 1}, res
+    assert res["state_eq_ref"] is True, res
+    assert res["stream_eq_oracle"] is True, res
+    assert res["ref_eq_oracle"] is True, res

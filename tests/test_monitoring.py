@@ -182,6 +182,64 @@ def test_stream_checkpoint_resume_past_cap_zero_drop(oracle, buffered_ref, tmp_p
     assert ts2.merged() == buffered_ref == oracle
 
 
+def test_observability_concatenates_across_resume(tmp_path):
+    """Fleet satellite: MetricsStream interval records AND TraceStream
+    segments concatenate *exactly* across a checkpoint/resume boundary —
+    the checkpoint carries the host-side emitted records/drained spans
+    (``metrics/`` + ``trace_seg/`` leaves), restore stages them, and the
+    resumed run emits only the post-checkpoint intervals, so the two runs'
+    observability is indistinguishable record-for-record."""
+    from repro.checkpoint import SimCheckpointer
+
+    def make(every=0):
+        ts, ms = TraceStream(), MetricsStream(interval=4)
+        w, o, e, s = build(3, exec_cap=16)
+        ck = SimCheckpointer(str(tmp_path), every=every, keep=99)
+        eng = Engine(
+            w, o, e, s, trace_cap=32, trace_stream=ts, metrics_stream=ms,
+            drain_every=4, checkpointer=ck,
+        )
+        return ts, ms, eng
+
+    ts, ms, eng = make(every=6)
+    eng.run_local()
+    ref_lines, ref_trace = list(ms.lines), ts.merged()
+    steps = eng.checkpointer.all_steps()
+    step = steps[len(steps) // 2]
+    # non-vacuous: the chosen boundary splits the interval records
+    wins = [r["window"] for r in ref_lines if not r.get("final")]
+    assert any(w <= step for w in wins) and any(w > step for w in wins)
+
+    ts2, ms2, eng2 = make()
+    rec = eng2.restore(step=step)
+    eng2.run_local(state=rec.state)
+    assert ms2.lines == ref_lines
+    assert ts2.merged() == ref_trace
+
+
+def test_metrics_resume_does_not_rewrite_out(tmp_path):
+    """Restored records seed ``lines`` for exact concatenation but are NOT
+    re-written to ``out`` — a resumed process's stdout carries only what it
+    emitted itself (the pre-crash lines already left the dead process)."""
+    from repro.checkpoint import SimCheckpointer
+
+    w, o, e, s = build(2, exec_cap=16)
+    ck = SimCheckpointer(str(tmp_path), every=6, keep=99)
+    ms = MetricsStream(interval=4, out=io.StringIO())
+    Engine(w, o, e, s, metrics_stream=ms, checkpointer=ck).run_local()
+    step = ck.all_steps()[0]
+    out2 = io.StringIO()
+    ms2 = MetricsStream(interval=4, out=out2)
+    eng2 = Engine(
+        w, o, e, s, metrics_stream=ms2,
+        checkpointer=SimCheckpointer(str(tmp_path)),
+    )
+    rec = eng2.restore(step=step)
+    eng2.run_local(state=rec.state)
+    emitted = [json.loads(x) for x in out2.getvalue().strip().splitlines()]
+    assert emitted == [r for r in ms2.lines if r["window"] > step]
+
+
 # ----------------------------------------------------------------- metrics
 def test_metrics_stream_json_lines(oracle):
     out = io.StringIO()
@@ -232,6 +290,30 @@ def test_counter_class():
     assert mon.counter_class(mon.C_BATCH_ROWS) == "batch-diag"
     assert mon.counter_class(mon.C_EVENTS) == "counter"
     assert mon.counter_class(mon.N_COUNTERS + 3) == "counter"
+    for idx in mon.FLEET_COUNTERS:
+        assert mon.counter_class(idx) == "fleet"
+    assert mon.FLEET_COUNTERS == (
+        mon.C_PREEMPT,
+        mon.C_RESUME,
+        mon.C_RESHARD,
+    )
+
+
+def test_metrics_stream_book_overlay():
+    """Fleet counters are booked host-side (``MetricsStream.book``) and
+    merged into every emitted record — the in-graph vector never carries
+    them, so a resumed EngineState stays byte-identical."""
+    ms = MetricsStream(interval=8)
+    ms.book("PREEMPT")
+    ms.book("RESUME", 2)
+    w, o, e, s = build(2, exec_cap=16)
+    st = Engine(w, o, e, s, metrics_stream=ms).run_local()
+    for rec in ms.lines:
+        assert rec["counters"]["PREEMPT"] == 1
+        assert rec["counters"]["RESUME"] == 2
+        assert rec["counters"]["RESHARD"] == 0
+    c = np.asarray(st.counters)
+    assert int(c[:, list(mon.FLEET_COUNTERS)].sum()) == 0
 
 
 def test_counter_docs_follow_registry():

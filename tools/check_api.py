@@ -121,6 +121,40 @@ def check() -> list[str]:
         **{f: 0 for f in scalar_fields},
     )
     expect("checkpoint leaf keys", sorted(tree_keys(template)), want_keys)
+
+    # fleet surface: the orchestrator's public names must resolve, the fleet
+    # counters must be registry-declared with the host-side-only class (an
+    # in-graph "counter" class here would mean someone started bumping them
+    # inside the window program, breaking resume byte-identity)
+    import repro.fleet as fleet
+
+    missing = [n for n in fleet.__all__ if not hasattr(fleet, n)]
+    if missing:
+        errors.append(f"repro.fleet.__all__ names missing attributes: {missing}")
+    for idx in mon.FLEET_COUNTERS:
+        if mon.counter_class(idx) != "fleet":
+            errors.append(
+                f"counter {idx} in FLEET_COUNTERS but counter_class says "
+                f"{mon.counter_class(idx)!r} (must be 'fleet': booked "
+                "host-side only)"
+            )
+
+    # catalog surface: every entry must build-resolve cleanly and ensemble
+    # entries must declare the replicas/seed0 sizing convention
+    from repro.scenarios import catalog
+
+    if not catalog.names():
+        errors.append("scenario catalog is empty")
+    for name in catalog.names():
+        sd = catalog.get(name)
+        if not callable(sd.build):
+            errors.append(f"catalog entry {name!r}: build is not callable")
+        if not sd.doc:
+            errors.append(f"catalog entry {name!r}: missing doc")
+        if sd.driver == "ensemble" and "seed0" not in sd.defaults():
+            errors.append(
+                f"catalog ensemble entry {name!r}: missing 'seed0' parameter"
+            )
     return errors
 
 
