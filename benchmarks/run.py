@@ -20,6 +20,12 @@
   insert_churn     — PR 5 pool lifecycle: free-list ring insert/release vs the
                      retained insert_ref O(pool_cap) scan (gated subsystem
                      ratio + informational end-to-end engine ratio)
+  fused_superstep  — PR 10 fused window front-end: the one-jit fused select +
+                     gather + conflict + group + release-rank program vs the
+                     same stages dispatched separately (gated); on TPU also
+                     the compiled Pallas megakernel vs the stitched twin
+                     ("requires": "tpu"); asserts fused engine == stitched
+                     engine == heapq oracle before timing
   adaptive_exec    — PR 5 monitoring-driven exec width: ladder policy vs the
                      static exec_cap=256 default on spill-heavy windows
                      (fewer windows, same events, oracle-exact)
@@ -74,7 +80,7 @@ def emit(name: str, us: float, derived: str = ""):
 
 
 def t0t1(wan_bw, n_flows=48, interval=8, n_agents=1, lookahead=2,
-         flow_mb=100.0, pool_cap=1024, exec_cap=None):
+         flow_mb=100.0, pool_cap=1024, exec_cap=None, fused_select=False):
     b = ScenarioBuilder(max_cpu=4, queue_cap=32, max_link=4, max_flow=64)
     t0 = b.add_regional_center(n_cpu=2, cpu_power=10.0, disk=20000.0,
                                tape=200000.0, tape_rate=5.0)
@@ -87,7 +93,8 @@ def t0t1(wan_bw, n_flows=48, interval=8, n_agents=1, lookahead=2,
                     interval=interval, count=n_flows)
     kw = {} if exec_cap is None else dict(exec_cap=exec_cap)
     return b.build(n_agents=n_agents, lookahead=lookahead, t_end=200_000,
-                   pool_cap=pool_cap, work_per_mb=2.0, **kw)
+                   pool_cap=pool_cap, work_per_mb=2.0,
+                   fused_select=fused_select, **kw)
 
 
 def run_engine(built, max_windows=100_000):
@@ -465,6 +472,194 @@ def bench_insert_churn(pool_caps=(4096,), burst=256, iters=64, width=256,
              f"engine_events_s_ring={erates['ring']:.0f};"
              f"engine_events_s_ref={erates['ref']:.0f};"
              f"engine_speedup={erates['ring'] / erates['ref']:.2f}x")
+
+
+def bench_fused_superstep(pool_cap=4096, exec_cap=256, iters=500):
+    """PR 10 fused window front-end: the superstep megakernel seam.
+
+    The gated metric is the fused window *tail* — everything the megakernel
+    fuses downstream of the (time, seq) sort the two paths share: exec mask,
+    slot gathers, conflict mask, same-kind grouping, release ranks — run as
+    the megakernel's own algorithm (pairwise duplicate count instead of the
+    sort-based ``sync.conflict_mask``) in ONE program, vs the stitched
+    composition dispatched one stage at a time with every intermediate
+    index/rank array materialized between dispatches, exactly the per-hook
+    shape the engine's non-fused path composes from. Dense windows over a
+    full pool at ``pool_cap``; windows/s ratio, machine-normalized (both
+    sides in one process; insert_churn idiom). The shared pool-wide sort is
+    *excluded* from both sides — it is identical work, and including it
+    would only dilute the seam the gate pins. Byte-identity of the two
+    tails (and of the ref oracle ``fused_select_ref``) is asserted in-bench.
+
+    On a TPU backend the same family adds the compiled-Pallas lane
+    (``fused_superstep_tpu_*``, ``"requires": "tpu"`` in baseline.json): the
+    complete megakernel — sort included, ring cursor in SMEM, every
+    intermediate VMEM-resident — against the one-jit stitched twin
+    ``engine.fused_select_xla``, both compiled.
+
+    Before timing anything the row asserts end-to-end byte-identity: the
+    fused engine (``spec.fused_select=True``, the interpret-Pallas path off
+    TPU) runs the identical trace/counters/world as the stitched engine and
+    the sequential heapq oracle on a dense scenario. ``engine_speedup`` is
+    the end-to-end fused-engine ratio (informational — off TPU the
+    interpreted megakernel *loses*; the gate pins the fusion seam itself).
+    """
+    from repro.core import merged_engine_trace, run_sequential, sync
+    from repro.core.engine import (fused_select_xla, group_by_kind_xla,
+                                   select_events_xla)
+    from repro.kernels import ref as kref
+
+    # --- byte-identity proof: fused engine == stitched engine == oracle ---
+    built_f = t0t1(2.0, n_flows=32, pool_cap=1024, fused_select=True)
+    built_s = t0t1(2.0, n_flows=32, pool_cap=1024)
+    _, _, otrace = run_sequential(*built_s)
+    states, erates = {}, {}
+    for label, built in (("fused", built_f), ("stitched", built_s)):
+        eng = Engine(*built, trace_cap=8192)
+        jax.block_until_ready(eng.run_local().counters)       # compile
+        t0 = time.perf_counter()
+        st = eng.run_local()
+        jax.block_until_ready(st.counters)
+        dt = time.perf_counter() - t0
+        states[label] = st
+        erates[label] = int(np.asarray(st.counters)[:, mon.C_EVENTS].sum()) / dt
+        trace = merged_engine_trace(np.asarray(st.trace),
+                                    np.asarray(st.trace_n))
+        assert trace == otrace, f"{label} engine trace != heapq oracle"
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()),
+        states["fused"], states["stitched"])), \
+        "fused engine state != stitched engine state"
+
+    # --- the fusion seam, subsystem-isolated on a dense full pool ---
+    cap, m = pool_cap, exec_cap
+    n_kinds, n_tables, n_res = ev.N_KINDS, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 10)
+    safe = jax.random.bernoulli(ks[0], 0.9, (cap,))
+    tk = jnp.where(safe, jax.random.randint(ks[1], (cap,), 0, 1000),
+                   jnp.int32(2**31 - 1))
+    sq = jax.random.randint(ks[2], (cap,), 0, 2**20)
+    tm = jax.random.randint(ks[3], (cap,), 0, 1000)
+    kind = jax.random.randint(ks[4], (cap,), 0, n_kinds)
+    src = jax.random.randint(ks[5], (cap,), 0, 16)
+    dst = jax.random.randint(ks[6], (cap,), 0, 16)
+    ctx = jax.random.randint(ks[7], (cap,), 0, 100)
+    pay = jax.random.normal(ks[8], (cap, ev.PAYLOAD))
+    tbl = jax.random.randint(ks[9], (cap,), 0, n_tables)
+    res = jax.random.randint(ks[9], (cap,), 0, n_res)
+    valid = jnp.ones((cap,), bool)
+    tail = jnp.int32(cap - 7)                      # ring cursor wraps
+    kw = dict(n_kinds=n_kinds, n_res=n_res, n_tables=n_tables)
+
+    # the shared sort-select — identical work on both sides, computed once
+    # and excluded from the timed seam
+    exec_idx = jax.jit(lambda tk, sq: select_events_xla(tk, sq, m))(tk, sq)
+    jax.block_until_ready(exec_idx)
+
+    @jax.jit
+    def fused_tail(idx, tail):
+        # the megakernel's own window tail as one program: exec mask, the
+        # slot gathers, the pairwise-count conflict mask (no sort), group,
+        # release ranks — nothing materialized between stages
+        es = sync.exec_selection_ring(safe, idx)
+        tb, rs = tbl[idx], res[idx]
+        rkey = tb * jnp.int32(n_res) + rs
+        comp = es & (tb > 0)
+        cnt = jnp.sum((rkey[:, None] == rkey[None, :]) & comp[None, :],
+                      axis=1)
+        clean = es & ~(comp & (cnt >= 2))
+        g = (tm[idx], kind[idx], src[idx], dst[idx], ctx[idx], pay[idx],
+             valid[idx])
+        order, _rank, _counts = group_by_kind_xla(g[1], clean,
+                                                  n_kinds=n_kinds)
+        w = es.astype(jnp.int32)
+        return es, clean, order, (tail + jnp.cumsum(w) - w) % cap, g
+
+    # the stitched composition: one dispatch per hook, intermediates
+    # materialized between them (the non-fused engine's per-window shape)
+    s_safe = jax.jit(sync.exec_selection_ring)
+    s_gather = jax.jit(lambda idx, *cols: tuple(c[idx] for c in cols))
+    s_clean = jax.jit(lambda es, tb, rs: es & ~sync.conflict_mask(
+        es, tb, rs, n_res=n_res, n_tables=n_tables))
+    s_group = jax.jit(
+        lambda kind_w, clean: group_by_kind_xla(kind_w, clean,
+                                                n_kinds=n_kinds)[0])
+
+    @jax.jit
+    def s_rel(es, tail):
+        w = es.astype(jnp.int32)
+        return (tail + jnp.cumsum(w) - w) % cap
+
+    def staged_tail(idx, tail):
+        es = s_safe(safe, idx)
+        tb, rs = s_gather(idx, tbl, res)
+        clean = s_clean(es, tb, rs)
+        g = s_gather(idx, tm, kind, src, dst, ctx, pay, valid)
+        order = s_group(g[1], clean)
+        return es, clean, order, s_rel(es, tail), g
+
+    rates = {}
+    for label, fn in (("fused", fused_tail), ("staged", staged_tail)):
+        jax.block_until_ready(fn(exec_idx, tail))  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(exec_idx, tail)
+        jax.block_until_ready(out)
+        rates[label] = iters / (time.perf_counter() - t0)
+
+    # the two tails are byte-identical, and both match the ref oracle
+    got, want = fused_tail(exec_idx, tail), staged_tail(exec_idx, tail)
+    for a, b in zip(got[:4], want[:4]):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    for a, b in zip(got[4], want[4]):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    fs_ref = kref.fused_select_ref(tk, sq, safe, tm, kind, src, dst, ctx,
+                                   pay, valid, tbl, res, tail, m, **kw)
+    assert (np.asarray(fs_ref.exec_idx) == np.asarray(exec_idx)).all()
+    assert (np.asarray(fs_ref.clean) == np.asarray(got[1])).all()
+    assert (np.asarray(fs_ref.order) == np.asarray(got[2])).all()
+
+    emit(f"fused_superstep_p{pool_cap}", 1e6 / rates["fused"],
+         f"windows_s_fused={rates['fused']:.0f};"
+         f"windows_s_staged={rates['staged']:.0f};"
+         f"exec_cap={m};"
+         f"speedup={rates['fused'] / rates['staged']:.2f}x;"
+         f"engine_events_s_fused={erates['fused']:.0f};"
+         f"engine_events_s_stitched={erates['stitched']:.0f};"
+         f"engine_speedup={erates['fused'] / erates['stitched']:.2f}x")
+
+    if jax.default_backend() == "tpu":
+        # the compiled megakernel itself (sort included, SMEM ring cursor)
+        # vs the one-jit stitched twin
+        from repro.kernels import ops
+
+        @jax.jit
+        def one_jit_stitched(tail):
+            fs = fused_select_xla(tk, sq, safe, tm, kind, src, dst, ctx,
+                                  pay, valid, tbl, res, tail, m, **kw)
+            return fs.exec_safe, fs.clean, fs.order, fs.rel_pos
+
+        def pallas(tail):
+            fs = ops.fused_select(tk, sq, safe, tm, kind, src, dst, ctx, pay,
+                                  valid, tbl, res, tail, m, **kw)
+            return fs.exec_safe, fs.clean, fs.order, fs.rel_pos
+
+        prates = {}
+        for label, fn in (("pallas", pallas), ("stitched", one_jit_stitched)):
+            jax.block_until_ready(fn(tail))        # compile
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn(tail)
+            jax.block_until_ready(out)
+            prates[label] = iters / (time.perf_counter() - t0)
+        for a, b in zip(pallas(tail), one_jit_stitched(tail)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+        emit(f"fused_superstep_tpu_p{pool_cap}",
+             1e6 / prates["pallas"],
+             f"windows_s_pallas={prates['pallas']:.0f};"
+             f"windows_s_stitched={prates['stitched']:.0f};"
+             f"exec_cap={m};"
+             f"speedup={prates['pallas'] / prates['stitched']:.2f}x")
 
 
 def bench_adaptive_exec(width=1024, n_ticks=4, lookahead=4, pool_cap=4096):
@@ -913,6 +1108,7 @@ def main() -> None:
         bench_batched_dispatch(pool_caps=(4096,))
         bench_wide_component(pool_caps=(4096,))
         bench_insert_churn(pool_caps=(4096,))
+        bench_fused_superstep()
         bench_adaptive_exec()
         bench_cache_churn(pool_caps=(4096,))
         bench_trace_stream()
@@ -930,6 +1126,7 @@ def main() -> None:
         bench_batched_dispatch()
         bench_wide_component()
         bench_insert_churn()
+        bench_fused_superstep()
         bench_adaptive_exec()
         bench_cache_churn()
         bench_trace_stream()

@@ -91,6 +91,9 @@ from repro.core.components import ScenarioSpec, World, WorldOwnership
 from repro.core.handlers import (Ev, apply_handler, apply_handler_batch,
                                  apply_handler_batch_dense)
 from repro.core.registry import registry_of
+# the fused front-end's result container only — kernels.event_select imports
+# nothing from repro.core, so this cannot cycle
+from repro.kernels.event_select import FusedSelect
 
 AXIS = "agents"
 
@@ -182,6 +185,40 @@ def group_by_kind_xla(kind: jax.Array, active: jax.Array,
     return order, rank, counts
 
 
+def fused_select_xla(time_key, seq, safe, time, kind, src, dst, ctx, payload,
+                     valid, table_id, res, free_tail, exec_cap, *,
+                     n_kinds: int, n_res: int, n_tables: int) -> FusedSelect:
+    """XLA-stitched twin of the fused window front-end.
+
+    The exact composition the non-fused superstep runs — select
+    (``select_events_xla``), exec mask (``sync.exec_selection_ring``), field
+    gathers, conflict mask (``sync.conflict_mask``), group
+    (``group_by_kind_xla``), and the free-ring release ranks of
+    ``events.release`` — packaged behind the same signature as the Pallas
+    megakernel (``kernels.ops.fused_select``), so the two are drop-in
+    interchangeable ``fused_fn`` hooks and every output must match
+    byte-for-byte. Retained as the reference path for tests and the
+    ``fused_superstep`` benchmark.
+    """
+    cap = time_key.shape[0]
+    m = max(min(exec_cap, cap), 1)
+    exec_idx = select_events_xla(time_key, seq, m)
+    exec_safe = sync.exec_selection_ring(safe, exec_idx)
+    dirty = sync.conflict_mask(exec_safe, table_id[exec_idx], res[exec_idx],
+                               n_res=n_res, n_tables=n_tables)
+    clean = exec_safe & ~dirty
+    kind_w = kind[exec_idx]
+    order, _rank, _counts = group_by_kind_xla(kind_w, clean, n_kinds=n_kinds)
+    w = exec_safe.astype(jnp.int32)
+    rel = (jnp.asarray(free_tail, jnp.int32) + jnp.cumsum(w) - w) % jnp.int32(
+        cap)
+    return FusedSelect(
+        exec_idx=exec_idx, exec_safe=exec_safe, time=time[exec_idx],
+        seq=seq[exec_idx], kind=kind_w, src=src[exec_idx],
+        dst=dst[exec_idx], ctx=ctx[exec_idx], payload=payload[exec_idx],
+        valid=valid[exec_idx], clean=clean, order=order, rel_pos=rel)
+
+
 class EngineState(NamedTuple):
     world: World
     pool: ev.EventPool
@@ -209,6 +246,9 @@ class Engine:
                  | None = None,
                  route_fn: Callable[[jax.Array], jax.Array] | None = None,
                  trace_fn: Callable[[jax.Array], jax.Array] | None = None,
+                 fused_fn: Callable[..., FusedSelect] | None = None,
+                 slot_fn: Callable[[jax.Array, jax.Array, jax.Array],
+                                   jax.Array] | None = None,
                  trace_stream: "mon.TraceStream | None" = None,
                  metrics_stream: "mon.MetricsStream | None" = None,
                  drain_every: int = 16,
@@ -295,6 +335,27 @@ class Engine:
                                                  spec.work_per_mb)
         # widest resource table: bound for the conflict-detection key space
         self._n_res = self.registry.max_rows(world)
+        # fused front-end (spec.fused_select, default off): ONE call replaces
+        # the select_fn/gather/conflict_mask/group_fn stitch — and the free
+        # ring's insert math rides the same lane (slot_fn -> events.insert).
+        # fused_fn(time_key, seq, safe, time, kind, src, dst, ctx, payload,
+        # valid, table_id, res, free_tail, exec_cap) -> FusedSelect. Default
+        # binding is the Pallas superstep megakernel (kernels.ops.fused_select
+        # — compiled on TPU, interpreted elsewhere); fused_select_xla above is
+        # the stitched twin, drop-in for tests and benchmarks. Only consulted
+        # when the spec flag is on.
+        if not isinstance(spec.fused_select, bool):
+            raise ValueError(
+                f"spec.fused_select must be a bool, got {spec.fused_select!r}")
+        self.fused_fn = fused_fn
+        self.slot_fn = slot_fn
+        if spec.fused_select and self.fused_fn is None:
+            from repro.kernels import ops as _ops
+            self.fused_fn = functools.partial(
+                _ops.fused_select, n_kinds=self.registry.n_kinds,
+                n_res=self._n_res, n_tables=self.registry.n_tables)
+            if self.slot_fn is None:
+                self.slot_fn = _ops.ring_slots
         # jitted-driver cache: run_local/step_local build a fresh closure per
         # call, which would otherwise defeat jax.jit's function-identity cache
         # and recompile the whole superstep on every invocation
@@ -396,9 +457,31 @@ class Engine:
         # 3. order (time, seq) + compact: unsafe slots sort to the back, and only
         # the first exec_cap gather indices (the earliest safe slots) are kept
         time_key = jnp.where(safe, pool.time, ev.T_INF)
-        exec_idx = self.select_fn(time_key, pool.seq, xcap)
-        exec_safe = sync.exec_selection_ring(safe, exec_idx)
-        cand = ev.gather(pool, exec_idx)
+        if spec.fused_select:
+            # fused front-end: select + gather + conflict + group + release
+            # ranks in ONE fused_fn call (the Pallas megakernel by default).
+            # The conflict key columns are precomputed pool-wide — two cheap
+            # registry gathers; clip-then-gather commutes with the gather the
+            # stitched path does per window, so the bytes match exactly.
+            tbl_pool = jnp.asarray(self.registry.kind_table, jnp.int32)[
+                jnp.clip(pool.kind, 0, self.registry.n_kinds - 1)]
+            res_pool = world.lp_res[jnp.clip(pool.dst, 0, spec.n_lp - 1)]
+            fs = self.fused_fn(time_key, pool.seq, safe, pool.time, pool.kind,
+                               pool.src, pool.dst, pool.ctx, pool.payload,
+                               pool.valid, tbl_pool, res_pool, pool.free_tail,
+                               xcap)
+            exec_idx, exec_safe = fs.exec_idx, fs.exec_safe
+            cand = ev.EventBatch(time=fs.time, seq=fs.seq, kind=fs.kind,
+                                 src=fs.src, dst=fs.dst, ctx=fs.ctx,
+                                 payload=fs.payload, valid=fs.valid)
+            pre = (fs.clean, fs.order)
+            rel_pos = fs.rel_pos
+        else:
+            exec_idx = self.select_fn(time_key, pool.seq, xcap)
+            exec_safe = sync.exec_selection_ring(safe, exec_idx)
+            cand = ev.gather(pool, exec_idx)
+            pre = None
+            rel_pos = None
 
         # 4. execute the window: grouped vectorized dispatch (default) or the
         # sequential fold — byte-identical results either way; safe events
@@ -407,7 +490,7 @@ class Engine:
                    else self._execute_scan)
         world, counters, emits, trace, trace_n = execute(
             world, counters, cand, exec_safe, st.trace, st.trace_n,
-            ring=stream_trace)
+            ring=stream_trace, pre=pre)
         if stream_trace:
             # ring overwrite accounting: rows written this window on top of
             # un-drained ones (structurally 0 under the drain invariant above;
@@ -430,7 +513,7 @@ class Engine:
             counters = mon.bump(
                 counters, mon.C_RING_WRAP,
                 pool.free_tail + n_processed >= jnp.int32(spec.pool_cap))
-            pool = ev.release(pool, exec_idx, exec_safe)
+            pool = ev.release(pool, exec_idx, exec_safe, pos=rel_pos)
         else:
             slot_mask, _ = sync.exec_selection(safe, exec_idx)
             pool = ev.pop_mask_ref(pool, slot_mask)
@@ -464,8 +547,14 @@ class Engine:
 
     # ------------------------------------------------- step 4: sequential fold
     def _execute_scan(self, world, counters, cand: ev.EventBatch,
-                      exec_safe: jax.Array, trace, trace_n, ring: bool = False):
-        """PR 1 path: lax.scan over the gathered slots in (time, seq) order."""
+                      exec_safe: jax.Array, trace, trace_n, ring: bool = False,
+                      pre=None):
+        """PR 1 path: lax.scan over the gathered slots in (time, seq) order.
+
+        ``pre`` (the fused front-end's precomputed conflict/group pair) is
+        accepted for signature parity with ``_execute_batched`` and ignored —
+        the sequential fold needs neither."""
+        del pre
         ecap = self.spec.emit_cap
         emit0 = ev.empty_batch(ecap)
         trace0, trace_n0 = trace, trace_n
@@ -537,7 +626,7 @@ class Engine:
     # -------------------------------------------- step 4: vectorized dispatch
     def _execute_batched(self, world, counters, cand: ev.EventBatch,
                          exec_safe: jax.Array, trace, trace_n,
-                         ring: bool = False):
+                         ring: bool = False, pre=None):
         """Grouped vectorized dispatch (see module docstring).
 
         Conflict-free slots run in one vmapped handler call per window; slots
@@ -549,22 +638,33 @@ class Engine:
         spec = self.spec
         xcap = cand.time.shape[0]
 
-        # conflict detection on the delta contract's declared rows: two safe
-        # slots collide iff they address the same (component table, lp_res row)
-        table_id = jnp.asarray(self.registry.kind_table, jnp.int32)[
-            jnp.clip(cand.kind, 0, self.registry.n_kinds - 1)]
-        res = world.lp_res[jnp.clip(cand.dst, 0, spec.n_lp - 1)]
-        dirty = sync.conflict_mask(exec_safe, table_id, res, n_res=self._n_res,
-                                   n_tables=self.registry.n_tables)
-        clean = exec_safe & ~dirty
+        if pre is None:
+            # conflict detection on the delta contract's declared rows: two
+            # safe slots collide iff they address the same (component table,
+            # lp_res row)
+            table_id = jnp.asarray(self.registry.kind_table, jnp.int32)[
+                jnp.clip(cand.kind, 0, self.registry.n_kinds - 1)]
+            res = world.lp_res[jnp.clip(cand.dst, 0, spec.n_lp - 1)]
+            dirty = sync.conflict_mask(exec_safe, table_id, res,
+                                       n_res=self._n_res,
+                                       n_tables=self.registry.n_tables)
+            clean = exec_safe & ~dirty
 
-        # batched phase: group the clean rows by kind, dispatch once. The
-        # grouped order keeps same-kind lanes contiguous (coherent segments on
-        # wide-vector backends); the merge itself is order-independent under
-        # the disjoint-write contract, and a vmapped switch traces every
-        # handler per lane either way — on CPU the permutation costs a few
-        # percent of the window and buys layout, not fewer handler evals.
-        order, _rank, _counts = self.group_fn(cand.kind, clean)
+            # batched phase: group the clean rows by kind, dispatch once. The
+            # grouped order keeps same-kind lanes contiguous (coherent
+            # segments on wide-vector backends); the merge itself is
+            # order-independent under the disjoint-write contract, and a
+            # vmapped switch traces every handler per lane either way — on
+            # CPU the permutation costs a few percent of the window and buys
+            # layout, not fewer handler evals.
+            order, _rank, _counts = self.group_fn(cand.kind, clean)
+        else:
+            # fused front-end (spec.fused_select): the megakernel already
+            # computed the conflict mask and grouping in-VMEM; dirty is
+            # recoverable because clean == exec_safe & ~dirty with
+            # dirty ⊆ exec_safe
+            clean, order = pre
+            dirty = exec_safe & ~clean
         rows_g = jax.tree.map(lambda x: x[order], cand)
         clean_g = clean[order]
         batch_fn = (apply_handler_batch if spec.merge_mode == "delta"
@@ -646,9 +746,13 @@ class Engine:
 
     # ---------------------------------------------------------------- routing
     def _insert(self, pool: ev.EventPool, counters, batch: ev.EventBatch):
-        """Pool insert via the spec's lifecycle path (+ wrap accounting)."""
+        """Pool insert via the spec's lifecycle path (+ wrap accounting).
+
+        ``slot_fn`` (wired by the fused front-end, or explicitly) swaps the
+        ring's XLA slot math for the Pallas prefix-sum + ring-gather kernel —
+        identical destination slots by the kernel-vs-ref sweeps."""
         if self.spec.insert_mode == "ring":
-            pool2, dropped = ev.insert(pool, batch)
+            pool2, dropped = ev.insert(pool, batch, slot_fn=self.slot_fn)
             n_take = pool.free_count - pool2.free_count
             counters = mon.bump(
                 counters, mon.C_RING_WRAP,

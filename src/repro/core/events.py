@@ -295,7 +295,8 @@ def insert_ref(pool: EventPool, batch: EventBatch):
     return pool, n_drop
 
 
-def release(pool: EventPool, slots: jax.Array, mask: jax.Array) -> EventPool:
+def release(pool: EventPool, slots: jax.Array, mask: jax.Array,
+            pos: jax.Array | None = None) -> EventPool:
     """Reclaim executed slots: invalidate + push onto the free ring's tail.
 
     ``slots`` are distinct pool-slot indices (the engine's ``exec_idx`` window
@@ -305,11 +306,17 @@ def release(pool: EventPool, slots: jax.Array, mask: jax.Array) -> EventPool:
     reclaim order (and hence future insert layout) is the deterministic
     (time, seq) window order. The pool-wide-mask reference is
     :func:`pop_mask`.
+
+    ``pos`` optionally supplies the per-row ring positions precomputed
+    elsewhere (the fused front-end's ``FusedSelect.rel_pos``, ranked off the
+    same ``free_tail``); it must equal the default prefix-sum math on every
+    masked row — unmasked rows are dropped either way.
     """
     cap = pool.cap
-    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
     n = jnp.sum(mask.astype(jnp.int32))
-    pos = (pool.free_tail + jnp.maximum(rank, 0)) % jnp.int32(cap)
+    if pos is None:
+        rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+        pos = (pool.free_tail + jnp.maximum(rank, 0)) % jnp.int32(cap)
     ring = pool.free_ring.at[jnp.where(mask, pos, cap)].set(
         slots.astype(jnp.int32), mode="drop")
     gone = jnp.where(mask, slots, cap)

@@ -760,6 +760,13 @@ class ScenarioSpec:
                                    # O(pool_cap) rank-scan insert + pool-wide
                                    # pop mask — kept for equivalence tests and
                                    # the insert_churn benchmark gate
+    fused_select: bool = False     # window front-end: True fuses select +
+                                   # gather + conflict + group + release ranks
+                                   # into one Pallas megakernel call (engine
+                                   # fused_fn hook; compiled on TPU,
+                                   # interpreted elsewhere — byte-identical
+                                   # either way); False (default) keeps the
+                                   # XLA-stitched per-stage path
 
     @property
     def exec_cap(self) -> int:
@@ -875,7 +882,7 @@ class ScenarioBuilderBase:
               route_cap: int | None = None, exec_cap: int | None = None,
               exec_policy=None, placement=None, work_per_mb: float = 1.0,
               batched_dispatch: bool = True, merge_mode: str = "delta",
-              insert_mode: str = "ring"):
+              insert_mode: str = "ring", fused_select: bool = False):
         from repro.core import events as ev   # late: events imports registry
 
         reg = self._registry
@@ -949,6 +956,7 @@ class ScenarioBuilderBase:
             batched_dispatch=batched_dispatch,
             merge_mode=merge_mode,
             insert_mode=insert_mode,
+            fused_select=fused_select,
         )
         init_events = ev.batch_from_rows(self._events)
         return world, own, init_events, spec

@@ -51,8 +51,15 @@ def _waterfill_kernel(inc_ref, bw_ref, act_ref, rate_ref, *, n_flows: int,
 
 
 def maxmin_rates_pallas(inc: jax.Array, bw: jax.Array, active: jax.Array, *,
-                        interpret=False) -> jax.Array:
-    """inc: (F, L) 0/1 f32; bw: (L,); active: (F,) bool -> (F,) f32 rates."""
+                        interpret=None) -> jax.Array:
+    """inc: (F, L) 0/1 f32; bw: (L,); active: (F,) bool -> (F,) f32 rates.
+
+    ``interpret=None`` resolves the backend policy (compiled on TPU,
+    interpreted elsewhere) — the same dispatch every other kernel gets via
+    its ``ops.py`` wrapper, so a direct call is safe on any backend too.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     f, l = inc.shape
     kernel = functools.partial(_waterfill_kernel, n_flows=f, n_links=l)
     return pl.pallas_call(

@@ -33,6 +33,7 @@ Invariants the engine's batched dispatch relies on (docs/architecture.md):
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -363,3 +364,262 @@ def group_by_kind(kind: jax.Array, active: jax.Array, n_kinds: int, *,
         interpret=interpret,
     )(kpad, apad)
     return order[0, :cap], rank[0, :cap], counts[0]
+
+
+class FusedSelect(NamedTuple):
+    """Everything the engine's window front-end needs, from ONE kernel pass.
+
+    All fields are window-aligned: length ``m = min(exec_cap, pool_cap)``
+    (``payload`` is ``(m, PAYLOAD)``). ``exec_idx``/``exec_safe`` replace the
+    select_fn + ``exec_selection_ring`` pair; the event fields replace the
+    ``ev.gather`` slot gather; ``clean``/``order`` replace the conflict mask +
+    group_by_kind pair inside the batched dispatch; ``rel_pos`` is the
+    free-ring release position each executed slot reclaims into
+    (``events.release(..., pos=rel_pos)``)."""
+
+    exec_idx: jax.Array   # (m,) i32 pool slots in (time, seq) window order
+    exec_safe: jax.Array  # (m,) bool — selected slot is safe this window
+    time: jax.Array       # (m,) i32 gathered event fields ...
+    seq: jax.Array
+    kind: jax.Array
+    src: jax.Array
+    dst: jax.Array
+    ctx: jax.Array
+    payload: jax.Array    # (m, PAYLOAD) f32
+    valid: jax.Array      # (m,) bool
+    clean: jax.Array      # (m,) bool — safe and conflict-free
+    order: jax.Array      # (m,) i32 same-kind grouping permutation
+    rel_pos: jax.Array    # (m,) i32 free-ring release position (safe rows)
+
+
+def _fused_select_kernel(tkey_ref, seq_ref, safe_ref, time_ref, kind_ref,
+                         src_ref, dst_ref, ctx_ref, valid_ref, tbl_ref,
+                         res_ref, pay_ref, tail_ref,
+                         idx_out, safe_out, time_out, seq_out, kind_out,
+                         src_out, dst_out, ctx_out, valid_out, pay_out,
+                         clean_out, order_out, rel_out, *,
+                         n: int, m: int, mpad: int, cap: int, n_kinds: int,
+                         n_res: int, n_pay: int, chunk: int):
+    """The superstep megakernel: select + gather + conflict + group + release.
+
+    One VMEM-resident pass fuses the four front-end stages XLA otherwise
+    stitches through HBM:
+
+    1. **Sort-select**: the (time_key, seq, index) bitonic network of
+       ``_sort_kernel`` — but every event field (time, kind, src, dst, ctx,
+       valid, the conflict key columns, and all PAYLOAD payload lanes) rides
+       through the compare-exchange as sort payload, so the window's slot
+       *gather* falls out of the sort for free: after the network, lane i of
+       every carried array IS pool slot ``exec_idx[i]``'s field. No dynamic
+       VMEM gather, no HBM round-trip for the index array.
+    2. **Conflict mask**: duplicate detection on the declared component rows
+       (``rkey = table_id * n_res + res``) via a chunked pairwise count —
+       ``cnt[j] = sum_i comp[i] & (rkey[i] == rkey[j])`` — matching
+       ``sync.conflict_mask`` semantics exactly (rows with table_id == 0
+       never conflict).
+    3. **Group-by-kind**: the segment bitonic of ``_group_kernel`` over the
+       window lanes, keyed (clean ? kind : n_kinds, position).
+    4. **Release ranks**: the log-step shift-add exclusive prefix sum of the
+       safe mask; with the ``free_tail`` ring cursor resident in SMEM (a
+       scalar block on TPU), each executed slot's reclaim position
+       ``(free_tail + rank) % cap`` leaves the kernel ready for the O(1)
+       ``events.release`` scatter.
+    """
+    t = tkey_ref[0]
+    s = seq_ref[0]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)[0]
+    # every event field rides the sorting network as payload (step 1)
+    carry = [safe_ref[0], time_ref[0], kind_ref[0], src_ref[0], dst_ref[0],
+             ctx_ref[0], valid_ref[0], tbl_ref[0], res_ref[0]]
+    carry += [pay_ref[p] for p in range(n_pay)]
+
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            def pairs(x):
+                return x.reshape(n // (2 * j), 2, j)
+
+            tp, sp, ip = pairs(t), pairs(s), pairs(idx)
+            lo_i = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * j), 1, j), 0)
+            lo_r = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * j), 1, j), 2)
+            lo_index = lo_i * (2 * j) + lo_r
+            ascend = (lo_index & k) == 0
+
+            le = _lex_less(tp[:, :1], sp[:, :1], ip[:, :1],
+                           tp[:, 1:], sp[:, 1:], ip[:, 1:])
+            swap = jnp.where(ascend, ~le, le)
+
+            def mix(x):
+                xp = pairs(x)
+                lo, hi = xp[:, :1], xp[:, 1:]
+                return jnp.concatenate([jnp.where(swap, hi, lo),
+                                        jnp.where(swap, lo, hi)],
+                                       axis=1).reshape(n)
+
+            t, s, idx = mix(t), mix(s), mix(idx)
+            carry = [mix(x) for x in carry]
+            j //= 2
+        k *= 2
+
+    # window prefix: only the first m lanes are the window (mpad is the
+    # pow2-padded out width; lanes in [m, mpad) are masked everywhere below)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, mpad), 1)[0]
+    sel = pos < m
+    safe_w = carry[0][:mpad]
+    time_w = carry[1][:mpad]
+    kind_w = carry[2][:mpad]
+    es = (safe_w != 0) & sel
+
+    # step 2: conflict mask on the declared (component table, resource row)
+    tb = carry[7][:mpad]
+    rs = carry[8][:mpad]
+    rkey = tb * jnp.int32(n_res) + rs
+    comp = es & (tb > 0)
+    cnt = jnp.zeros((mpad,), jnp.int32)
+    for c in range(0, mpad, chunk):
+        eq = (rkey[:, None] == rkey[c:c + chunk][None, :]) \
+            & comp[c:c + chunk][None, :]
+        cnt = cnt + jnp.sum(eq.astype(jnp.int32), axis=1)
+    dirty = comp & (cnt >= 2)
+    clean = es & ~dirty
+
+    # step 3: same-kind grouping of the clean lanes (stable in window order)
+    gkey = jnp.where(clean, jnp.clip(kind_w, 0, n_kinds - 1),
+                     jnp.int32(n_kinds))
+    gidx = pos
+    kk = 2
+    while kk <= mpad:
+        jj = kk // 2
+        while jj >= 1:
+            def gpairs(x):
+                return x.reshape(mpad // (2 * jj), 2, jj)
+
+            kp, ip = gpairs(gkey), gpairs(gidx)
+            glo_i = jax.lax.broadcasted_iota(
+                jnp.int32, (mpad // (2 * jj), 1, jj), 0)
+            glo_r = jax.lax.broadcasted_iota(
+                jnp.int32, (mpad // (2 * jj), 1, jj), 2)
+            gascend = ((glo_i * (2 * jj) + glo_r) & kk) == 0
+
+            k_lo, k_hi = kp[:, :1], kp[:, 1:]
+            i_lo, i_hi = ip[:, :1], ip[:, 1:]
+            gle = (k_lo < k_hi) | ((k_lo == k_hi) & (i_lo < i_hi))
+            gswap = jnp.where(gascend, ~gle, gle)
+
+            def gmix(lo, hi):
+                return jnp.concatenate([jnp.where(gswap, hi, lo),
+                                        jnp.where(gswap, lo, hi)],
+                                       axis=1).reshape(mpad)
+
+            gkey, gidx = gmix(k_lo, k_hi), gmix(i_lo, i_hi)
+            jj //= 2
+        kk *= 2
+
+    # step 4: release ranks off the SMEM-resident free_tail cursor
+    w = es.astype(jnp.int32)
+    x = w
+    sh = 1
+    while sh < mpad:
+        x = x + jnp.concatenate([jnp.zeros((sh,), jnp.int32), x[:-sh]])
+        sh *= 2
+    rel = (tail_ref[0, 0] + (x - w)) % jnp.int32(cap)
+
+    idx_out[0] = idx[:mpad]
+    safe_out[0] = es.astype(jnp.int32)
+    time_out[0] = time_w
+    seq_out[0] = s[:mpad]
+    kind_out[0] = kind_w
+    src_out[0] = carry[3][:mpad]
+    dst_out[0] = carry[4][:mpad]
+    ctx_out[0] = carry[5][:mpad]
+    valid_out[0] = carry[6][:mpad]
+    for p in range(n_pay):
+        pay_out[p] = carry[9 + p][:mpad]
+    clean_out[0] = clean.astype(jnp.int32)
+    order_out[0] = gidx
+    rel_out[0] = rel
+
+
+def fused_select(time_key: jax.Array, seq: jax.Array, safe: jax.Array,
+                 time: jax.Array, kind: jax.Array, src: jax.Array,
+                 dst: jax.Array, ctx: jax.Array, payload: jax.Array,
+                 valid: jax.Array, table_id: jax.Array, res: jax.Array,
+                 free_tail: jax.Array, exec_cap: int, *, n_kinds: int,
+                 n_res: int, n_tables: int | None = None,
+                 interpret=False) -> FusedSelect:
+    """The fused window front-end over a (pool_cap,) event pool.
+
+    Byte-compatible with the stitched composition
+    (``engine.fused_select_xla`` / ``ref.fused_select_ref``): select the
+    ``exec_cap`` earliest safe slots, gather their fields, mask write
+    conflicts, group by kind, and rank the free-ring release — one
+    ``pallas_call``, intermediates never leaving VMEM. ``table_id``/``res``
+    are the pool-wide conflict key columns (the engine precomputes the two
+    registry gathers, the kernel has no table access); ``free_tail`` is the
+    pool's ring cursor, kept in SMEM on TPU. Lanes where ``exec_safe`` is
+    False carry the sorted slot's raw fields, exactly like the XLA gather —
+    the engine masks them everywhere.
+    """
+    del n_tables  # bounds the stitched twins' key space; the pairwise count
+    #               needs no sentinel span
+    cap = time_key.shape[0]
+    m = max(min(exec_cap, cap), 1)
+    n = 1 << max((cap - 1).bit_length(), 1)
+    mpad = 1 << max((m - 1).bit_length(), 1)
+    n_pay = payload.shape[1]
+    chunk = min(mpad, 256)
+
+    def pad(xv, fill):
+        return jnp.full((n,), fill, jnp.int32).at[:cap].set(
+            xv.astype(jnp.int32))[None]
+
+    args = [pad(time_key, I32_MAX), pad(seq, I32_MAX), pad(safe, 0),
+            pad(time, 0), pad(kind, 0), pad(src, 0), pad(dst, 0),
+            pad(ctx, 0), pad(valid, 0), pad(table_id, 0), pad(res, 0)]
+    payp = jnp.zeros((n_pay, n), payload.dtype).at[:, :cap].set(payload.T)
+    tailp = jnp.asarray(free_tail, jnp.int32).reshape(1, 1)
+
+    def vec(w):
+        return pl.BlockSpec((1, w), lambda i: (0, 0))
+
+    if interpret:
+        tail_spec = vec(1)
+    else:
+        # compiled lane: the ring cursor is a scalar block in SMEM (lazy
+        # import — pltpu only resolves on a TPU-capable install)
+        from jax.experimental.pallas import tpu as pltpu
+        tail_spec = pl.BlockSpec(memory_space=pltpu.SMEM)
+
+    kernel = functools.partial(_fused_select_kernel, n=n, m=m, mpad=mpad,
+                               cap=cap, n_kinds=n_kinds, n_res=n_res,
+                               n_pay=n_pay, chunk=chunk)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[vec(n)] * 11
+        + [pl.BlockSpec((n_pay, n), lambda i: (0, 0)), tail_spec],
+        out_specs=[vec(mpad)] * 9
+        + [pl.BlockSpec((n_pay, mpad), lambda i: (0, 0))] + [vec(mpad)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((1, mpad), jnp.int32)] * 9
+        + [jax.ShapeDtypeStruct((n_pay, mpad), payload.dtype)]
+        + [jax.ShapeDtypeStruct((1, mpad), jnp.int32)] * 3,
+        interpret=interpret,
+    )(*args, payp, tailp)
+    (idxo, safeo, timeo, seqo, kindo, srco, dsto, ctxo, valido, payo,
+     cleano, ordero, relo) = outs
+    return FusedSelect(
+        exec_idx=idxo[0, :m],
+        exec_safe=safeo[0, :m] != 0,
+        time=timeo[0, :m],
+        seq=seqo[0, :m],
+        kind=kindo[0, :m],
+        src=srco[0, :m],
+        dst=dsto[0, :m],
+        ctx=ctxo[0, :m],
+        payload=payo[:, :m].T,
+        valid=valido[0, :m] != 0,
+        clean=cleano[0, :m] != 0,
+        order=ordero[0, :m],
+        rel_pos=relo[0, :m],
+    )

@@ -71,6 +71,30 @@ def group_by_kind(kind, active, n_kinds):
     return _es.group_by_kind(kind, active, n_kinds, interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("exec_cap", "n_kinds", "n_res",
+                                             "n_tables"))
+def fused_select(time_key, seq, safe, time, kind, src, dst, ctx, payload,
+                 valid, table_id, res, free_tail, exec_cap, *, n_kinds,
+                 n_res, n_tables=None):
+    """The superstep megakernel: the whole window front-end in one call.
+
+    Fuses select + gather + conflict mask + group_by_kind + release ranks
+    (kernels.event_select.fused_select) with the free-ring cursor in SMEM on
+    TPU. Engine fused_fn hook — ``spec.fused_select=True`` binds it as
+
+        functools.partial(ops.fused_select, n_kinds=registry.n_kinds,
+                          n_res=registry.max_rows(world),
+                          n_tables=registry.n_tables)
+
+    The stitched twins (engine.fused_select_xla, kernels.ref.fused_select_ref)
+    are the byte-compatibility references the tests sweep against.
+    """
+    return _es.fused_select(time_key, seq, safe, time, kind, src, dst, ctx,
+                            payload, valid, table_id, res, free_tail,
+                            exec_cap, n_kinds=n_kinds, n_res=n_res,
+                            n_tables=n_tables, interpret=_interpret())
+
+
 @jax.jit
 def ring_slots(free_ring, head, want):
     """(cap,) free ring + head + (n,) insert mask -> (n,) destination slots.

@@ -84,3 +84,35 @@ def group_by_kind_ref(kind: jax.Array, active: jax.Array, n_kinds: int):
     rank = jnp.arange(ks.shape[0], dtype=jnp.int32) - start
     counts = jnp.zeros((n_kinds,), jnp.int32).at[key].add(1, mode="drop")
     return order, rank, counts
+
+
+def fused_select_ref(time_key, seq, safe, time, kind, src, dst, ctx, payload,
+                     valid, table_id, res, free_tail, exec_cap, *,
+                     n_kinds: int, n_res: int, n_tables: int | None = None):
+    """Stitched oracle for the fused window front-end
+    (kernels.event_select.fused_select): select, gather, pairwise conflict
+    count, group, release rank — composed from the ref primitives above,
+    deliberately NOT sharing code with engine.fused_select_xla so the two
+    stitched paths check each other."""
+    from repro.kernels.event_select import FusedSelect
+    del n_tables  # the pairwise count needs no sentinel key space
+    cap = time_key.shape[0]
+    m = max(min(exec_cap, cap), 1)
+    exec_idx = select_events_ref(time_key, seq, m)
+    es = safe[exec_idx]
+    tb = table_id[exec_idx]
+    rkey = tb * jnp.int32(n_res) + res[exec_idx]
+    comp = es & (tb > 0)
+    cnt = jnp.sum((rkey[:, None] == rkey[None, :])
+                  & comp[None, :], axis=1)
+    dirty = comp & (cnt >= 2)
+    clean = es & ~dirty
+    kind_w = kind[exec_idx]
+    order, _rank, _counts = group_by_kind_ref(kind_w, clean, n_kinds)
+    w = es.astype(jnp.int32)
+    rel = (jnp.asarray(free_tail, jnp.int32) + jnp.cumsum(w) - w) % cap
+    return FusedSelect(
+        exec_idx=exec_idx, exec_safe=es, time=time[exec_idx],
+        seq=seq[exec_idx], kind=kind_w, src=src[exec_idx],
+        dst=dst[exec_idx], ctx=ctx[exec_idx], payload=payload[exec_idx],
+        valid=valid[exec_idx], clean=clean, order=order, rel_pos=rel)

@@ -166,6 +166,7 @@ def run_t0t1(args):
             pool_cap=pool_cap, work_per_mb=2.0,
             batched_dispatch=args.batched_dispatch,
             merge_mode=args.merge_mode, insert_mode=args.insert_mode,
+            fused_select=args.fused_select,
             **_exec_policy_args(args, pool_cap))
         stream_kw, ts, _ms = _build_streams(args)
         eng = Engine(world, own, init_ev, spec, checkpointer=ck, **stream_kw)
@@ -238,6 +239,7 @@ def run_distributed(args):
                                         batched_dispatch=args.batched_dispatch,
                                         merge_mode=args.merge_mode,
                                         insert_mode=args.insert_mode,
+                                        fused_select=args.fused_select,
                                         **_exec_policy_args(args, pool_cap))
     if args.stream_check and args.stream_trace is None:
         raise SystemExit("--stream-check needs --stream-trace CAP")
@@ -493,6 +495,12 @@ def main():
     p1.add_argument("--insert-mode", choices=("ring", "ref"), default="ring",
                     help="event-pool lifecycle: free-list ring (default) or "
                          "the retained O(pool_cap) insert_ref scan")
+    p1.add_argument("--fused-select", action="store_true",
+                    help="run the window selection front-end (sort + safe "
+                         "prefix + gather + conflict + rank + ring slots) as "
+                         "one fused Pallas superstep megakernel instead of "
+                         "the XLA-stitched stages (compiled on TPU, "
+                         "interpreted elsewhere)")
     p1.add_argument("--adaptive-exec", action="store_true",
                     help="monitoring-driven exec width (core/policy.py "
                          "ladder; Engine.run_adaptive) instead of a static "
@@ -537,6 +545,11 @@ def main():
     p3.add_argument("--insert-mode", choices=("ring", "ref"), default="ring",
                     help="event-pool lifecycle: free-list ring (default) or "
                          "the retained O(pool_cap) insert_ref scan")
+    p3.add_argument("--fused-select", action="store_true",
+                    help="run the window selection front-end as one fused "
+                         "Pallas superstep megakernel instead of the "
+                         "XLA-stitched stages (compiled on TPU, interpreted "
+                         "elsewhere)")
     p3.add_argument("--flows", type=int, default=24,
                     help="generator flow count (drives total event volume — "
                          "raise it to push runs past any in-device trace cap)")

@@ -134,7 +134,7 @@ def resolve(name: str, overrides: Mapping[str, Any] | None = None):
 # --------------------------------------------------------- builtin entries
 def _build_t0t1(*, wan_bw=2.0, n_flows=16, interval=20, flow_mb=40.0,
                 lookahead=2, n_agents=1, pool_cap=512, t_end=20_000,
-                exec_cap=0):
+                exec_cap=0, fused=False):
     """The paper's T0/T1 replication study: production at tier-0 generates
     WAN transfers; each arrival triggers an analysis job at tier-1 whose
     output lands in tier-1 storage (the quickstart/Fig-2 scenario)."""
@@ -156,27 +156,30 @@ def _build_t0t1(*, wan_bw=2.0, n_flows=16, interval=20, flow_mb=40.0,
         interval=interval, count=n_flows, start=0)
     extra = dict(exec_cap=exec_cap) if exec_cap else {}
     return b.build(n_agents=n_agents, lookahead=lookahead, t_end=t_end,
-                   pool_cap=pool_cap, work_per_mb=2.0, **extra)
+                   pool_cap=pool_cap, work_per_mb=2.0, fused_select=fused,
+                   **extra)
 
 
 def _build_cache_churn(*, n_caches=8, n_keys=4, n_rounds=6, cache_ways=8,
-                       n_agents=1, pool_cap=1024):
+                       n_agents=1, pool_cap=1024, fused=False):
     from repro.scenarios.cache import build_churn_scenario
 
     built, _caches = build_churn_scenario(
         n_caches=n_caches, n_keys=n_keys, n_rounds=n_rounds,
-        cache_ways=cache_ways, n_agents=n_agents, pool_cap=pool_cap)
+        cache_ways=cache_ways, n_agents=n_agents, pool_cap=pool_cap,
+        fused_select=fused)
     return built
 
 
 def _build_failure_farm(*, n_farms=8, n_cpu=4, burst=3, n_bursts=6,
-                        jobs_per_farm=4, seed=1, n_agents=1, pool_cap=1024):
+                        jobs_per_farm=4, seed=1, n_agents=1, pool_cap=1024,
+                        fused=False):
     from repro.scenarios.failures import build_failure_scenario
 
     built, _info = build_failure_scenario(
         n_farms=n_farms, n_cpu=n_cpu, burst=burst, n_bursts=n_bursts,
         jobs_per_farm=jobs_per_farm, seed=seed, n_agents=n_agents,
-        pool_cap=pool_cap)
+        pool_cap=pool_cap, fused_select=fused)
     return built
 
 
@@ -198,7 +201,8 @@ register(ScenarioDef(
     build=_build_t0t1,
     params=(("wan_bw", 2.0), ("n_flows", 16), ("interval", 20),
             ("flow_mb", 40.0), ("lookahead", 2), ("n_agents", 1),
-            ("pool_cap", 512), ("t_end", 20_000), ("exec_cap", 0))))
+            ("pool_cap", 512), ("t_end", 20_000), ("exec_cap", 0),
+            ("fused", False))))
 
 register(ScenarioDef(
     name="cache_churn",
@@ -206,7 +210,8 @@ register(ScenarioDef(
         "warm (the outside-core registry-extension component)",
     build=_build_cache_churn,
     params=(("n_caches", 8), ("n_keys", 4), ("n_rounds", 6),
-            ("cache_ways", 8), ("n_agents", 1), ("pool_cap", 1024))))
+            ("cache_ways", 8), ("n_agents", 1), ("pool_cap", 1024),
+            ("fused", False))))
 
 register(ScenarioDef(
     name="failure_farm",
@@ -215,7 +220,7 @@ register(ScenarioDef(
     build=_build_failure_farm,
     params=(("n_farms", 8), ("n_cpu", 4), ("burst", 3), ("n_bursts", 6),
             ("jobs_per_farm", 4), ("seed", 1), ("n_agents", 1),
-            ("pool_cap", 1024))))
+            ("pool_cap", 1024), ("fused", False))))
 
 register(ScenarioDef(
     name="ensemble_farm",

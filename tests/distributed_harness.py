@@ -44,7 +44,7 @@ N_DEVICES = {n}
 
 def t0t1_build(n_agents, *, pool_cap=256, n_flows=12, interval=25,
                flow_mb=40.0, lookahead=2, t_end=5000, second_gen=False,
-               exec_policy=None, exec_cap=None):
+               exec_policy=None, exec_cap=None, fused_select=False):
     b = ScenarioBuilder(max_cpu=4, queue_cap=8, max_link=4, max_flow=16)
     t0 = b.add_regional_center(n_cpu=2, cpu_power=10.0, disk=500.0,
                                tape=5000.0, tape_rate=5.0)
@@ -62,7 +62,7 @@ def t0t1_build(n_agents, *, pool_cap=256, n_flows=12, interval=25,
                                  ev.K_DATA_WRITE],
                         interval=max(interval - 8, 3), count=n_flows, start=3)
     kw = dict(n_agents=n_agents, lookahead=lookahead, t_end=t_end,
-              pool_cap=pool_cap, work_per_mb=2.0)
+              pool_cap=pool_cap, work_per_mb=2.0, fused_select=fused_select)
     if exec_policy is not None:
         kw["exec_policy"] = exec_policy
     if exec_cap is not None:

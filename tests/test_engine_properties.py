@@ -30,7 +30,7 @@ scenario_params = st.fixed_dictionaries(dict(
 ))
 
 
-def build(p, n_agents):
+def build(p, n_agents, **kw):
     b = ScenarioBuilder(max_cpu=4, queue_cap=8, max_link=4, max_flow=16)
     t0 = b.add_regional_center(n_cpu=2, cpu_power=p["p0"], disk=400.0,
                                tape=4000.0, tape_rate=5.0)
@@ -46,7 +46,7 @@ def build(p, n_agents):
     placement = rng.randint(0, n_agents, size=len(b._lps))
     return b.build(n_agents=n_agents, lookahead=p["lookahead"], t_end=4000,
                    pool_cap=256, work_per_mb=p["wpm"],
-                   placement=placement if n_agents > 1 else None)
+                   placement=placement if n_agents > 1 else None, **kw)
 
 
 @settings(max_examples=12, deadline=None)
@@ -65,6 +65,38 @@ def test_random_scenarios_match_oracle(p):
     np.testing.assert_array_equal(np.asarray(ow.lp_lvt), w.lp_lvt)
     # conservative engine must never drop anything at these sizes
     drops = np.asarray(stt.counters)[:, list(mon.DROP_COUNTERS)]
+    assert drops.sum() == 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(scenario_params)
+def test_fused_select_matches_oracle(p):
+    """The fused superstep megakernel engine (spec.fused_select=True, the
+    interpret-Pallas path on CPU) == the batched-dispatch stitched engine ==
+    the sequential fold == the heapq oracle, byte-exactly — trace, world,
+    and drop counters."""
+    world, own, init_ev, spec = build(p, 1)
+    ow, _oc, otrace = run_sequential(world, own, init_ev, spec)
+
+    fused = build(p, 2, fused_select=True)
+    assert fused[3].fused_select
+    stf = Engine(*fused, trace_cap=4096).run_local(max_windows=20000)
+    trace_f = merged_engine_trace(np.asarray(stf.trace),
+                                  np.asarray(stf.trace_n))
+    assert trace_f == otrace
+
+    # the megakernel under the sequential fold (batched_dispatch=False uses
+    # fused select/gather/release but folds handlers one by one)
+    seq = build(p, 2, fused_select=True, batched_dispatch=False)
+    sts = Engine(*seq, trace_cap=4096).run_local(max_windows=20000)
+    trace_s = merged_engine_trace(np.asarray(sts.trace),
+                                  np.asarray(sts.trace_n))
+    assert trace_s == otrace
+
+    w = jax.tree.map(lambda x: np.asarray(x[0]), stf.world)
+    np.testing.assert_allclose(np.asarray(ow.sto_used), w.sto_used, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ow.lp_lvt), w.lp_lvt)
+    drops = np.asarray(stf.counters)[:, list(mon.DROP_COUNTERS)]
     assert drops.sum() == 0
 
 

@@ -242,3 +242,84 @@ def test_trace_rank_ops_wrapper():
     mask = jax.random.bernoulli(jax.random.PRNGKey(11), 0.6, (200,))
     np.testing.assert_array_equal(np.asarray(ops.trace_rank(mask)),
                                   np.asarray(trace_rank_ref(mask)))
+
+
+def _fused_inputs(cap, density, tail, seed, n_tables=4, n_res=8):
+    """A randomized (pool_cap,) event pool for the fused front-end: time_key
+    carries T_INF on unsafe slots exactly as the engine's compacted window
+    does, and the conflict key columns are pool-wide gathers."""
+    from repro.core import events as ev
+    ks = jax.random.split(jax.random.PRNGKey(seed), 12)
+    valid = jax.random.bernoulli(ks[0], 0.8, (cap,))
+    safe = valid & jax.random.bernoulli(ks[1], density, (cap,))
+    tk = jax.random.randint(ks[2], (cap,), 0, 50)
+    tk = jnp.where(safe, tk, jnp.int32(2**31 - 1))
+    return dict(
+        time_key=tk,
+        seq=jax.random.randint(ks[3], (cap,), 0, 2**20),
+        safe=safe,
+        time=jax.random.randint(ks[4], (cap,), 0, 50),
+        kind=jax.random.randint(ks[5], (cap,), 0, ev.N_KINDS),
+        src=jax.random.randint(ks[6], (cap,), 0, 16),
+        dst=jax.random.randint(ks[7], (cap,), 0, 16),
+        ctx=jax.random.randint(ks[8], (cap,), 0, 100),
+        payload=jax.random.normal(ks[9], (cap, ev.PAYLOAD)),
+        valid=valid,
+        table_id=jax.random.randint(ks[10], (cap,), 0, n_tables),
+        res=jax.random.randint(ks[11], (cap,), 0, n_res),
+        free_tail=jnp.int32(tail))
+
+
+def _assert_fused_equal(got, want):
+    """All FusedSelect fields byte-equal (rel_pos only where exec_safe — the
+    engine's release scatter drops unsafe rows either way)."""
+    es = np.asarray(want.exec_safe)
+    for name in got._fields:
+        g, w = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
+        if name == "rel_pos":
+            g, w = g[es], w[es]
+        np.testing.assert_array_equal(g, w, err_msg=name)
+
+
+@pytest.mark.parametrize("cap,xcap,density,tail,seed", [
+    (64, 16, 0.5, 0, 0),       # basic dense-ish window
+    (37, 64, 0.7, 30, 1),      # non-pow2 pool, exec_cap > pool_cap
+    (256, 256, 0.9, 250, 2),   # exec_cap == pool_cap, ring cursor wraps
+    (128, 1, 0.4, 0, 3),       # single-lane window
+    (512, 64, 1.0, 500, 4),    # all slots safe, ring cursor wraps
+    (128, 32, 0.0, 5, 5),      # no safe slots (empty window / spill shape)
+])
+def test_fused_select_sweep(cap, xcap, density, tail, seed):
+    """The superstep megakernel == the XLA-stitched engine twin == the ref
+    oracle on every FusedSelect field, exactly — over non-pow2 pools,
+    ring-wrap cursors, all-safe and none-safe windows."""
+    from repro.core.engine import fused_select_xla
+    from repro.kernels.event_select import fused_select as fused_raw
+    from repro.core import events as ev
+    inp = _fused_inputs(cap, density, tail, seed)
+    kw = dict(n_kinds=ev.N_KINDS, n_res=8, n_tables=4)
+    got = fused_raw(*inp.values(), xcap, **kw, interpret=True)
+    want = ref.fused_select_ref(*inp.values(), xcap, **kw)
+    stitched = fused_select_xla(*inp.values(), xcap, **kw)
+    _assert_fused_equal(got, want)
+    _assert_fused_equal(stitched, want)
+    # window shape + selection sanity
+    m = max(min(xcap, cap), 1)
+    assert got.exec_idx.shape == (m,)
+    idx = np.asarray(got.exec_idx)
+    assert len(set(idx.tolist())) == m          # distinct gather slots
+    assert (idx >= 0).all() and (idx < cap).all()
+    assert int(np.asarray(got.exec_safe).sum()) <= int(np.asarray(
+        inp["safe"]).sum())
+
+
+def test_fused_select_ops_wrapper():
+    """The jitted ops dispatch returns the same FusedSelect as the raw
+    interpret call (CPU resolves to interpret=True either way)."""
+    from repro.kernels.event_select import fused_select as fused_raw
+    from repro.core import events as ev
+    inp = _fused_inputs(96, 0.6, 90, 13)
+    kw = dict(n_kinds=ev.N_KINDS, n_res=8, n_tables=4)
+    got = ops.fused_select(*inp.values(), 32, **kw)
+    want = fused_raw(*inp.values(), 32, **kw, interpret=True)
+    _assert_fused_equal(got, want)
